@@ -1,0 +1,93 @@
+"""§Perf hillclimbing driver: run named optimization variants of the three
+chosen (arch × shape) cells and append their roofline terms to
+bench/hillclimb.jsonl (hypothesis → change → before → after log for
+EXPERIMENTS.md §Perf).
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb --cell <name>
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.launch.dryrun import lower_cell
+from repro.optim import AdamW
+
+# variant name → (arch, shape, multi_pod, kwargs)
+VARIANTS = {
+    # -- granite-3-2b × train_4k (case study; iterations 0-4 were code
+    #    changes logged in EXPERIMENTS.md; these are config-level) --
+    "granite-base": ("granite-3-2b", "train_4k", False, {}),
+    "granite-vocabpad": ("granite-3-2b", "train_4k", False,
+                         {"extra_config": {"vocab_pad": 512}}),
+    "granite-sp": ("granite-3-2b", "train_4k", False,
+                   {"extra_config": {"vocab_pad": 512,
+                                     "seq_parallel": True}}),
+    # -- llama3-405b × train_4k (worst absolute cell) --
+    "llama-base": ("llama3-405b", "train_4k", False, {}),
+    "llama-sp": ("llama3-405b", "train_4k", False,
+                 {"extra_config": {"seq_parallel": True}}),
+    "llama-sp-accum4": ("llama3-405b", "train_4k", False,
+                        {"extra_config": {"seq_parallel": True},
+                         "accum_steps": 4}),
+    "llama-sp-accum4-bf16adam": (
+        "llama3-405b", "train_4k", False,
+        {"extra_config": {"seq_parallel": True}, "accum_steps": 4,
+         "optimizer": AdamW(state_dtype=jnp.bfloat16)}),
+    "llama-multipod-full": (
+        "llama3-405b", "train_4k", True,
+        {"extra_config": {"seq_parallel": True}, "accum_steps": 4,
+         "optimizer": AdamW(state_dtype=jnp.bfloat16)}),
+    "llama-multipod-noaccum": (
+        "llama3-405b", "train_4k", True,
+        {"extra_config": {"seq_parallel": True},
+         "optimizer": AdamW(state_dtype=jnp.bfloat16)}),
+    "llama-multipod-accum2": (
+        "llama3-405b", "train_4k", True,
+        {"extra_config": {"seq_parallel": True}, "accum_steps": 2,
+         "optimizer": AdamW(state_dtype=jnp.bfloat16)}),
+    "llama-sp-bf16adam": (
+        "llama3-405b", "train_4k", False,
+        {"extra_config": {"seq_parallel": True},
+         "optimizer": AdamW(state_dtype=jnp.bfloat16)}),
+    # -- qwen3-moe × train_4k (most collective-bound / paper-representative:
+    #    expert dispatch is the shuffle) --
+    "moe-base": ("qwen3-moe-235b-a22b", "train_4k", False, {}),
+    "moe-sp": ("qwen3-moe-235b-a22b", "train_4k", False,
+               {"extra_config": {"seq_parallel": True}}),
+    "moe-accum4": ("qwen3-moe-235b-a22b", "train_4k", False,
+                   {"extra_config": {"seq_parallel": True},
+                    "accum_steps": 4}),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    choices=list(VARIANTS) + ["all"])
+    ap.add_argument("--out", default="bench/hillclimb.jsonl")
+    args = ap.parse_args()
+    names = list(VARIANTS) if args.cell == "all" else [args.cell]
+    with open(args.out, "a") as f:
+        for name in names:
+            arch, shape, multi, kw = VARIANTS[name]
+            rec, _ = lower_cell(arch, shape, multi_pod=multi, **kw)
+            rec["variant"] = name
+            r = rec["roofline"]
+            print(f"[{name}] compute={r['compute_s']:.3f}s "
+                  f"memory={r['memory_s']:.3f}s "
+                  f"collective={r['collective_s']:.3f}s "
+                  f"dominant={r['dominant']} "
+                  f"frac={rec['roofline_fraction']:.3f} "
+                  f"fits={rec['fits_hbm']} "
+                  f"resid={rec['hbm_residency_bytes'] / 2**30:.1f}GiB")
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+
+
+if __name__ == "__main__":
+    main()

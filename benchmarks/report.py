@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md tables from bench/dryrun*.jsonl records."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(path):
+    rows = [json.loads(line) for line in open(path)]
+    # keep the last record per (arch, shape, mesh)
+    out = {}
+    for r in rows:
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(out.values())
+
+
+def roofline_table(rows, mesh="16x16") -> str:
+    hdr = ("| arch | shape | kind | compute s | memory s | collective s | "
+           "dominant | useful flops | roofline frac | fits HBM |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR "
+                         f"| — | — | — | — | — | — | — |")
+            continue
+        f = r["roofline"]
+        frac = r["roofline_fraction"]
+        # decode cells: the meaningful number is distance to the
+        # memory-bound ideal, not MFU
+        if r["kind"] == "decode":
+            bound = max(f["compute_s"], f["memory_s"], f["collective_s"])
+            frac = f["memory_s"] / bound if bound else 0.0
+            frac_s = f"{frac:.2f}*"
+        else:
+            frac_s = f"{frac:.3f}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {f['compute_s']:.3f} | {f['memory_s']:.3f} "
+            f"| {f['collective_s']:.3f} | {f['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} | {frac_s} "
+            f"| {'✓' if r.get('fits_hbm') else '✗'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def schedule_table(rows, mesh="2x16x16") -> str:
+    hdr = ("| arch | shape | all-gather | all-reduce | reduce-scatter | "
+           "all-to-all | permute | compile s |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        s = r["collective_schedule"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {s.get('all-gather', 0)} "
+            f"| {s.get('all-reduce', 0)} | {s.get('reduce-scatter', 0)} "
+            f"| {s.get('all-to-all', 0)} "
+            f"| {s.get('collective-permute', 0)} "
+            f"| {r.get('compile_s', 0)} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1
+                else "bench/dryrun.jsonl")
+    print("## Roofline (single pod 16×16)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Multi-pod collective schedules (2×16×16)\n")
+    print(schedule_table(rows, "2x16x16"))

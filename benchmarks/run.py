@@ -1,0 +1,55 @@
+"""Benchmark driver: one suite per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Simulated infrastructure
+quantities are labeled in the derived column; wall-clock numbers are real
+measurements on this host.
+
+  Table 2  → startup        (cold/warm starts, √W two-level dispatch)
+  Table 3  → storage        (tier latency/cost models)
+  Fig 5/6  → tpch           (Q1/Q6/Q12/Q3/Q14 latency + cost)
+  Fig 7    → elasticity     (Q1+Q6 across scale factors)
+  §3.3     → stragglers     (re-triggering on/off)
+  §3.4     → cache          (recurring-query cost)
+  kernels  → Pallas kernels (interpret mode on CPU)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import suites
+
+SUITES = {
+    "startup": suites.bench_startup,
+    "storage": suites.bench_storage,
+    "tpch": suites.bench_tpch,
+    "elasticity": suites.bench_elasticity,
+    "stragglers": suites.bench_stragglers,
+    "cache": suites.bench_result_cache,
+    "kernels": suites.bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all"] + list(SUITES))
+    args = ap.parse_args()
+    names = list(SUITES) if args.suite == "all" else [args.suite]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in names:
+        try:
+            for row, us, derived in SUITES[name]():
+                print(f"{row},{us:.1f},{derived}")
+        except Exception:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

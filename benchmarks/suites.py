@@ -1,0 +1,217 @@
+"""Benchmark suites — one per paper table/figure.
+
+Each function returns a list of (name, us_per_call, derived) rows for the
+CSV contract of ``benchmarks.run``. Simulated quantities (infrastructure
+latencies, dollars) come from the calibrated models of paper Tables 1–3;
+wall-clock rows are real CPU measurements of this host.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.exec  # noqa: F401 (x64)
+from repro.core import (CoordinatorConfig, FaasPlatform, FaultPlan,
+                        QueryCoordinator)
+from repro.core.cost import LAMBDA_COLD_START, LAMBDA_WARM_START
+from repro.data import generate_tpch
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.storage import ObjectStore, TIERS
+
+CFG = CoordinatorConfig(planner=PlannerConfig(
+    bytes_per_worker=500_000, broadcast_threshold_bytes=250_000,
+    exchange_partitions=4))
+
+
+def _db(sf, seed=0, tier="s3-standard", n_parts=None):
+    store = ObjectStore(tier=tier, seed=seed)
+    catalog = generate_tpch(store, sf=sf, seed=0, n_parts=n_parts)
+    return store, catalog
+
+
+# -- Table 2: startup latencies -----------------------------------------------------
+
+def bench_startup():
+    plat = FaasPlatform(seed=0)
+    colds = [plat._start_latency(True) for _ in range(2000)]
+    plat2 = FaasPlatform(seed=1)
+    plat2._warm_sandboxes = 1
+    warms = [plat2._start_latency(False) for _ in range(2000)]
+    rows = [
+        ("startup/lambda_cold_avg", np.mean(colds) * 1e6,
+         f"paper_avg={LAMBDA_COLD_START['avg'] * 1e6:.0f}us"),
+        ("startup/lambda_warm_avg", np.mean(warms) * 1e6,
+         f"paper_avg={LAMBDA_WARM_START['avg'] * 1e6:.0f}us"),
+    ]
+    for w in (64, 1024, 2500):
+        flat = plat.dispatch_time_s(w, two_level=False)
+        tree = plat.dispatch_time_s(w, two_level=True)
+        rows.append((f"startup/dispatch_flat_w{w}", flat * 1e6,
+                     f"two_level={tree * 1e6:.0f}us "
+                     f"speedup={flat / tree:.1f}x"))
+    return rows
+
+
+# -- Table 3: storage tiers ----------------------------------------------------------
+
+def bench_storage():
+    rows = []
+    rng = np.random.default_rng(0)
+    for name in ("s3-standard", "s3-express", "dynamodb", "efs"):
+        t = TIERS[name]
+        reads = [t.draw_latency_s(rng, write=False) for _ in range(3000)]
+        writes = [t.draw_latency_s(rng, write=True) for _ in range(3000)]
+        cost_1m_rw = (t.read_request_cents_per_1m
+                      + t.write_request_cents_per_1m)
+        rows.append((
+            f"storage/{name}_read_median",
+            float(np.median(reads)) * 1e6,
+            f"write_median_us={np.median(writes) * 1e6:.0f};"
+            f"req_cents_per_1M_rw={cost_1m_rw:.0f};"
+            f"p99_read_us={np.quantile(reads, 0.99) * 1e6:.0f}"))
+    return rows
+
+
+# -- Fig 5 + Fig 6: TPC-H latency and cost -------------------------------------------
+
+def bench_tpch(sf: float = 0.05):
+    store, catalog = _db(sf, n_parts=8)
+    platform = FaasPlatform(seed=4)
+    rows = []
+    for qname in ("q1", "q6", "q12", "q3", "q14"):
+        cfg = CoordinatorConfig(planner=CFG.planner,
+                                use_result_cache=False)
+        coord = QueryCoordinator(store, catalog, platform=platform,
+                                 config=cfg)
+        t0 = time.perf_counter()
+        res = coord.execute_sql(QUERIES[qname])
+        wall = time.perf_counter() - t0
+        s = res.stats
+        rows.append((
+            f"tpch/sf{sf:g}_{qname}", wall * 1e6,
+            f"sim_latency_s={s.sim_latency_s:.2f};"
+            f"cost_cents={s.cost.total_cents:.4f};"
+            f"workers={sum(p.n_fragments for p in s.pipelines)};"
+            f"bytes_read={sum(p.bytes_read for p in s.pipelines)}"))
+    return rows
+
+
+# -- Fig 7: elasticity ----------------------------------------------------------------
+
+def bench_elasticity(scale_factors=(0.01, 0.04, 0.16)):
+    rows = []
+    for sf in scale_factors:
+        store, catalog = _db(sf, tier="s3-standard",
+                             n_parts=max(2, int(sf * 200)))
+        platform = FaasPlatform(seed=5)
+        sim_total = 0.0
+        workers = 0
+        for qname in ("q1", "q6"):
+            coord = QueryCoordinator(
+                store, catalog, platform=platform,
+                config=CoordinatorConfig(
+                    planner=PlannerConfig(bytes_per_worker=400_000),
+                    use_result_cache=False))
+            res = coord.execute_sql(QUERIES[qname])
+            sim_total += res.stats.sim_latency_s
+            workers += sum(p.n_fragments for p in res.stats.pipelines)
+        rows.append((f"elasticity/sf{sf:g}_q1q6", sim_total * 1e6,
+                     f"sim_latency_s={sim_total:.2f};workers={workers}"))
+    return rows
+
+
+# -- Section 3.3: straggler mitigation --------------------------------------------------
+
+def bench_stragglers():
+    rows = []
+    for label, detect in (("on", 3.0), ("off", 1e9)):
+        store, catalog = _db(0.02, tier="s3-standard", n_parts=6)
+        plat = FaasPlatform(seed=6, faults=FaultPlan(
+            straggle_fragments=((0, 1, 0), (0, 3, 0)),
+            straggler_factor=25.0, seed=8))
+        cfg = CoordinatorConfig(planner=CFG.planner,
+                                straggler_detect_factor=detect,
+                                use_result_cache=False)
+        coord = QueryCoordinator(store, catalog, platform=plat, config=cfg)
+        res = coord.execute_sql(QUERIES["q6"])
+        s = res.stats
+        rows.append((
+            f"stragglers/retrigger_{label}", s.sim_latency_s * 1e6,
+            f"sim_latency_s={s.sim_latency_s:.2f};"
+            f"retriggered={sum(p.stragglers_retriggered for p in s.pipelines)};"
+            f"cost_cents={s.cost.total_cents:.4f}"))
+    return rows
+
+
+# -- Section 3.4: result cache -----------------------------------------------------------
+
+def bench_result_cache():
+    store, catalog = _db(0.02, n_parts=6)
+    platform = FaasPlatform(seed=7)
+    rows = []
+    for i, label in ((0, "cold"), (1, "warm")):
+        coord = QueryCoordinator(store, catalog, platform=platform,
+                                 config=CFG)
+        t0 = time.perf_counter()
+        res = coord.execute_sql(QUERIES["q12"])
+        wall = time.perf_counter() - t0
+        s = res.stats
+        rows.append((
+            f"cache/q12_{label}", wall * 1e6,
+            f"sim_latency_s={s.sim_latency_s:.3f};"
+            f"cost_cents={s.cost.total_cents:.5f};"
+            f"cache_hits={s.cache_hits}"))
+    return rows
+
+
+# -- kernels -------------------------------------------------------------------------------
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    rows = []
+
+    def timeit(fn, *args, n=3, **kw):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n * 1e6
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (8, 1024, 64), jnp.float32)
+    kv = jax.random.normal(key, (2, 1024, 64), jnp.float32)
+    us = timeit(ops.flash_attention, q, kv, kv, causal=True)
+    flops = 2 * 2 * 8 * 1024 * 1024 * 64 / 2
+    rows.append(("kernels/flash_attention_8x1024x64", us,
+                 f"interpret_gflops={flops / us / 1e3:.2f}"))
+
+    x = jax.random.normal(key, (2, 1024, 8, 32), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 1024, 8), jnp.float32))
+    B = jax.random.normal(key, (2, 1024, 32), jnp.float32)
+    us = timeit(ops.ssd_scan, x, dt, jnp.zeros(8), B, B, chunk=128)
+    rows.append(("kernels/ssd_scan_2x1024x8x32", us, "interpret"))
+
+    n = 1 << 17
+    ship = jax.random.randint(key, (n,), 8000, 10000)
+    disc = jax.random.randint(key, (n,), 0, 11).astype(jnp.float32) / 100
+    qty = jax.random.randint(key, (n,), 1, 51).astype(jnp.float32)
+    price = jax.random.uniform(key, (n,), jnp.float32) * 1e4
+    us = timeit(ops.filter_agg, ship, disc, qty, price, date_lo=8500,
+                date_hi=9000, disc_lo=0.05, disc_hi=0.07, qty_hi=24.0)
+    rows.append(("kernels/filter_agg_131072", us,
+                 f"rows_per_s={n / us * 1e6:.0f}"))
+
+    gid = jax.random.randint(key, (n,), 0, 6)
+    vals = jax.random.normal(key, (n, 4), jnp.float32)
+    us = timeit(ops.groupby_onehot, gid, vals, n_groups=6)
+    rows.append(("kernels/groupby_onehot_131072x6", us,
+                 f"rows_per_s={n / us * 1e6:.0f}"))
+    return rows

@@ -1,0 +1,21 @@
+"""Batched LM serving with a KV cache: prefill once, decode many.
+
+    PYTHONPATH=src python examples/serve_llm.py [--arch hymba-1.5b]
+"""
+
+import argparse
+
+from repro.launch.serve import run_serving
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    args = ap.parse_args()
+    # reduced config: full configs are exercised via the dry-run
+    run_serving(arch=args.arch, reduced=True, batch=4, prompt_len=64,
+                new_tokens=24)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step on TPU v5e:
+
+    compute    = per-device HLO FLOPs / 197e12
+    memory     = per-device HLO bytes accessed / 819e9
+    collective = per-device collective operand bytes / 50e9
+
+``cost_analysis()`` supplies FLOPs/bytes of the *partitioned per-device*
+program. Collective bytes are not in cost_analysis — we parse the compiled
+HLO text and sum the output-tensor sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (output size ≈ bytes
+an operand moves through a device's links; multi-link utilization and
+bidirectional rings make this a conservative upper bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.launch.mesh import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,2048,128]{2,1,0:T(8,128)(2,1)}
+_TYPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^=]*?\)|\S+))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for m in _TYPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out_type, kind = m.group(1), m.group(2)
+        # avoid double counting async -start/-done pairs
+        if f"{kind}-done" in line:
+            continue
+        bytes_by[kind] += _tensor_bytes(out_type)
+        count_by[kind] += 1
+    del seen_done
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    peak_memory_bytes: int
+    collectives: CollectiveStats
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device":
+                self.collective_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "collective_counts": self.collectives.count_by_kind,
+            "collective_bytes": self.collectives.bytes_by_kind,
+        }
+
+
+def analyze(compiled, hlo_text: str | None = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text)
+
+    compute_s = flops / TPU_V5E["peak_bf16_flops"]
+    memory_s = nbytes / TPU_V5E["hbm_bandwidth"]
+    collective_s = coll.total_bytes / TPU_V5E["ici_link_bandwidth"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    ma = compiled.memory_analysis()
+    peak = int(getattr(ma, "argument_size_in_bytes", 0)
+               + getattr(ma, "output_size_in_bytes", 0)
+               + getattr(ma, "temp_size_in_bytes", 0)
+               - getattr(ma, "alias_size_in_bytes", 0))
+    return Roofline(flops, nbytes, float(coll.total_bytes), compute_s,
+                    memory_s, collective_s, dominant, peak, coll)
+
+
+def model_flops(cfg, shape, *, train: bool) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) global step FLOPs; 2·N·D for
+    forward-only kinds."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6 if train else 2
+    return mult * n * tokens

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (latest_step, load_checkpoint,
+                                    save_checkpoint)
+
+__all__ = ["latest_step", "load_checkpoint", "save_checkpoint"]

@@ -1,0 +1,17 @@
+"""The paper's primary contribution: the fully serverless query-processing
+runtime — per-query coordinator, FaaS platform model, adaptive straggler
+re-triggering, failure taxonomy with stage-checkpoint restart, semantic
+result cache, elastic worker sizing, and the end-to-end cost model."""
+
+from repro.core.coordinator import (CoordinatorConfig, QueryAborted,
+                                    QueryCoordinator, QueryResult,
+                                    QueryStats)
+from repro.core.cost import CostBreakdown, CostModel
+from repro.core.platform import FaasPlatform, FaultPlan
+from repro.core.registry import ResultRegistry
+
+__all__ = [
+    "CoordinatorConfig", "CostBreakdown", "CostModel", "FaasPlatform",
+    "FaultPlan", "QueryAborted", "QueryCoordinator", "QueryResult",
+    "QueryStats", "ResultRegistry",
+]

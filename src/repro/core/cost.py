@@ -1,0 +1,86 @@
+"""Cost model for serverless compute and storage (paper Tables 1 and 3).
+
+Skyrise is cost-aware end-to-end: the optimizer sizes worker fleets and
+picks shuffle tiers against these prices, and the evaluation (Fig. 6)
+reports per-query dollars. Prices are AWS us-east-1, ARM Lambda, as used in
+the paper's experiments (Aug 2024 – Jan 2025).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.storage.tiers import TIERS
+
+# -- Table 1: compute -----------------------------------------------------------
+
+# Lambda (ARM): 4.8 ¢/GiB-h at the largest sizes → ¢ per GiB-second.
+LAMBDA_CENTS_PER_GIB_S = 4.8 / 3600.0
+LAMBDA_CENTS_PER_REQUEST = 0.2 / 10_000.0       # $0.20 per 1M invocations
+SQS_CENTS_PER_REQUEST = 0.4 / 10_000.0          # $0.40 per 1M requests
+
+# EC2 (C6g) for comparison benchmarks: 1.7 ¢/GiB-h.
+EC2_CENTS_PER_GIB_S = 1.7 / 3600.0
+
+# -- Table 2: startup latency [seconds] -------------------------------------------
+
+LAMBDA_COLD_START = {"min": 0.122, "max": 0.451, "avg": 0.185}
+LAMBDA_WARM_START = {"min": 0.005, "max": 0.009, "avg": 0.006}
+EC2_COLD_START = {"min": 12.795, "max": 22.817, "avg": 15.226}
+EC2_WARM_START = {"min": 9.810, "max": 19.288, "avg": 11.512}
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    compute_cents: float = 0.0
+    invoke_cents: float = 0.0
+    messaging_cents: float = 0.0
+    storage_request_cents: float = 0.0
+    storage_transfer_cents: float = 0.0
+
+    @property
+    def total_cents(self) -> float:
+        return (self.compute_cents + self.invoke_cents
+                + self.messaging_cents + self.storage_request_cents
+                + self.storage_transfer_cents)
+
+    def merge(self, other: "CostBreakdown") -> None:
+        self.compute_cents += other.compute_cents
+        self.invoke_cents += other.invoke_cents
+        self.messaging_cents += other.messaging_cents
+        self.storage_request_cents += other.storage_request_cents
+        self.storage_transfer_cents += other.storage_transfer_cents
+
+
+class CostModel:
+    """Charges workers (GiB-s + invocations + queue messages) and storage
+    requests/transfers per tier."""
+
+    def __init__(self, worker_memory_gib: float = 2.0):
+        self.worker_memory_gib = worker_memory_gib
+
+    def worker_cost(self, runtime_s: float,
+                    tier_ops: dict) -> CostBreakdown:
+        out = CostBreakdown()
+        out.compute_cents = (runtime_s * self.worker_memory_gib
+                             * LAMBDA_CENTS_PER_GIB_S)
+        out.invoke_cents = LAMBDA_CENTS_PER_REQUEST
+        # one response message to the coordinator's queue (send+receive)
+        out.messaging_cents = 2 * SQS_CENTS_PER_REQUEST
+        for tier_name, ops in tier_ops.items():
+            tier = TIERS.get(tier_name, TIERS["s3-standard"])
+            out.storage_request_cents += (
+                ops["get"] * tier.read_request_cents_per_1m / 1e6
+                + ops["put"] * tier.write_request_cents_per_1m / 1e6)
+            out.storage_transfer_cents += (
+                ops["bytes_read"] / 2**30 * tier.read_transfer_cents_per_gib
+                + ops["bytes_written"] / 2**30
+                * tier.write_transfer_cents_per_gib)
+        return out
+
+    def coordinator_cost(self, runtime_s: float) -> CostBreakdown:
+        out = CostBreakdown()
+        out.compute_cents = (runtime_s * self.worker_memory_gib
+                             * LAMBDA_CENTS_PER_GIB_S)
+        out.invoke_cents = LAMBDA_CENTS_PER_REQUEST
+        return out

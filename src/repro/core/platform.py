@@ -1,0 +1,137 @@
+"""FaaS platform simulation (paper section 2.1).
+
+Models the pieces of AWS Lambda that shape Skyrise's behavior:
+
+  * cold vs. warm sandbox starts (latencies per paper Table 2) — the warm
+    pool grows as sandboxes are created and persists across stages, so cold
+    starts are "negligible and only occur in the initial query stage";
+  * per-user concurrency quota (admission control) → execution in waves;
+  * asynchronous invocation with a small per-request dispatch overhead, and
+    the paper's two-level √W invocation tree for large fleets;
+  * fault injection (transient errors, stragglers, worker kills) to
+    exercise the coordinator's adaptive re-triggering.
+
+Execution is sequential on this host; *simulated* wall-clock is accounted
+as the parallel critical path: dispatch + max over workers of
+(start latency + worker runtime), per wave.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core.cost import LAMBDA_COLD_START, LAMBDA_WARM_START
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault injection, seeded per (pipeline, fragment,
+    attempt)."""
+    transient_error_prob: float = 0.0
+    straggler_prob: float = 0.0
+    straggler_factor: float = 10.0      # runtime multiplier when straggling
+    kill_fragments: tuple = ()          # (pipeline, fragment, attempt) kills
+    straggle_fragments: tuple = ()      # deterministic stragglers
+    seed: int = 0
+
+    def roll(self, pipeline: int, fragment: int, attempt: int):
+        rng = np.random.default_rng(
+            (self.seed, pipeline, fragment, attempt))
+        killed = (pipeline, fragment, attempt) in set(self.kill_fragments)
+        transient = rng.random() < self.transient_error_prob
+        straggle = (rng.random() < self.straggler_prob
+                    or (pipeline, fragment, attempt)
+                    in set(self.straggle_fragments))
+        return killed or transient, straggle
+
+
+class TransientWorkerError(RuntimeError):
+    """Infrastructure-level failure (sandbox died, network blip)."""
+
+
+@dataclasses.dataclass
+class InvocationResult:
+    payload: dict | None            # worker response (None if failed)
+    error: str | None
+    sim_start_s: float              # cold/warm start latency
+    sim_runtime_s: float            # start + io + compute (straggle-scaled)
+    cold: bool
+    response: object = None
+
+
+class FaasPlatform:
+    """Simulated function platform shared by all queries in a session."""
+
+    INVOKE_OVERHEAD_S = 0.002       # one async Invoke API call
+
+    def __init__(self, *, quota: int = 1000, seed: int = 0,
+                 faults: FaultPlan | None = None):
+        self.quota = quota
+        self.faults = faults or FaultPlan()
+        self._rng = np.random.default_rng(seed)
+        self._warm_sandboxes = 0
+        self.invocations = 0
+        self.cold_starts = 0
+
+    # -- startup latency draws -------------------------------------------------
+    def _start_latency(self, cold: bool) -> float:
+        m = LAMBDA_COLD_START if cold else LAMBDA_WARM_START
+        lo, hi, avg = m["min"], m["max"], m["avg"]
+        # right-skewed: shifted exponential matching the observed mean,
+        # clipped to the observed max (paper Table 2)
+        return float(min(lo + self._rng.exponential(avg - lo), hi))
+
+    def dispatch_time_s(self, n: int, *, two_level: bool) -> float:
+        """Critical-path time to issue n async invocations.
+
+        Flat: the coordinator issues all n serially. Two-level (paper
+        section 3.3): it invokes √n workers, each of which invokes √n−1
+        more before running its own fragment.
+        """
+        if n <= 1 or not two_level:
+            return n * self.INVOKE_OVERHEAD_S
+        root = int(math.ceil(math.sqrt(n)))
+        return (root + max(root - 1, 0)) * self.INVOKE_OVERHEAD_S
+
+    # -- invocation --------------------------------------------------------------
+    def invoke(self, handler: Callable[[dict], tuple[dict, float]],
+               payload: dict, *, pipeline: int, fragment: int,
+               attempt: int) -> InvocationResult:
+        """Run one worker function. The handler returns
+        (response_payload, sim_worker_runtime_s)."""
+        self.invocations += 1
+        cold = self._warm_sandboxes <= 0
+        if cold:
+            self.cold_starts += 1
+        else:
+            self._warm_sandboxes -= 1
+        start = self._start_latency(cold)
+
+        fail, straggle = self.faults.roll(pipeline, fragment, attempt)
+        if fail:
+            # the sandbox died mid-flight; it still cost its startup time
+            self._warm_sandboxes += 1
+            return InvocationResult(None, "transient", start, start, cold)
+        try:
+            response, runtime = handler(payload)
+        except TransientWorkerError as e:  # pragma: no cover - defensive
+            self._warm_sandboxes += 1
+            return InvocationResult(None, str(e), start, start, cold)
+        if straggle:
+            runtime = runtime * self.faults.straggler_factor
+        self._warm_sandboxes += 1
+        return InvocationResult(response, None, start, start + runtime,
+                                cold)
+
+    def wave_sizes(self, n: int) -> list[int]:
+        """Admission control: quota-bounded execution waves."""
+        waves = []
+        while n > 0:
+            w = min(n, self.quota)
+            waves.append(w)
+            n -= w
+        return waves

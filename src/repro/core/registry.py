@@ -1,0 +1,48 @@
+"""Central (intermediate) result registry (paper section 3.4).
+
+Pipeline results are registered under their *semantic hash* — computed from
+the logical plan after logical optimization, before physical properties —
+so semantically equivalent results match independent of the number/size of
+the workers that produced them. Before scheduling a pipeline, the
+coordinator consults the registry and skips cache hits.
+
+Backed by the low-latency KV tier (DynamoDB analog) of the object store.
+"""
+
+from __future__ import annotations
+
+import msgpack
+
+from repro.storage.object_store import ObjectStore
+
+
+class ResultRegistry:
+    def __init__(self, store: ObjectStore, namespace: str = "registry"):
+        self.store = store.with_tier("dynamodb")
+        self.namespace = namespace
+
+    def _key(self, sem_hash: str) -> str:
+        return f"{self.namespace}/{sem_hash}"
+
+    def lookup(self, sem_hash: str) -> dict | None:
+        """Returns the result's physical layout metadata, or None."""
+        key = self._key(sem_hash)
+        if not self.store.exists(key):
+            return None
+        entry = msgpack.unpackb(self.store.get(key).data)
+        return entry if entry.get("complete") else None
+
+    def register(self, sem_hash: str, *, prefix: str, n_fragments: int,
+                 partitioning: dict, schema: list[dict],
+                 stats: dict | None = None) -> None:
+        self.store.put(self._key(sem_hash), msgpack.packb({
+            "complete": True,
+            "prefix": prefix,
+            "n_fragments": n_fragments,
+            "partitioning": partitioning,
+            "schema": schema,
+            "stats": stats or {},
+        }))
+
+    def invalidate(self, sem_hash: str) -> None:
+        self.store.delete(self._key(sem_hash))

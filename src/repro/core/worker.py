@@ -1,0 +1,35 @@
+"""Serverless query-worker function (the Lambda handler, section 3.3).
+
+Deserializes the invocation payload into a fragment plan, executes it, and
+returns the response message the coordinator polls from its queue: result
+location plus execution statistics used for adaptive behavior and billing.
+"""
+
+from __future__ import annotations
+
+from repro.exec.fragment import execute_fragment
+from repro.storage.object_store import ObjectStore
+
+
+def make_worker_handler(store: ObjectStore):
+    def handler(payload: dict) -> tuple[dict, float]:
+        result = execute_fragment(store, payload)
+        stats = result.stats
+        sim_runtime = stats.sim_io_s + stats.compute_s
+        response = {
+            "fragment": payload["fragment"],
+            "output_keys": result.output_keys,
+            "stats": {
+                "rows_in": stats.rows_in,
+                "rows_out": stats.rows_out,
+                "sim_io_s": stats.sim_io_s,
+                "compute_s": stats.compute_s,
+                "requests": stats.requests,
+                "retriggers": stats.retriggers,
+                "bytes_read": stats.bytes_read,
+                "bytes_written": stats.bytes_written,
+                "tier_ops": stats.tier_ops,
+            },
+        }
+        return response, sim_runtime
+    return handler

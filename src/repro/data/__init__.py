@@ -1,0 +1,6 @@
+"""Data pipeline: TPC-H generator and catalog."""
+
+from repro.data.catalog import Catalog, TableMeta
+from repro.data.tpch import SCHEMAS, date_to_int, generate_tpch
+
+__all__ = ["Catalog", "SCHEMAS", "TableMeta", "date_to_int", "generate_tpch"]

@@ -1,0 +1,16 @@
+"""Vectorized JAX execution layer for query fragments.
+
+SQL arithmetic (TPC-H decimals) needs float64/int64, so importing this
+package enables jax_enable_x64. Model code elsewhere uses explicit dtypes
+(bf16/f32) and is unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.exec.batch import Block, bucket_capacity, from_numpy, to_numpy
+from repro.exec.expr import compile_expr, expr_from_dict, expr_to_dict
+
+__all__ = ["Block", "bucket_capacity", "compile_expr", "expr_from_dict",
+           "expr_to_dict", "from_numpy", "to_numpy"]

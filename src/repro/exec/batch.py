@@ -1,0 +1,58 @@
+"""Fixed-capacity columnar blocks with validity masks.
+
+XLA programs need static shapes; SQL produces data-dependent cardinalities.
+The execution layer therefore works on ``Block``s: equal-length column
+arrays padded to a bucketed capacity plus a boolean validity mask. Filters
+flip mask bits; joins and aggregations emit capacity-bounded outputs; rows
+are compacted back to numpy only at fragment output boundaries.
+
+Capacity bucketing (next power of two, floor 1024) bounds the number of
+distinct shapes XLA compiles per operator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bucket_capacity(n: int, floor: int = 1024) -> int:
+    cap = floor
+    while cap < n:
+        cap *= 2
+    return cap
+
+
+@dataclasses.dataclass
+class Block:
+    columns: dict[str, jnp.ndarray]
+    mask: jnp.ndarray                 # bool[capacity]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.mask.shape[0])
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+
+def from_numpy(columns: dict[str, np.ndarray],
+               capacity: int | None = None) -> Block:
+    n = len(next(iter(columns.values()))) if columns else 0
+    cap = capacity if capacity is not None else bucket_capacity(n)
+    cols = {}
+    for name, arr in columns.items():
+        pad = np.zeros((cap - n,) + arr.shape[1:], dtype=arr.dtype)
+        cols[name] = jnp.asarray(np.concatenate([arr, pad]))
+    mask = np.zeros(cap, dtype=bool)
+    mask[:n] = True
+    return Block(cols, jnp.asarray(mask))
+
+
+def to_numpy(block: Block) -> dict[str, np.ndarray]:
+    """Compact valid rows back to numpy (host-side, at fragment edges)."""
+    mask = np.asarray(block.mask)
+    return {name: np.asarray(col)[mask]
+            for name, col in block.columns.items()}

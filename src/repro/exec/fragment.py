@@ -1,0 +1,257 @@
+"""Query-worker fragment execution (paper section 3.3).
+
+A worker deserializes its invocation payload (the fragment spec), loads its
+input partitions through the storage input handler, executes the fragment's
+operator chain as one jit-compiled XLA program over fixed-capacity blocks,
+and writes exactly one deterministic output object per destination — making
+re-execution idempotent: racing duplicate workers overwrite identical bytes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.exec import operators as ops
+from repro.exec.batch import bucket_capacity, from_numpy, to_numpy
+from repro.exec.expr import expr_from_dict
+from repro.storage import pax
+from repro.storage.io_handlers import InputHandler, IoStats, OutputHandler
+from repro.storage.object_store import ObjectStore
+
+
+@dataclasses.dataclass
+class FragmentStats:
+    rows_in: int = 0
+    rows_out: int = 0
+    sim_io_s: float = 0.0
+    compute_s: float = 0.0
+    requests: int = 0
+    retriggers: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    # per-tier request/byte accounting for the cost model
+    tier_ops: dict = dataclasses.field(default_factory=dict)
+
+    def account(self, tier: str, st: IoStats, *, write: bool) -> None:
+        t = self.tier_ops.setdefault(
+            tier, {"get": 0, "put": 0, "bytes_read": 0, "bytes_written": 0})
+        if write:
+            t["put"] += st.requests
+            t["bytes_written"] += st.bytes
+        else:
+            t["get"] += st.requests
+            t["bytes_read"] += st.bytes
+            self.retriggers += st.retriggers
+        self.requests += st.requests
+        self.bytes_read += 0 if write else st.bytes
+        self.bytes_written += st.bytes if write else 0
+        self.sim_io_s += st.sim_time_s
+
+
+@dataclasses.dataclass
+class FragmentResult:
+    output_keys: list[str]
+    stats: FragmentStats
+
+
+# -- jit program construction ---------------------------------------------------
+
+_FN_CACHE: dict[str, object] = {}
+
+
+def _build(op: dict, leaves: list[tuple[str, dict]]):
+    """Recursively build a pure function over named leaf blocks."""
+    t = op["t"]
+    if t in ("scan_table", "scan_exchange"):
+        leaf_id = f"in{len(leaves)}"
+        leaves.append((leaf_id, op))
+        return lambda blocks: blocks[leaf_id]
+    if t == "filter":
+        child = _build(op["child"], leaves)
+        f = ops.make_filter(expr_from_dict(op["pred"]))
+
+        def run_filter(blocks):
+            cols, mask = child(blocks)
+            return f(cols, mask)
+        return run_filter
+    if t == "project":
+        child = _build(op["child"], leaves)
+        f = ops.make_project([(n, expr_from_dict(e))
+                              for n, e in op["exprs"]])
+
+        def run_project(blocks):
+            cols, mask = child(blocks)
+            return f(cols, mask)
+        return run_project
+    if t in ("partial_agg", "merge_agg"):
+        child = _build(op["child"], leaves)
+        aggs = [(n, fn, expr_from_dict(a) if a else None)
+                for n, fn, a in op["aggs"]]
+        if op["strategy"] == "direct":
+            f, _ = ops.make_direct_agg(op["group_cols"], op["sizes"], aggs)
+        else:
+            f = ops.make_sort_agg(op["group_cols"], aggs)
+
+        def run_agg(blocks):
+            cols, mask = child(blocks)
+            return f(cols, mask)
+        return run_agg
+    if t == "join":
+        probe = _build(op["probe"], leaves)
+        build = _build(op["build"], leaves)
+        f = ops.make_pk_join_probe(op["probe_key"], op["build_key"],
+                                   op["payload"])
+
+        def run_join(blocks):
+            pcols, pmask = probe(blocks)
+            bcols, bmask = build(blocks)
+            return f(pcols, pmask, bcols, bmask)
+        return run_join
+    raise TypeError(t)
+
+
+def _compiled(op: dict):
+    key = repr(op)
+    if key not in _FN_CACHE:
+        leaves: list[tuple[str, dict]] = []
+        fn = _build(op, leaves)
+        _FN_CACHE[key] = (jax.jit(fn), leaves)
+    return _FN_CACHE[key]
+
+
+# -- input loading ----------------------------------------------------------------
+
+def _load_scan_table(handler: InputHandler, spec: dict, leaf_op: dict,
+                     stats: FragmentStats) -> dict[str, np.ndarray]:
+    preds = [pax.ZonePredicate(c, o, tuple(v) if isinstance(v, list) else v)
+             for c, o, v in leaf_op["zone_preds"]]
+    parts = []
+    for key in spec["scan_units"]:
+        cols, _, st = handler.read_table(key, leaf_op["columns"], preds)
+        stats.account("table", st, write=False)
+        parts.append(cols)
+    if not parts:
+        return {c: np.empty((0,), np.int64) for c in leaf_op["columns"]}
+    return {c: np.concatenate([p[c] for p in parts])
+            for c in leaf_op["columns"]}
+
+
+def _load_scan_exchange(store: ObjectStore, spec: dict, leaf_op: dict,
+                        stats: FragmentStats) -> dict[str, np.ndarray]:
+    src = spec["sources"][leaf_op["source"]]
+    part = src["partitioning"]
+    handler = InputHandler(store.with_tier(part.get("tier", "s3-standard")))
+    me, F = spec["fragment"], spec["n_fragments"]
+    keys: list[str] = []
+    local_filter = False
+    if leaf_op["mode"] == "partition" and part["kind"] == "hash":
+        if part["n_dest"] == F:
+            keys = [f"{src['prefix']}/f{g:04d}/d{me:04d}.spax"
+                    for g in range(src["n_fragments"])]
+        else:
+            # Cached result with a different fan-out: read everything and
+            # re-partition locally (correct under any cached layout).
+            local_filter = True
+            keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
+                    for g in range(src["n_fragments"])
+                    for d in range(part["n_dest"])]
+    else:  # mode == all
+        if part["kind"] == "hash":
+            keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
+                    for g in range(src["n_fragments"])
+                    for d in range(part["n_dest"])]
+        else:
+            keys = [f"{src['prefix']}/f{g:04d}/out.spax"
+                    for g in range(src["n_fragments"])]
+    names = [c["name"] for c in src["schema"]]
+    parts = []
+    for key in keys:
+        cols, _, st = handler.read_table(key, names)
+        stats.account(part.get("tier", "s3-standard"), st, write=False)
+        parts.append(cols)
+    out = {c: np.concatenate([p[c] for p in parts]) if parts
+           else np.empty((0,), np.dtype(s["dtype"]))
+           for c, s in zip(names, src["schema"])}
+    if local_filter:
+        dest = ops.np_hash_dest(out, list(part["keys"]), F)
+        sel = dest == me
+        out = {c: v[sel] for c, v in out.items()}
+    return out
+
+
+# -- driver ------------------------------------------------------------------------
+
+def execute_fragment(store: ObjectStore, spec: dict) -> FragmentResult:
+    stats = FragmentStats()
+    handler = InputHandler(store)
+    fn, leaves = _compiled(spec["op"] if spec["op"]["t"] != "final"
+                           else spec["op"]["child"])
+
+    # 1. Load leaf inputs (host side, ranged + pruned + re-triggered reads).
+    blocks = {}
+    for leaf_id, leaf_op in leaves:
+        if leaf_op["t"] == "scan_table":
+            cols = _load_scan_table(handler, spec, leaf_op, stats)
+        else:
+            cols = _load_scan_exchange(store, spec, leaf_op, stats)
+        n = len(next(iter(cols.values()))) if cols else 0
+        stats.rows_in += n
+        blk = from_numpy(cols, bucket_capacity(n))
+        blocks[leaf_id] = (blk.columns, blk.mask)
+
+    # 2. Execute the fused XLA program.
+    t0 = time.perf_counter()
+    out_cols, out_mask = fn(blocks)
+    jax.block_until_ready(out_mask)
+    stats.compute_s += time.perf_counter() - t0
+    from repro.exec.batch import Block
+    result = to_numpy(Block(dict(out_cols), out_mask))
+
+    # 3. Final-stage host ops (global sort / limit on the compacted result).
+    if spec["op"]["t"] == "final":
+        fop = spec["op"]
+        if fop["sort_keys"]:
+            cols_for_sort = []
+            for name, desc in reversed(fop["sort_keys"]):
+                k = result[name]
+                cols_for_sort.append(-k if desc else k)
+            order = np.lexsort(cols_for_sort)
+            result = {c: v[order] for c, v in result.items()}
+        if fop.get("limit") is not None:
+            result = {c: v[:fop["limit"]] for c, v in result.items()}
+
+    # 4. Write deterministic output object(s).
+    schema = [pax.ColumnSpec(s["name"], s["kind"], s["dtype"])
+              for s in spec["output"]["schema"]]
+    names = [s.name for s in schema]
+    result = {c: result[c].astype(np.dtype(s.dtype))
+              for c, s in zip(names, schema)}
+    part = spec["output"]["partitioning"]
+    prefix = spec["output"]["prefix"]
+    me = spec["fragment"]
+    out_keys = []
+    n_out = len(next(iter(result.values()))) if result else 0
+    stats.rows_out = n_out
+    if part["kind"] == "hash":
+        tier = part.get("tier", "s3-standard")
+        out = OutputHandler(store.with_tier(tier))
+        dest = ops.np_hash_dest(result, list(part["keys"]), part["n_dest"])
+        for d in range(part["n_dest"]):
+            sel = dest == d
+            out.append({c: v[sel] for c, v in result.items()})
+            key = f"{prefix}/f{me:04d}/d{d:04d}.spax"
+            st = out.finish(key, schema)
+            stats.account(tier, st, write=True)
+            out_keys.append(key)
+    else:
+        out = OutputHandler(store)
+        out.append(result)
+        key = f"{prefix}/f{me:04d}/out.spax"
+        st = out.finish(key, schema)
+        stats.account("table", st, write=True)
+        out_keys.append(key)
+    return FragmentResult(out_keys, stats)

@@ -1,0 +1,83 @@
+"""Fused filter + aggregate scan (TPC-H Q6) — Pallas TPU kernel.
+
+The hot loop of a scan-heavy serverless query worker: evaluate a
+conjunctive range predicate over columnar blocks and accumulate
+sum(extendedprice·discount) and the matching-row count in one pass —
+columns stream HBM→VMEM once, no intermediate mask or filtered column is
+ever materialized. Grid = row blocks; the (1, 2) result tile accumulates
+across sequential grid steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 2048
+
+
+def _filter_agg_kernel(ship_ref, disc_ref, qty_ref, price_ref, n_ref,
+                       o_ref, *, date_lo, date_hi, disc_lo, disc_hi,
+                       qty_hi, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    rows = i * block + jax.lax.broadcasted_iota(jnp.int32, (1, block), 1)
+    ship = ship_ref[...]
+    disc = disc_ref[...]
+    qty = qty_ref[...]
+    price = price_ref[...]
+    mask = ((ship >= date_lo) & (ship < date_hi)
+            & (disc >= disc_lo) & (disc <= disc_hi)
+            & (qty < qty_hi) & (rows < n_ref[0]))
+    zero = jnp.zeros((), jnp.float32)
+    val = jnp.where(mask, price * disc, zero)
+    cnt = mask.astype(jnp.float32)
+    o_ref[0, 0] += jnp.sum(val, dtype=jnp.float32)
+    o_ref[0, 1] += jnp.sum(cnt, dtype=jnp.float32)
+
+
+def filter_agg(shipdate, discount, quantity, extendedprice, *,
+               date_lo: int, date_hi: int, disc_lo: float, disc_hi: float,
+               qty_hi: float, block: int = BLOCK_ROWS,
+               interpret: bool = False) -> jnp.ndarray:
+    """Columns are 1-D f32/i32 arrays of equal length n (padded
+    internally). Returns (2,) f32: [revenue sum, match count]."""
+    n = shipdate.shape[0]
+    block = min(block, max(n, 8))
+    pad = (-n) % block
+    if pad:
+        shipdate = jnp.pad(shipdate, (0, pad))
+        discount = jnp.pad(discount, (0, pad))
+        quantity = jnp.pad(quantity, (0, pad))
+        extendedprice = jnp.pad(extendedprice, (0, pad))
+    nb = (n + pad) // block
+
+    def as2d(x, dtype):
+        return x.astype(dtype).reshape(nb, block)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _filter_agg_kernel, date_lo=date_lo, date_hi=date_hi,
+            disc_lo=disc_lo, disc_hi=disc_hi, qty_hi=qty_hi, block=block),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 2), jnp.float32),
+        interpret=interpret,
+    )(as2d(shipdate, jnp.int32), as2d(discount, jnp.float32),
+      as2d(quantity, jnp.float32), as2d(extendedprice, jnp.float32),
+      jnp.asarray([n], jnp.int32))
+    return out[0]

@@ -1,0 +1,57 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the
+kernel body runs as traced jnp on the host, validating semantics; on TPU
+the same call sites compile to Mosaic. ``interpret`` auto-detects the
+backend so call sites never change.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import filter_agg as _fa
+from repro.kernels import flash_attention as _flash
+from repro.kernels import groupby_onehot as _go
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                   "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = _flash.DEFAULT_BLOCK_Q,
+                    block_k: int = _flash.DEFAULT_BLOCK_K):
+    return _flash.flash_attention(
+        q, k, v, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A_log, B, C, *, chunk: int = 128):
+    return _ssd.ssd_scan(x, dt, A_log, B, C, chunk=chunk,
+                         interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("date_lo", "date_hi", "disc_lo",
+                                   "disc_hi", "qty_hi", "block"))
+def filter_agg(shipdate, discount, quantity, extendedprice, *,
+               date_lo: int, date_hi: int, disc_lo: float,
+               disc_hi: float, qty_hi: float,
+               block: int = _fa.BLOCK_ROWS):
+    return _fa.filter_agg(
+        shipdate, discount, quantity, extendedprice, date_lo=date_lo,
+        date_hi=date_hi, disc_lo=disc_lo, disc_hi=disc_hi, qty_hi=qty_hi,
+        block=block, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("n_groups", "block"))
+def groupby_onehot(group_ids, values, *, n_groups: int,
+                   block: int = _go.BLOCK_ROWS):
+    return _go.groupby_onehot(group_ids, values, n_groups=n_groups,
+                              block=block, interpret=_interpret())

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness references)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """q: (BH, S, hd); k/v: (BHkv, S, hd)."""
+    BH, S, hd = q.shape
+    group = BH // k.shape[0]
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A_log, B, C) -> jnp.ndarray:
+    """Sequential SSD recurrence (the definitionally-correct oracle).
+
+    x: (batch, S, H, P); dt: (batch, S, H); A_log: (H,);
+    B/C: (batch, S, N). Returns (batch, S, H, P)."""
+    bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    a = -np.exp(np.asarray(A_log, np.float64))
+    xf = np.asarray(x, np.float64)
+    dtf = np.asarray(dt, np.float64)
+    Bf = np.asarray(B, np.float64)
+    Cf = np.asarray(C, np.float64)
+    y = np.zeros((bsz, S, H, P))
+    state = np.zeros((bsz, H, N, P))
+    for t in range(S):
+        decay = np.exp(dtf[:, t] * a)                      # (b,H)
+        upd = np.einsum("bn,bhp->bhnp", Bf[:, t], xf[:, t]) \
+            * dtf[:, t][:, :, None, None]
+        state = state * decay[:, :, None, None] + upd
+        y[:, t] = np.einsum("bn,bhnp->bhp", Cf[:, t], state)
+    return jnp.asarray(y, x.dtype)
+
+
+def filter_agg_ref(shipdate, discount, quantity, extendedprice, *,
+                   date_lo, date_hi, disc_lo, disc_hi, qty_hi):
+    """TPC-H Q6 oracle: sum(extendedprice * discount) over the mask."""
+    m = ((shipdate >= date_lo) & (shipdate < date_hi)
+         & (discount >= disc_lo) & (discount <= disc_hi)
+         & (quantity < qty_hi))
+    return jnp.sum(jnp.where(m, extendedprice * discount, 0.0),
+                   dtype=jnp.float32)
+
+
+def groupby_agg_ref(group_ids, values, n_groups: int):
+    """Grouped sums: group_ids (n,), values (n, A) → (n_groups, A)."""
+    return jax.ops.segment_sum(values, group_ids, num_segments=n_groups)

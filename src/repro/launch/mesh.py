@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 256 chips per pod arranged (16, 16) as
+(data, model); the multi-pod configuration adds a leading pure-DP "pod"
+axis (2 pods = 512 chips). Defined as functions so importing this module
+never touches jax device state (the dry-run pins the host device count
+before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for CPU tests (requires host-device override)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware constants (roofline denominators).
+TPU_V5E = {
+    "peak_bf16_flops": 197e12,      # per chip
+    "hbm_bandwidth": 819e9,         # bytes/s per chip
+    "ici_link_bandwidth": 50e9,     # bytes/s per link
+    "hbm_bytes": 16 * 2**30,
+}

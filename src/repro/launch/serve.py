@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill + KV-cache decode loop.
+
+Serving is the paper's interactive-query story transplanted to LMs: a
+stateless "coordinator" receives a batch of requests, runs prefill (the
+scan-heavy stage), then streams decode steps (the small recurring
+queries), with the cache as the intermediate result.
+
+CPU example (reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --batch 4 --prompt-len 64 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.models.decode import prefill
+from repro.models.model import init_params
+from repro.models.steps import make_serve_step
+
+
+def run_serving(*, arch: str, reduced: bool = True, batch: int = 4,
+                prompt_len: int = 64, new_tokens: int = 32,
+                verbose: bool = True):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32))
+    frames = None
+    if cfg.enc_dec:
+        frames = jnp.asarray(rng.normal(
+            0, 1, (batch, cfg.enc_frames, cfg.d_model)).astype(np.float32))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(cfg, params, prompts, frames=frames,
+                            compute_dtype=jnp.float32,
+                            max_len=prompt_len + new_tokens)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    serve_step = jax.jit(make_serve_step(cfg, compute_dtype=jnp.float32))
+    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    generated = [tokens]
+    t0 = time.perf_counter()
+    for _ in range(new_tokens - 1):
+        tokens, _, cache = serve_step(params, cache, tokens)
+        generated.append(tokens)
+    jax.block_until_ready(tokens)
+    t_decode = time.perf_counter() - t0
+    out = jnp.stack(generated, axis=1)
+    tps = batch * (new_tokens - 1) / max(t_decode, 1e-9)
+    if verbose:
+        print(f"[serve] arch={arch} batch={batch} prompt={prompt_len} "
+              f"new={new_tokens}")
+        print(f"[serve] prefill {t_prefill * 1e3:.1f} ms; decode "
+              f"{t_decode * 1e3:.1f} ms ({tps:.1f} tok/s incl. compile)")
+        print(f"[serve] sample continuation ids: "
+              f"{np.asarray(out[0, :10]).tolist()}")
+    return out, {"prefill_s": t_prefill, "decode_s": t_decode,
+                 "tokens_per_s": tps}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+    run_serving(arch=args.arch, reduced=not args.full, batch=args.batch,
+                prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+
+
+if __name__ == "__main__":
+    main()

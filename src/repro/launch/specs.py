@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input specs per (arch × shape) cell — the dry-run's
+stand-ins for real tensors (no device allocation, weak-type-correct,
+shardable). Also builds the step callable each cell lowers."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as decode_lib
+from repro.models import steps as steps_lib
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.model import init_params
+from repro.optim import AdamW
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: ShapeConfig
+    kind: str                   # train | prefill | decode
+    step_fn: object             # callable to lower
+    arg_specs: tuple            # ShapeDtypeStruct pytrees
+    donate_argnums: tuple = ()
+    skip_reason: str | None = None
+
+
+def shape_of(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def params_specs(cfg: ModelConfig, dtype=jnp.float32):
+    fn = partial(init_params, cfg, jax.random.PRNGKey(0), dtype)
+    return jax.eval_shape(fn)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.enc_dec:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    fn = partial(decode_lib.init_cache, cfg, shape.global_batch,
+                 shape.seq_len, jnp.bfloat16)
+    return jax.eval_shape(fn)
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("full quadratic attention at 524k sequence — skipped per "
+                "assignment; runs for SSM/hybrid archs only")
+    return None
+
+
+def build_cell(cfg: ModelConfig, arch: str, shape_name: str, *,
+               mesh=None, optimizer: AdamW | None = None,
+               remat: bool = True, scan_layers: bool = True,
+               accum_steps: int = 1) -> CellSpec:
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return CellSpec(arch, shape, shape.kind, None, (), (), reason)
+
+    if shape.kind == "train":
+        opt = optimizer or AdamW()
+        p_specs = params_specs(cfg, jnp.float32)
+        o_specs = jax.eval_shape(opt.init, p_specs)
+        b_specs = batch_specs(cfg, shape)
+        step = steps_lib.make_train_step(cfg, opt, mesh=mesh, remat=remat,
+                                         scan_layers=scan_layers,
+                                         accum_steps=accum_steps)
+        return CellSpec(arch, shape, "train", step,
+                        (p_specs, o_specs, b_specs), donate_argnums=(0, 1))
+    if shape.kind == "prefill":
+        p_specs = params_specs(cfg, jnp.bfloat16)
+        b_specs = batch_specs(cfg, shape)
+        b_specs.pop("labels")
+        step = steps_lib.make_prefill_step(cfg, mesh=mesh,
+                                           scan_layers=scan_layers)
+        return CellSpec(arch, shape, "prefill", step, (p_specs, b_specs))
+    # decode
+    p_specs = params_specs(cfg, jnp.bfloat16)
+    c_specs = cache_specs(cfg, shape)
+    t_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    step = steps_lib.make_serve_step(cfg, mesh=mesh,
+                                         scan_layers=scan_layers)
+    return CellSpec(arch, shape, "decode", step,
+                    (p_specs, c_specs, t_spec), donate_argnums=(1,))

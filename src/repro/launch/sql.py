@@ -1,0 +1,70 @@
+"""SQL query driver: the end-to-end Skyrise entry point.
+
+  PYTHONPATH=src python -m repro.launch.sql --sf 0.05 --query q12
+  PYTHONPATH=src python -m repro.launch.sql --sf 0.01 \
+      --sql "select count(*) as n from lineitem where l_quantity < 10"
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import CoordinatorConfig, FaasPlatform, QueryCoordinator
+from repro.data import generate_tpch
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.storage import FilesystemBackend, ObjectStore
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.01)
+    ap.add_argument("--query", default="q12", choices=list(QUERIES))
+    ap.add_argument("--sql", default=None)
+    ap.add_argument("--store-dir", default=None,
+                    help="persist the store on disk (reused across runs)")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--tier", default="s3-standard")
+    args = ap.parse_args()
+
+    backend = FilesystemBackend(args.store_dir) if args.store_dir else None
+    store = ObjectStore(backend, tier=args.tier)
+    catalog_key = f"tpch/sf{args.sf:g}/catalog"
+    if store.exists(catalog_key):
+        from repro.data.catalog import Catalog
+        catalog = Catalog.load(store, catalog_key)
+        print(f"[sql] reusing existing TPC-H sf={args.sf:g}")
+    else:
+        print(f"[sql] generating TPC-H sf={args.sf:g} …")
+        catalog = generate_tpch(store, sf=args.sf)
+
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=512 << 10),
+        use_result_cache=not args.no_cache)
+    coord = QueryCoordinator(store, catalog, platform=FaasPlatform(),
+                             config=cfg)
+    sql = args.sql or QUERIES[args.query]
+    res = coord.execute_sql(sql)
+    cols = res.fetch(store)
+    s = res.stats
+
+    print(f"\n[sql] result @ {res.location}")
+    names = [n for n in res.output_names if n in cols]
+    print(" | ".join(f"{n:>16s}" for n in names))
+    n_rows = len(next(iter(cols.values()))) if cols else 0
+    for i in range(min(n_rows, 20)):
+        print(" | ".join(f"{cols[n][i]:>16.4f}"
+                         if np.issubdtype(cols[n].dtype, np.floating)
+                         else f"{cols[n][i]:>16}" for n in names))
+    if n_rows > 20:
+        print(f"… {n_rows - 20} more rows")
+    print(f"\n[sql] sim latency {s.sim_latency_s:.2f}s · wall "
+          f"{s.wall_s:.2f}s · cost {s.cost.total_cents:.4f}¢ · "
+          f"workers {sum(p.n_fragments for p in s.pipelines)} · "
+          f"cache hits {s.cache_hits}/{len(s.pipelines)}")
+
+
+if __name__ == "__main__":
+    main()

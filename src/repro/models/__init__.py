@@ -1,0 +1,3 @@
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+
+__all__ = ["ModelConfig", "SHAPES", "ShapeConfig"]

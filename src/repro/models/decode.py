@@ -1,0 +1,313 @@
+"""Serving path: cache construction, prefill, and single-token decode.
+
+Cache layouts (leading axis = layers, so layer-scan threads cache slices):
+
+  * attention archs: k/v (L, B, Hkv, C, hd); C = seq_len for full
+    attention, C = sliding window for SWA archs (ring buffer, slot =
+    pos % W — keys are RoPE-rotated at write time so ring order is
+    irrelevant to softmax attention).
+  * SSM/hybrid archs: ssm_state (L, B, H, N, P) + conv_state
+    (L, B, K-1, conv_dim) — constant-size state, the reason ``long_500k``
+    runs for these families.
+  * enc-dec (whisper): self-attention cache + cross-attention K/V
+    computed once from the encoder output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.model import (_heads, _unheads, attention_sublayer,
+                                ffn_sublayer, make_block_fn, ssm_sublayer)
+
+
+def _scan_or_loop(layer, x, xs, n_layers: int, scan_layers: bool):
+    """lax.scan over per-layer (params, cache) slices, or Python unroll
+    (roofline harness mode — see model._layer_loop)."""
+    if scan_layers:
+        return jax.lax.scan(layer, x, xs)
+    outs_acc = []
+    for i in range(n_layers):
+        xs_i = jax.tree.map(lambda a: a[i], xs)
+        x, outs = layer(x, xs_i)
+        outs_acc.append(outs)
+    stacked = jax.tree.map(lambda *vs: jnp.stack(vs), *outs_acc)
+    return x, stacked
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    nl, hd = cfg.n_layers, cfg.head_dim_
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    C = cache_len(cfg, seq_len)
+    if cfg.family != "ssm":
+        cache["k"] = jnp.zeros((nl, batch, cfg.n_kv_heads, C, hd), dtype)
+        cache["v"] = jnp.zeros((nl, batch, cfg.n_kv_heads, C, hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        H, N, P = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        conv_dim = cfg.d_inner + 2 * N
+        cache["ssm_state"] = jnp.zeros((nl, batch, H, N, P), jnp.float32)
+        cache["conv_state"] = jnp.zeros(
+            (nl, batch, cfg.conv_width - 1, conv_dim), jnp.float32)
+    if cfg.enc_dec:
+        cache["cross_k"] = jnp.zeros(
+            (nl, batch, cfg.n_heads, cfg.enc_frames, hd), dtype)
+        cache["cross_v"] = jnp.zeros(
+            (nl, batch, cfg.n_heads, cfg.enc_frames, hd), dtype)
+    return cache
+
+
+# -- decode ------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, cache: dict, tokens,
+                *, mesh=None, compute_dtype=jnp.bfloat16,
+                scan_layers: bool = True):
+    """tokens (B,) → (logits (B, V), new cache)."""
+    pos = cache["pos"]
+    x = params["embed"].astype(compute_dtype)[tokens][:, None, :]
+    if mesh is not None:
+        from repro.parallel.sharding import constrain, dp_axes_of
+        x = constrain(mesh, x, (dp_axes_of(mesh), None, None))
+    if cfg.enc_dec:
+        x = x + params["dec_pos"].astype(compute_dtype)[None, pos][:, None]
+    positions = pos[None]
+    C = cache["k"].shape[3] if "k" in cache else 0
+    slot = pos % C if (cfg.sliding_window and C) else pos
+    hd = cfg.head_dim_
+
+    def attn_decode(p, h, k_l, v_l):
+        cd = h.dtype
+        q = _heads(jnp.dot(h, p["wq"].astype(cd)), cfg.n_heads, hd)
+        k = _heads(jnp.dot(h, p["wk"].astype(cd)), cfg.n_kv_heads, hd)
+        v = _heads(jnp.dot(h, p["wv"].astype(cd)), cfg.n_kv_heads, hd)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["q_norm"].astype(cd), cfg.norm_eps)
+            k = L.rms_norm(k, p["k_norm"].astype(cd), cfg.norm_eps)
+        if cfg.rope_fraction > 0:
+            q = L.apply_rope(q, positions, fraction=cfg.rope_fraction,
+                             theta=cfg.rope_theta)
+            k = L.apply_rope(k, positions, fraction=cfg.rope_fraction,
+                             theta=cfg.rope_theta)
+        # Cache write as iota-select instead of dynamic-update-slice: DUS
+        # with a dynamic start on the sequence dim forces GSPMD to gather
+        # the (sequence-sharded) cache every step (observed: tens of GB of
+        # all-gathers per decode step). The select partitions cleanly —
+        # each shard compares its local position range.
+        write = jnp.arange(C)[None, None, :, None] == slot
+        k_l = jnp.where(write, k.astype(k_l.dtype), k_l)
+        v_l = jnp.where(write, v.astype(v_l.dtype), v_l)
+        o = L.decode_attention(q, k_l, v_l,
+                               jnp.minimum(pos, C - 1)
+                               if cfg.sliding_window else pos, mesh)
+        return jnp.dot(_unheads(o), p["wo"].astype(cd)), k_l, v_l
+
+    def layer(carry, xs):
+        h_in = carry
+        p = xs["p"]
+        outs = {}
+        hn = L.rms_norm(h_in, p["attn_norm"].astype(h_in.dtype),
+                        cfg.norm_eps)
+        if cfg.family == "ssm":
+            y, conv, state = ssm_sublayer(
+                cfg, p, hn, xs["conv_state"], xs["ssm_state"], decode=True)
+            h = h_in + y
+            outs.update(conv_state=conv, ssm_state=state)
+        elif cfg.hybrid_parallel:
+            a, k_l, v_l = attn_decode(p, hn, xs["k"], xs["v"])
+            s, conv, state = ssm_sublayer(
+                cfg, p, hn, xs["conv_state"], xs["ssm_state"], decode=True)
+            h = h_in + 0.5 * (a + s)
+            outs.update(k=k_l, v=v_l, conv_state=conv, ssm_state=state)
+            hn2 = L.rms_norm(h, p["mlp_norm"].astype(h.dtype), cfg.norm_eps)
+            h = h + ffn_sublayer(cfg, p, hn2, mesh)
+        else:
+            a, k_l, v_l = attn_decode(p, hn, xs["k"], xs["v"])
+            h = h_in + a
+            outs.update(k=k_l, v=v_l)
+            if cfg.enc_dec:
+                pc = xs["pc"]
+                hn2 = L.rms_norm(h, pc["norm"].astype(h.dtype),
+                                 cfg.norm_eps)
+                q = _heads(jnp.dot(hn2, pc["wq"].astype(h.dtype)),
+                           cfg.n_heads, hd)
+                o = L.decode_attention(q, xs["cross_k"], xs["cross_v"],
+                                       cfg.enc_frames, mesh)
+                h = h + jnp.dot(_unheads(o), pc["wo"].astype(h.dtype))
+                outs.update(cross_k=xs["cross_k"],
+                            cross_v=xs["cross_v"])
+            hn2 = L.rms_norm(h, p["mlp_norm"].astype(h.dtype), cfg.norm_eps)
+            h = h + ffn_sublayer(cfg, p, hn2, mesh)
+        return h, outs
+
+    xs: dict = {"p": params["blocks"]}
+    for key in ("k", "v", "ssm_state", "conv_state", "cross_k", "cross_v"):
+        if key in cache:
+            xs[key] = cache[key]
+    if cfg.enc_dec:
+        xs["pc"] = params["cross"]
+    x, outs = _scan_or_loop(layer, x, xs, cfg.n_layers, scan_layers)
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    for key, val in outs.items():
+        if val is not None:
+            new_cache[key] = val
+    x = L.rms_norm(x, params["final_norm"].astype(compute_dtype),
+                   cfg.norm_eps)
+    from repro.models.model import lm_logits
+    return lm_logits(cfg, params, x[:, 0], compute_dtype, mesh), new_cache
+
+
+# -- prefill -----------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, tokens, *, mesh=None,
+            compute_dtype=jnp.bfloat16, frames=None, remat: bool = True,
+            max_len: int | None = None, scan_layers: bool = True):
+    """Full-sequence forward building the cache; returns (last-token
+    logits (B, V), cache). ``max_len`` reserves cache slots beyond S for
+    subsequent decode steps."""
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, max_len or S, compute_dtype)
+    x = params["embed"].astype(compute_dtype)[tokens]
+    if mesh is not None:
+        from repro.parallel.sharding import constrain, dp_axes_of
+        x = constrain(mesh, x, (dp_axes_of(mesh), None, None))
+    if cfg.enc_dec:
+        # encoder + cross K/V
+        enc = frames.astype(compute_dtype) + \
+            params["enc_pos"].astype(compute_dtype)[None]
+        enc_block = make_block_fn(
+            dataclasses.replace(cfg, family="dense", enc_dec=False,
+                                n_kv_heads=cfg.n_heads), causal=False)
+
+        def enc_scan(c, p):
+            y, _ = enc_block(c, p)
+            return y, None
+        enc, _ = _scan_or_loop(enc_scan, enc, params["enc_blocks"],
+                               cfg.enc_layers, scan_layers)
+        enc = L.rms_norm(enc, params["enc_norm"].astype(compute_dtype),
+                         cfg.norm_eps)
+        x = x + params["dec_pos"].astype(compute_dtype)[None, :S]
+
+    hd = cfg.head_dim_
+    W = cache_len(cfg, max_len or S)
+
+    def layer(carry, xs):
+        h_in = carry
+        p = xs["p"]
+        positions = jnp.arange(S)
+        outs = {}
+        hn = L.rms_norm(h_in, p["attn_norm"].astype(h_in.dtype),
+                        cfg.norm_eps)
+        if cfg.family == "ssm":
+            y, _, _ = ssm_sublayer(cfg, p, hn)
+            # rebuild final state by running the chunked scan is wasteful;
+            # prefill for SSM recomputes state via one extra decode-style
+            # pass over the last token only is incorrect — so we recompute
+            # the exact final state from the full recurrence below.
+            h = h_in + y
+            outs["ssm_state"], outs["conv_state"] = _ssm_final_state(
+                cfg, p, hn)
+        elif cfg.hybrid_parallel:
+            a, (k, v) = attention_sublayer(cfg, p, hn, causal=True,
+                                           positions=positions)
+            s, _, _ = ssm_sublayer(cfg, p, hn)
+            h = h_in + 0.5 * (a + s)
+            outs["ssm_state"], outs["conv_state"] = _ssm_final_state(
+                cfg, p, hn)
+            outs["k"], outs["v"] = _ring(k, W), _ring(v, W)
+            hn2 = L.rms_norm(h, p["mlp_norm"].astype(h.dtype), cfg.norm_eps)
+            h = h + ffn_sublayer(cfg, p, hn2, mesh)
+        else:
+            a, (k, v) = attention_sublayer(cfg, p, hn, causal=True,
+                                           positions=positions)
+            h = h_in + a
+            outs["k"], outs["v"] = _ring(k, W), _ring(v, W)
+            if cfg.enc_dec:
+                pc = xs["pc"]
+                hn2 = L.rms_norm(h, pc["norm"].astype(h.dtype),
+                                 cfg.norm_eps)
+                q = _heads(jnp.dot(hn2, pc["wq"].astype(h.dtype)),
+                           cfg.n_heads, hd)
+                ck = _heads(jnp.dot(enc, pc["wk"].astype(h.dtype)),
+                            cfg.n_heads, hd)
+                cv = _heads(jnp.dot(enc, pc["wv"].astype(h.dtype)),
+                            cfg.n_heads, hd)
+                o = L.blockwise_attention(q, ck, cv, causal=False)
+                h = h + jnp.dot(_unheads(o), pc["wo"].astype(h.dtype))
+                outs["cross_k"], outs["cross_v"] = ck, cv
+            hn2 = L.rms_norm(h, p["mlp_norm"].astype(h.dtype), cfg.norm_eps)
+            h = h + ffn_sublayer(cfg, p, hn2, mesh)
+        return h, outs
+
+    xs: dict = {"p": params["blocks"]}
+    if cfg.enc_dec:
+        xs["pc"] = params["cross"]
+    layer_fn = jax.checkpoint(layer) if remat else layer
+    x, outs = _scan_or_loop(layer_fn, x, xs, cfg.n_layers, scan_layers)
+    for key, val in outs.items():
+        cache[key] = val
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    x = L.rms_norm(x, params["final_norm"].astype(compute_dtype),
+                   cfg.norm_eps)
+    from repro.models.model import lm_logits
+    return lm_logits(cfg, params, x[:, -1], compute_dtype, mesh), cache
+
+
+def _ring(k, W):
+    """Store the last W positions at ring slots (pos % W)."""
+    S = k.shape[2]
+    if W == S:
+        return k
+    if W > S:
+        return jnp.pad(k, ((0, 0), (0, 0), (0, W - S), (0, 0)))
+    tail = k[:, :, S - W:]                       # positions S-W..S-1
+    if S % W == 0:
+        # position S-W+j lands on slot (S-W+j) % W = j: the identity
+        # slice IS the ring layout. The scatter below permutes a
+        # sequence-sharded cache dim and caused 100+ collective-permutes
+        # per prefill in the multi-pod dry-run (§Perf it10).
+        return tail
+    slots = (jnp.arange(S - W, S)) % W
+    out = jnp.zeros_like(tail)
+    return out.at[:, :, slots].set(tail)
+
+
+def _ssm_final_state(cfg: ModelConfig, p, hn):
+    """Exact final (ssm_state, conv_state) after a full-sequence prefill."""
+    cd = hn.dtype
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, \
+        cfg.ssm_head_dim
+    zxbcdt = jnp.dot(hn, p["ssm_in"].astype(cd))
+    _, xin0, Bc0, Cc0, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xin0, Bc0, Cc0], axis=-1)
+    conv_state = xbc[:, -(cfg.conv_width - 1):].astype(jnp.float32)
+    xbc_c, _ = ssm_lib.causal_conv(xbc, p["conv_w"].astype(cd))
+    xbc_c = jax.nn.silu(xbc_c)
+    xin, Bc, Cc = jnp.split(xbc_c, [di, di + N], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    b, s = hn.shape[:2]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = dtv * a                                  # (b,s,H)
+    # final state = Σ_t exp(Σ_{u>t} da_u) dt_t B_t ⊗ x_t
+    rev_cum = jnp.cumsum(da[:, ::-1], axis=1)[:, ::-1] - da
+    w = jnp.exp(rev_cum) * dtv                    # (b,s,H)
+    xh = xin.reshape(b, s, H, P).astype(jnp.float32)
+    state = jnp.einsum("bsn,bshp,bsh->bhnp", Bc.astype(jnp.float32),
+                       xh, w)
+    return state, conv_state

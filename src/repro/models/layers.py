@@ -1,0 +1,213 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention (full / causal /
+sliding-window / decode), and the MLP variants of the assigned archs.
+
+Attention is implemented blockwise (online softmax over KV chunks) so the
+compiled HLO never materializes an S×S score matrix — the memory roofline
+term stays honest at 32k/500k sequence lengths; the Pallas flash kernel
+(kernels/flash_attention.py) is the TPU hot path with identical semantics.
+
+Layouts: activations (B, S, D); attention heads (B, H, S, hd).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * w
+
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, fraction: float,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, hd); positions: (S,) or broadcastable."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out, xp], axis=-1).astype(x.dtype)
+
+
+# -- blockwise attention ---------------------------------------------------------
+#
+# GQA is expressed by broadcasting KV heads up to the full query-head count
+# BEFORE the score einsums ("repeat-KV"). This keeps a single head axis H
+# that shards cleanly over the TP mesh axis (Hkv < TP-degree would otherwise
+# force GSPMD to replicate activations — observed as multi-GB per-layer
+# all-reduces in the baseline dry-run; see EXPERIMENTS.md §Perf). XLA fuses
+# the broadcast, so no HBM copy materializes.
+
+def repeat_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    if groups == 1:
+        return k
+    B, Hkv, T, hd = k.shape
+    k = jnp.broadcast_to(k[:, :, None], (B, Hkv, groups, T, hd))
+    return k.reshape(B, Hkv * groups, T, hd)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                        chunk: int = 1024, window: int = 0) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks (flash-style: no S×T score
+    matrix in HBM).
+
+    q: (B, H, S, hd); k/v: (B, Hkv, T, hd). ``q_offset``: absolute position
+    of q[0]. ``window`` > 0 bounds lookback (sliding-window semantics).
+    """
+    B, H, S, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    k = repeat_kv(k, H // Hkv)
+    v = repeat_kv(v, H // Hkv)
+    scale = 1.0 / math.sqrt(hd)
+    chunk = min(chunk, T)
+    n_chunks = -(-T // chunk)
+    pad_t = n_chunks * chunk - T
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_t), (0, 0)))
+    kc = k.reshape(B, H, n_chunks, chunk, hd)
+    vc = v.reshape(B, H, n_chunks, chunk, hd)
+    q_pos = q_offset + jnp.arange(S)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        ci, kb, vb = inputs
+        s = jnp.einsum("bhsd,bhtd->bhst", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        t_pos = ci * chunk + jnp.arange(chunk)
+        mask = t_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((S, chunk), bool)
+        if window:
+            mask = mask & (t_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (t_pos < T)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bhtd->bhsd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, hd), jnp.float32)
+    kc_t = jnp.moveaxis(kc, 2, 0)
+    vc_t = jnp.moveaxis(vc, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (jnp.arange(n_chunks), kc_t, vc_t))
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.astype(q.dtype)
+
+
+def sliding_window_attention(q, k, v, *, window: int) -> jnp.ndarray:
+    """Banded causal attention: O(S·2W) via per-block two-chunk lookback.
+
+    Exact for self-attention where q and kv cover the same positions.
+    q: (B, H, S, hd); k/v: (B, Hkv, S, hd). Requires S % window == 0 or
+    S < window (falls back to windowed blockwise).
+    """
+    B, H, S, hd = q.shape
+    Hkv = k.shape[1]
+    W = window
+    if S <= W or S % W != 0:
+        return blockwise_attention(q, k, v, causal=True, chunk=min(S, W),
+                                   window=W)
+    k = repeat_kv(k, H // Hkv)
+    v = repeat_kv(v, H // Hkv)
+    nb = S // W
+    scale = 1.0 / math.sqrt(hd)
+    qb = q.reshape(B, H, nb, W, hd)
+    kb = k.reshape(B, H, nb, W, hd)
+    vb = v.reshape(B, H, nb, W, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :, :1]),
+                              kb[:, :, :-1]], axis=2)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :, :1]),
+                              vb[:, :, :-1]], axis=2)
+    k2 = jnp.concatenate([k_prev, kb], axis=3)       # (B,H,nb,2W,hd)
+    v2 = jnp.concatenate([v_prev, vb], axis=3)
+    s = jnp.einsum("bhnsd,bhntd->bhnst", qb, k2,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = jnp.arange(W)[:, None]
+    tpos = jnp.arange(2 * W)[None, :] - W
+    mask = (tpos <= qpos) & (tpos > qpos - W)
+    first = jnp.arange(nb) == 0
+    tvalid = (tpos >= 0) | (~first[:, None, None])
+    s = jnp.where(mask[None, None, None] & tvalid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhnst,bhntd->bhnsd", p.astype(v2.dtype), v2,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, mesh=None) -> jnp.ndarray:
+    """Single-token decode: q (B, H, 1, hd) against cache (B, Hkv, S, hd),
+    masked to positions ≤ pos.
+
+    Flash-decode partitioning: the cache is sequence-sharded over the
+    model axis, scores stay S-sharded (constraint below), and the softmax
+    + weighted sum decompose into per-shard partials merged by tiny
+    (B, H[, hd]) all-reduces. Query heads are replicated — resharding the
+    cache from S- to H-sharded layout would all-gather hundreds of MB per
+    layer per step (observed in the baseline)."""
+    B, H, _, hd = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    if mesh is not None:
+        from repro.parallel.sharding import constrain, dp_axes_of
+        dp = dp_axes_of(mesh)
+        q = constrain(mesh, q, (dp, None, None, None))
+    k_cache = repeat_kv(k_cache, H // Hkv)
+    v_cache = repeat_kv(v_cache, H // Hkv)
+    qs = q[:, :, 0]
+    s = jnp.einsum("bhd,bhtd->bht", qs, k_cache,
+                   preferred_element_type=jnp.float32)
+    if mesh is not None:
+        s = constrain(mesh, s, (dp, None, "model"))
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bht,bhtd->bhd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    if mesh is not None:
+        out = constrain(mesh, out, (dp, None, None))
+    return out[:, :, None].astype(q.dtype)
+
+
+# -- MLPs -------------------------------------------------------------------------
+
+def mlp(x, params, activation: str):
+    if activation == "swiglu":
+        g = jnp.dot(x, params["w1"])
+        u = jnp.dot(x, params["w3"])
+        h = jax.nn.silu(g) * u
+    elif activation == "squared_relu":
+        h = jax.nn.relu(jnp.dot(x, params["w1"]))
+        h = h * h
+    elif activation == "gelu":
+        h = jax.nn.gelu(jnp.dot(x, params["w1"]))
+    else:
+        raise ValueError(activation)
+    return jnp.dot(h, params["w2"])

@@ -1,0 +1,425 @@
+"""Unified LM assembly for the assigned architecture pool.
+
+One parameter layout + three entry points per architecture:
+
+  * ``forward``       — full-sequence logits (training / evaluation)
+  * ``prefill``       — full-sequence forward that also builds the decode
+                        cache and returns last-token logits
+  * ``decode_step``   — one new token against the cache (serving)
+
+Layers are stacked along a leading L axis and executed with
+``jax.lax.scan`` (+ optional remat), so compile time and HLO size are
+O(1) in depth — required for the 126-layer dry-run cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+def _layer_loop(scan_fn, x, stacked, n_layers: int, scan_layers: bool):
+    """lax.scan over stacked layer params, or a Python unroll (used by the
+    roofline harness so per-layer costs are counted per layer)."""
+    if scan_layers:
+        x, _ = jax.lax.scan(scan_fn, x, stacked)
+        return x
+    for i in range(n_layers):
+        p_i = jax.tree.map(lambda a: a[i], stacked)
+        x, _ = scan_fn(x, p_i)
+    return x
+
+
+# -- initialization ---------------------------------------------------------------
+
+def init_block_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    """Stacked per-layer parameters (leading axis = n_layers)."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    nl = cfg.n_layers
+    ks = iter(_split(key, 40))
+
+    def w(shape, scale=None):
+        s = scale if scale is not None else (shape[-2] ** -0.5)
+        return (jax.random.normal(next(ks), (nl,) + shape, jnp.float32)
+                * s).astype(dtype)
+
+    p: dict = {"attn_norm": jnp.ones((nl, d), dtype),
+               "mlp_norm": jnp.ones((nl, d), dtype)}
+    if cfg.family != "ssm":
+        p["wq"] = w((d, cfg.n_heads * hd))
+        p["wk"] = w((d, cfg.n_kv_heads * hd))
+        p["wv"] = w((d, cfg.n_kv_heads * hd))
+        p["wo"] = w((cfg.n_heads * hd, d))
+        if cfg.qk_norm:
+            p["q_norm"] = jnp.ones((nl, hd), dtype)
+            p["k_norm"] = jnp.ones((nl, hd), dtype)
+    if cfg.family in ("ssm", "hybrid"):
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        conv_dim = di + 2 * N
+        p["ssm_in"] = w((d, 2 * di + 2 * N + H))
+        p["conv_w"] = (jax.random.normal(next(ks),
+                                         (nl, cfg.conv_width, conv_dim),
+                                         jnp.float32) * 0.2).astype(dtype)
+        p["dt_bias"] = jnp.zeros((nl, H), dtype)
+        p["A_log"] = jnp.zeros((nl, H), dtype)
+        p["ssm_norm"] = jnp.ones((nl, di), dtype)
+        p["ssm_out"] = w((di, d))
+    if cfg.n_experts:
+        e, f = cfg.n_experts, cfg.d_ff
+        p["router"] = w((d, e), scale=0.02)
+        p["w1"] = w((e, d, f))
+        p["w2"] = w((e, f, d), scale=f ** -0.5)
+        if cfg.activation == "swiglu":
+            p["w3"] = w((e, d, f))
+    elif cfg.d_ff:
+        p["w1"] = w((d, cfg.d_ff))
+        p["w2"] = w((cfg.d_ff, d), scale=cfg.d_ff ** -0.5)
+        if cfg.activation == "swiglu":
+            p["w3"] = w((d, cfg.d_ff))
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5 = _split(key, 5)
+    d = cfg.d_model
+    params = {
+        "embed": (jax.random.normal(k1, (cfg.padded_vocab, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "blocks": init_block_params(cfg, k2, dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k3, (d, cfg.padded_vocab),
+                                               jnp.float32)
+                             * d ** -0.5).astype(dtype)
+    if cfg.enc_dec:
+        enc_cfg = dataclasses.replace(
+            cfg, family="dense", n_layers=cfg.enc_layers, enc_dec=False,
+            n_kv_heads=cfg.n_heads)
+        params["enc_blocks"] = init_block_params(enc_cfg, k4, dtype)
+        params["enc_norm"] = jnp.ones((d,), dtype)
+        params["enc_pos"] = (jax.random.normal(
+            k5, (cfg.enc_frames, d), jnp.float32) * 0.02).astype(dtype)
+        nl, hd = cfg.n_layers, cfg.head_dim_
+        kc = iter(_split(k5, 8))
+
+        def wx(shape):
+            return (jax.random.normal(next(kc), (nl,) + shape, jnp.float32)
+                    * shape[-2] ** -0.5).astype(dtype)
+        params["cross"] = {
+            "norm": jnp.ones((nl, d), dtype),
+            "wq": wx((d, cfg.n_heads * hd)),
+            "wk": wx((d, cfg.n_heads * hd)),
+            "wv": wx((d, cfg.n_heads * hd)),
+            "wo": wx((cfg.n_heads * hd, d)),
+        }
+        params["dec_pos"] = (jax.random.normal(
+            k5, (cfg.dec_positions, d), jnp.float32) * 0.02).astype(dtype)
+    return params
+
+
+# -- attention sublayer --------------------------------------------------------------
+
+def use_weight(mesh, w, cd, axes=None):
+    """FSDP all-gather-at-use: cast a weight for compute and pin its
+    at-use layout (FSDP axis gathered, TP axis kept). Without this the
+    SPMD partitioner sometimes resolves the FSDP(data)×batch(data) clash
+    by replicating *activations* over data — multi-GB per-layer
+    all-reduces — instead of gathering the (much smaller) weight shard."""
+    w = w.astype(cd)
+    if mesh is None:
+        return w
+    from repro.parallel.sharding import constrain
+    if axes is None:
+        axes = (None,) * w.ndim
+    return constrain(mesh, w, axes)
+
+
+def _heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd).transpose(0, 2, 1, 3)   # (B,n,S,hd)
+
+
+def _unheads(x):
+    b, n, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, n * hd)
+
+
+def attention_sublayer(cfg: ModelConfig, p, x, *, causal: bool,
+                       positions, mesh=None):
+    """Returns (out, (k, v)) — k/v in (B, Hkv, S, hd) post-RoPE layout."""
+    from repro.parallel.sharding import (constrain, dp_axes_of,
+                                         head_constraint)
+    hd = cfg.head_dim_
+    cd = x.dtype
+
+    def proj(w, n):
+        # All-gather the FSDP weight shard at use, then constrain the flat
+        # (B, S, n·hd) projection before the head reshape — GQA kv widths
+        # (Hkv < TP degree) otherwise make GSPMD batch-replicate the
+        # output (multi-GB per-layer all-reduces in the baseline dry-run).
+        y = jnp.dot(x, use_weight(mesh, w, cd, (None, "model")))
+        if mesh is not None:
+            y = constrain(mesh, y, (dp_axes_of(mesh), None, "model"))
+        return _heads(y, n, hd)
+
+    q = head_constraint(mesh, proj(p["wq"], cfg.n_heads))
+    k = head_constraint(mesh, proj(p["wk"], cfg.n_kv_heads))
+    v = head_constraint(mesh, proj(p["wv"], cfg.n_kv_heads))
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"].astype(cd), cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"].astype(cd), cfg.norm_eps)
+    if cfg.rope_fraction > 0:
+        q = L.apply_rope(q, positions, fraction=cfg.rope_fraction,
+                         theta=cfg.rope_theta)
+        k = L.apply_rope(k, positions, fraction=cfg.rope_fraction,
+                         theta=cfg.rope_theta)
+    if cfg.sliding_window and causal:
+        o = L.sliding_window_attention(q, k, v, window=cfg.sliding_window)
+    else:
+        o = L.blockwise_attention(q, k, v, causal=causal)
+    out = jnp.dot(_unheads(o), use_weight(mesh, p["wo"], cd,
+                                          ("model", None)))
+    return out, (k, v)
+
+
+def ssm_sublayer(cfg: ModelConfig, p, x, conv_state=None, ssm_state=None,
+                 *, decode: bool = False, mesh=None):
+    """Mamba2 mixer. x: (B, S, D) (S=1 when decoding)."""
+    cd = x.dtype
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, \
+        cfg.ssm_head_dim
+    zxbcdt = jnp.dot(x, use_weight(mesh, p["ssm_in"], cd))
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    if decode:
+        new_conv = jnp.concatenate([conv_state[:, 1:],
+                                    xbc.astype(jnp.float32)], axis=1)
+        xbc_tap = jnp.concatenate([conv_state.astype(cd), xbc], axis=1)
+        y = jnp.zeros_like(xbc)
+        for i in range(cfg.conv_width):
+            y = y + xbc_tap[:, i:i + 1] * p["conv_w"][i].astype(cd)
+        xbc = jax.nn.silu(y)
+        xin, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+        dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                              + p["dt_bias"].astype(jnp.float32))
+        xh = xin[:, 0].reshape(-1, H, P)
+        yh, new_state = ssm_lib.ssd_decode_step(
+            ssm_state, xh, dtv, p["A_log"], Bc[:, 0], Cc[:, 0])
+        y = yh.reshape(xh.shape[0], 1, di).astype(cd)
+        y = L.rms_norm(y * jax.nn.silu(z), p["ssm_norm"].astype(cd),
+                       cfg.norm_eps)
+        return jnp.dot(y, use_weight(mesh, p["ssm_out"], cd)), \
+            new_conv, new_state
+    xbc, _ = ssm_lib.causal_conv(xbc, p["conv_w"].astype(cd))
+    xbc = jax.nn.silu(xbc)
+    xin, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    b, s = x.shape[:2]
+    yh = ssm_lib.ssd_chunked(xin.reshape(b, s, H, P), dtv, p["A_log"],
+                             Bc, Cc, chunk=cfg.ssm_chunk)
+    y = yh.reshape(b, s, di)
+    y = L.rms_norm(y * jax.nn.silu(z), p["ssm_norm"].astype(cd),
+                   cfg.norm_eps)
+    return jnp.dot(y, use_weight(mesh, p["ssm_out"], cd)), None, None
+
+
+def ffn_sublayer(cfg: ModelConfig, p, x, mesh=None):
+    if cfg.n_experts:
+        b, s, d = x.shape
+        y, _ = moe_lib.moe_ffn(
+            x.reshape(b * s, d),
+            {k: p[k] for k in ("router", "w1", "w2", "w3") if k in p},
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            activation=cfg.activation, mesh=mesh)
+        return y.reshape(b, s, d)
+    cd = x.dtype
+    ax = {"w1": (None, "model"), "w3": (None, "model"),
+          "w2": ("model", None)}
+    return L.mlp(x, {k: use_weight(mesh, p[k], cd, ax[k])
+                     for k in ("w1", "w2", "w3") if k in p},
+                 cfg.activation)
+
+
+# -- full-sequence block ------------------------------------------------------------
+
+def make_block_fn(cfg: ModelConfig, *, causal: bool, mesh=None,
+                  collect_kv: bool = False):
+    def seq_shard(h):
+        # Pin the residual stream's layout: without this the embed
+        # lookup's D-sharding propagates (batch-replicated!) through the
+        # whole stack and every projection contraction-splits (§Perf it7).
+        if mesh is None:
+            return h
+        from repro.parallel.sharding import constrain, dp_axes_of
+        if cfg.seq_parallel:
+            return constrain(mesh, h, (dp_axes_of(mesh), "model", None))
+        return constrain(mesh, h, (dp_axes_of(mesh), None, None))
+
+    def block(x, p):
+        x = seq_shard(x)
+        positions = jnp.arange(x.shape[1])
+        kv = None
+        if cfg.family == "ssm":
+            h = L.rms_norm(x, p["attn_norm"].astype(x.dtype), cfg.norm_eps)
+            y, _, _ = ssm_sublayer(cfg, p, h, mesh=mesh)
+            x = x + y
+        elif cfg.hybrid_parallel:
+            h = L.rms_norm(x, p["attn_norm"].astype(x.dtype), cfg.norm_eps)
+            a, kv = attention_sublayer(cfg, p, h, causal=causal,
+                                       positions=positions, mesh=mesh)
+            s, _, _ = ssm_sublayer(cfg, p, h, mesh=mesh)
+            x = x + 0.5 * (a + s)
+            h = L.rms_norm(x, p["mlp_norm"].astype(x.dtype), cfg.norm_eps)
+            x = x + ffn_sublayer(cfg, p, h, mesh)
+        else:
+            h = L.rms_norm(x, p["attn_norm"].astype(x.dtype), cfg.norm_eps)
+            a, kv = attention_sublayer(cfg, p, h, causal=causal,
+                                       positions=positions, mesh=mesh)
+            x = x + a
+            h = L.rms_norm(x, p["mlp_norm"].astype(x.dtype), cfg.norm_eps)
+            x = x + ffn_sublayer(cfg, p, h, mesh)
+        return seq_shard(x), (kv if collect_kv else None)
+    return block
+
+
+def forward(cfg: ModelConfig, params, tokens, *, mesh=None,
+            compute_dtype=jnp.bfloat16, remat: bool = True,
+            frames=None, scan_layers: bool = True):
+    """Token ids (B, S) → logits (B, S, V). For enc-dec models ``frames``
+    (B, enc_frames, D) are the stubbed modality-frontend embeddings.
+
+    ``scan_layers=False`` unrolls the stack in Python — used by the
+    roofline harness, because XLA's cost analysis counts while-loop bodies
+    once regardless of trip count."""
+    x = params["embed"].astype(compute_dtype)[tokens]
+    if mesh is not None:
+        from repro.parallel.sharding import constrain, dp_axes_of
+        x = constrain(mesh, x, (dp_axes_of(mesh), None, None))
+    if cfg.enc_dec:
+        return _whisper_forward(cfg, params, tokens, frames,
+                                compute_dtype, remat, scan_layers, mesh)
+    block = make_block_fn(cfg, causal=True, mesh=mesh)
+    if remat:
+        block = jax.checkpoint(block)
+
+    def scan_fn(carry, p):
+        y, _ = block(carry, p)
+        return y, None
+
+    x = _layer_loop(scan_fn, x, params["blocks"], cfg.n_layers,
+                    scan_layers)
+    x = L.rms_norm(x, params["final_norm"].astype(compute_dtype),
+                   cfg.norm_eps)
+    return lm_logits(cfg, params, x, compute_dtype, mesh)
+
+
+def lm_logits(cfg, params, x, compute_dtype, mesh=None):
+    """Final projection with an explicit (replicated-D, vocab-TP) weight
+    layout: without the constraint GSPMD resolves the tied-embedding
+    matmul by batch-replicating the (B, S, V) logits (observed as 12.9 GB
+    all-gathers in the baseline dry-run)."""
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(compute_dtype)
+    if mesh is not None:
+        from repro.parallel.sharding import constrain, dp_axes_of
+        head = constrain(mesh, head, (None, "model"))
+        logits = jnp.dot(x, head)
+        logits = constrain(mesh, logits,
+                           (dp_axes_of(mesh),) + (None,) * (x.ndim - 2)
+                           + ("model",))
+    else:
+        logits = jnp.dot(x, head)
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype),
+                           logits)
+    return logits
+
+
+# -- whisper (enc-dec) ---------------------------------------------------------------
+
+def _whisper_forward(cfg, params, tokens, frames, compute_dtype, remat,
+                     scan_layers=True, mesh=None):
+    def pin(h):
+        # residual-stream layout pinning (§Perf it7) for both stacks
+        if mesh is None:
+            return h
+        from repro.parallel.sharding import constrain, dp_axes_of
+        return constrain(mesh, h, (dp_axes_of(mesh), None, None))
+
+    enc = pin(frames.astype(compute_dtype)
+              + params["enc_pos"].astype(compute_dtype)[None])
+    enc_block = make_block_fn(
+        dataclasses.replace(cfg, family="dense", enc_dec=False,
+                            n_kv_heads=cfg.n_heads),
+        causal=False, mesh=mesh)
+    if remat:
+        enc_block = jax.checkpoint(enc_block)
+
+    def enc_scan(carry, p):
+        y, _ = enc_block(carry, p)
+        return y, None
+    enc = _layer_loop(enc_scan, enc, params["enc_blocks"], cfg.enc_layers,
+                      scan_layers)
+    enc = pin(L.rms_norm(enc, params["enc_norm"].astype(compute_dtype),
+                         cfg.norm_eps))
+
+    S = tokens.shape[1]
+    x = pin(params["embed"].astype(compute_dtype)[tokens]
+            + params["dec_pos"].astype(compute_dtype)[None, :S])
+    dec_cfg = dataclasses.replace(cfg, enc_dec=False,
+                                  n_kv_heads=cfg.n_heads)
+    hd = cfg.head_dim_
+
+    def dec_block(x, ps):
+        p, pc = ps
+        x = pin(x)
+        positions = jnp.arange(x.shape[1])
+        h = L.rms_norm(x, p["attn_norm"].astype(x.dtype), cfg.norm_eps)
+        a, _ = attention_sublayer(dec_cfg, p, h, causal=True,
+                                  positions=positions, mesh=mesh)
+        x = x + a
+        h = L.rms_norm(x, pc["norm"].astype(x.dtype), cfg.norm_eps)
+        cd = x.dtype
+        q = _heads(jnp.dot(h, use_weight(mesh, pc["wq"], cd,
+                                         (None, "model"))),
+                   cfg.n_heads, hd)
+        k = _heads(jnp.dot(enc, use_weight(mesh, pc["wk"], cd,
+                                           (None, "model"))),
+                   cfg.n_heads, hd)
+        v = _heads(jnp.dot(enc, use_weight(mesh, pc["wv"], cd,
+                                           (None, "model"))),
+                   cfg.n_heads, hd)
+        o = L.blockwise_attention(q, k, v, causal=False)
+        x = x + jnp.dot(_unheads(o), use_weight(mesh, pc["wo"], cd,
+                                                ("model", None)))
+        h = L.rms_norm(x, p["mlp_norm"].astype(x.dtype), cfg.norm_eps)
+        x = x + ffn_sublayer(dec_cfg, p, h, mesh)
+        return pin(x), None
+    if remat:
+        dec_block = jax.checkpoint(dec_block)
+
+    def dec_scan(carry, ps):
+        y, _ = dec_block(carry, ps)
+        return y, None
+    x = _layer_loop(dec_scan, x, (params["blocks"], params["cross"]),
+                    cfg.n_layers, scan_layers)
+    x = L.rms_norm(x, params["final_norm"].astype(compute_dtype),
+                   cfg.norm_eps)
+    return lm_logits(cfg, params, x, compute_dtype, mesh)

@@ -1,0 +1,125 @@
+"""Mamba2 state-space duality (SSD) layer — chunked scan formulation
+(arXiv:2405.21060), plus the constant-state single-token decode step.
+
+The chunked algorithm splits the sequence into chunks of Q tokens:
+intra-chunk terms form a small attention-like quadratic within each chunk
+(MXU-friendly — the Pallas `ssd_scan` kernel tiles exactly this), and
+inter-chunk terms propagate a (heads, head_dim, state) running state with
+a `lax.scan` over chunks. Work is O(S·Q + S·N·P) instead of O(S²).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, A_log, B, C, *, chunk: int) -> jnp.ndarray:
+    """SSD forward.
+
+    x:  (batch, S, H, P)    inputs per head
+    dt: (batch, S, H)       softplus-activated step sizes (>0)
+    A_log: (H,)             log of -A (per-head decay rate)
+    B:  (batch, S, N)       input projection (ngroups=1, shared over heads)
+    C:  (batch, S, N)       output projection
+    returns y: (batch, S, H, P)
+    """
+    Bsz, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    orig_S = S
+    if S % Q:
+        # pad with dt=0 tokens: zero step size contributes nothing to
+        # states and padded outputs are sliced off below
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+    a = -jnp.exp(A_log.astype(jnp.float32))            # (H,) negative
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = B.reshape(Bsz, nc, Q, N)
+    Cc = C.reshape(Bsz, nc, Q, N)
+
+    # log-decay within each chunk
+    da = dtc * a                                       # (b,c,Q,H)
+    cum = jnp.cumsum(da, axis=2)                       # inclusive
+    seg_total = cum[:, :, -1, :]                       # (b,c,H)
+
+    # intra-chunk (masked quadratic): y_s += Σ_{t<=s} C_s·B_t · decay · dt_t·x_t
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcsn,bctn->bcst", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]  # (b,c,s,t,H)
+    y_intra = jnp.einsum("bcsth,bcthp->bcshp", w,
+                         xc.astype(jnp.float32))
+
+    # chunk states: S_c = Σ_t exp(cum_last - cum_t) dt_t B_t ⊗ x_t
+    sdecay = jnp.exp(seg_total[:, :, None, :] - cum)   # (b,c,Q,H)
+    wB = Bc[:, :, :, None, :] * (sdecay * dtc)[..., None]  # (b,c,Q,H,N)
+    chunk_state = jnp.einsum("bcqhn,bcqhp->bchnp", wB,
+                             xc.astype(jnp.float32))
+
+    # inter-chunk linear recurrence S_k = a_k·S_{k-1} + b_k as an
+    # associative scan — parallel over chunks, so sequence-sharded inputs
+    # (long-context cells) turn into a parallel prefix with collectives
+    # instead of a serial loop.
+    a = jnp.exp(seg_total)                             # (b,c,H)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2[:, :, :, None, None] * b1 + b2
+
+    a_inc, s_inc = jax.lax.associative_scan(
+        combine, (a, chunk_state), axis=1)
+    # prev_states[k] = state entering chunk k (exclusive scan)
+    prev_states = jnp.concatenate(
+        [jnp.zeros_like(s_inc[:, :1]), s_inc[:, :-1]], axis=1)
+
+    # inter-chunk output: y_s += exp(cum_s) · C_s · S_prev
+    out_decay = jnp.exp(cum)                           # (b,c,Q,H)
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", Cc,
+                         prev_states) * out_decay[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :orig_S]
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x, dt, A_log, B, C):
+    """Single-token recurrence.
+
+    state: (batch, H, N, P); x: (batch, H, P); dt: (batch, H);
+    B/C: (batch, N). Returns (y (batch, H, P), new_state).
+    """
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    decay = jnp.exp(dtf * a)                           # (b,H)
+    upd = jnp.einsum("bn,bhp->bhnp", B.astype(jnp.float32),
+                     x.astype(jnp.float32)) * dtf[:, :, None, None]
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+def causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv1d, width K. x: (B, S, D); w: (K, D).
+
+    With ``conv_state`` (B, K-1, D) performs the streaming update and
+    returns (y (B, S, D), new_state)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros_like(x[:, :K - 1])
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + xp[:, i:i + x.shape[1]] * w[i]
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return y, new_state

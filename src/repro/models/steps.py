@@ -1,0 +1,101 @@
+"""Training / serving step builders shared by the drivers and the dry-run."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode as decode_lib
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.optim.adamw import AdamW
+
+
+def softmax_xent(logits, labels):
+    """Cross entropy in f32 over a (possibly vocab-sharded) logits tensor.
+
+    The gold logit is extracted with an iota-compare masked sum instead of
+    take_along_axis: under a vocab-sharded layout the gather would make
+    GSPMD materialize/permute full-vocab tensors, while compare+sum
+    partitions cleanly (only a tiny (B, S) all-reduce crosses shards)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    eq = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                  logits.ndim - 1) == labels[..., None]
+    gold = jnp.sum(jnp.where(eq, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def make_loss_fn(cfg: ModelConfig, *, mesh=None, remat=True,
+                 compute_dtype=jnp.bfloat16, scan_layers=True):
+    def loss_fn(params, batch):
+        logits = model_lib.forward(
+            cfg, params, batch["tokens"], mesh=mesh, remat=remat,
+            compute_dtype=compute_dtype, frames=batch.get("frames"),
+            scan_layers=scan_layers)
+        if mesh is not None:
+            from repro.parallel.sharding import constrain, dp_axes_of
+            logits = constrain(mesh, logits,
+                               (dp_axes_of(mesh), None, "model"))
+        return softmax_xent(logits, batch["labels"])
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW, *, mesh=None,
+                    remat=True, compute_dtype=jnp.bfloat16,
+                    scan_layers=True, accum_steps: int = 1):
+    """``accum_steps`` > 1 splits the global batch into microbatches and
+    accumulates gradients under a lax.scan (gradient accumulation): the
+    activation working set shrinks by the accumulation factor at the cost
+    of one extra f32 gradient buffer."""
+    loss_fn = make_loss_fn(cfg, mesh=mesh, remat=remat,
+                           compute_dtype=compute_dtype,
+                           scan_layers=scan_layers)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps,
+                                     x.shape[0] // accum_steps)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                loss_sum, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_sum + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss_sum / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        params, opt_state, gnorm = optimizer.update(grads, opt_state,
+                                                    params)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, mesh=None,
+                      compute_dtype=jnp.bfloat16, scan_layers=True):
+    def prefill_step(params, batch):
+        return decode_lib.prefill(cfg, params, batch["tokens"], mesh=mesh,
+                                  compute_dtype=compute_dtype,
+                                  frames=batch.get("frames"),
+                                  scan_layers=scan_layers)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, mesh=None,
+                    compute_dtype=jnp.bfloat16, scan_layers=True):
+    def serve_step(params, cache, tokens):
+        logits, cache = decode_lib.decode_step(
+            cfg, params, cache, tokens, mesh=mesh,
+            compute_dtype=compute_dtype, scan_layers=scan_layers)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, cache
+    return serve_step

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, cosine_schedule
+
+__all__ = ["AdamW", "cosine_schedule"]

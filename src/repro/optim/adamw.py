@@ -1,0 +1,71 @@
+"""AdamW with gradient clipping and cosine schedule (self-contained)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # optimizer-state dtype: bf16 halves m/v residency (8-bit-Adam-style
+    # distributed-optimization trick; EXPERIMENTS.md §Perf) — updates are
+    # still computed in f32.
+    state_dtype: object = jnp.float32
+
+    def init(self, params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self.state_dtype), params)
+        return {"m": zeros,
+                "v": jax.tree.map(jnp.copy, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = m / (1 - self.b1 ** step.astype(jnp.float32))
+            vhat = v / (1 - self.b2 ** step.astype(jnp.float32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+                m.astype(self.state_dtype), v.astype(self.state_dtype)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, gnorm

@@ -1,0 +1,214 @@
+"""Logical→physical sharding rules for the production meshes.
+
+Parallelism layout (GSPMD via pjit sharding annotations):
+
+  * TP  ("model" axis): attention head projections, MLP hidden dim, MoE
+    expert axis (expert parallelism), vocab dim of embed/lm_head.
+  * FSDP ("data" axis): the non-TP dim of every large parameter is sharded
+    over the data axis; parameters are all-gathered at use, gradients
+    reduce-scattered — XLA's latency-hiding scheduler overlaps both with
+    the layer-scan compute.
+  * DP  ("pod" + "data"): batch dim of activations; the pod axis is pure
+    data parallelism (only gradient all-reduce crosses pods).
+  * SP  (long_500k): batch=1, so the sequence dim shards over "data"
+    (context parallelism); the SSD inter-chunk recurrence is an
+    associative scan, which parallelizes across sequence shards.
+  * SSM internals stay TP-free (heads/state dims of the assigned SSM archs
+    don't divide 16; the mixers are small) — noted in DESIGN.md.
+
+Every rule is divisibility-guarded: if a dim doesn't divide the axis size
+the axis is dropped for that dim (e.g. whisper's 20 heads on a 16-way
+model axis), so every (arch × shape × mesh) cell lowers cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    mesh: Mesh
+    dp_axes: tuple[str, ...]        # ("data",) or ("pod", "data")
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"
+    shard_sequence: bool = False    # long_500k context parallelism
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp_axes]))
+
+    def axis_size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in axis]))
+        return self.mesh.shape[axis]
+
+
+def make_plan(mesh: Mesh, *, shard_sequence: bool = False) -> MeshPlan:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return MeshPlan(mesh, dp, shard_sequence=shard_sequence)
+
+
+def _spec(plan: MeshPlan, shape, axes, *, strict: bool = True) -> P:
+    """Build a PartitionSpec with per-dim guards.
+
+    ``strict`` (pjit input shardings): the axis must divide the dim — jax
+    rejects padded *argument* layouts. Non-strict (internal
+    with_sharding_constraint): GSPMD pads non-divisible dims (e.g. vocab
+    49155 over 16 shards), so only dim ≥ axis size is required. Dims
+    smaller than the axis (8 kv heads on a 16-way model axis) always stay
+    replicated."""
+    out = []
+    for dim, axis in zip(shape, axes):
+        if axis is None:
+            out.append(None)
+            continue
+        size = plan.axis_size(axis)
+        ok = (dim % size == 0) if strict else (size <= dim)
+        out.append(axis if size > 1 and ok else None)
+    return P(*out)
+
+
+def _named(plan: MeshPlan, shape, axes) -> NamedSharding:
+    return NamedSharding(plan.mesh, _spec(plan, shape, axes))
+
+
+# -- parameters -------------------------------------------------------------------
+
+def param_shardings(plan: MeshPlan, params_shapes):
+    """Sharding tree matching a params pytree of ShapeDtypeStructs."""
+    tp, fs = plan.tp_axis, plan.fsdp_axis
+
+    def rule(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        s = leaf.shape
+        nd = len(s)
+        if name == "embed":
+            return _named(plan, s, (tp, fs))
+        if name == "lm_head":
+            return _named(plan, s, (fs, tp))
+        def col_parallel(shape):
+            # Column-parallel weights (qkv, gate/up): sharding the D rows
+            # over the fsdp axis invites the partitioner to contraction-
+            # split the dot and replicate the 1M-token activation
+            # (multi-GB all-reduces per layer — §Perf it5/it6). Shard the
+            # columns over BOTH axes instead: at-rest memory is identical
+            # (fully sharded), the at-use gather is over fsdp only, and D
+            # stays whole so the clean batch-parallel dot is forced.
+            if shape[-1] % (plan.axis_size(fs) * plan.axis_size(tp)) == 0:
+                return _named(plan, shape,
+                              (None,) * (len(shape) - 1) + ((fs, tp),))
+            return _named(plan, shape,
+                          (None,) * (len(shape) - 2) + (fs, tp))
+
+        if name in ("wq", "wk", "wv"):
+            return col_parallel(s)
+        if name == "wo":
+            return _named(plan, s, (None, tp, fs))
+        if name in ("w1", "w3"):
+            if nd == 4:  # MoE (L, E, D, F): expert parallel
+                return _named(plan, s, (None, tp, fs, None))
+            return col_parallel(s)
+        if name == "w2":
+            if nd == 4:  # (L, E, F, D)
+                return _named(plan, s, (None, tp, None, fs))
+            return _named(plan, s, (None, tp, fs))
+        if name == "router":
+            return _named(plan, s, (None, fs, None))
+        if name == "ssm_in":
+            return _named(plan, s, (None, fs, None))
+        if name == "ssm_out":
+            return _named(plan, s, (None, None, fs))
+        if name in ("enc_pos", "dec_pos"):
+            return _named(plan, s, (None, fs))
+        # norms, biases, A_log, conv_w, step counters → replicated
+        return NamedSharding(plan.mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def opt_state_shardings(plan: MeshPlan, params_shapes, opt_shapes):
+    """m/v mirror the parameter shardings; scalars replicate."""
+    pshard = param_shardings(plan, params_shapes)
+    return {
+        "m": pshard,
+        "v": pshard,
+        "step": NamedSharding(plan.mesh, P()),
+    }
+
+
+# -- activations / batches -----------------------------------------------------------
+
+def batch_shardings(plan: MeshPlan, batch_shapes):
+    dp = plan.dp_axes
+
+    def rule(path, leaf):
+        s = leaf.shape
+        if len(s) >= 2 and plan.shard_sequence and s[0] == 1:
+            # long-context: batch 1 → shard sequence (context parallelism)
+            return _named(plan, s, (None, plan.fsdp_axis)
+                          + (None,) * (len(s) - 2))
+        if len(s) >= 1:
+            return _named(plan, s, (dp,) + (None,) * (len(s) - 1))
+        return NamedSharding(plan.mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_shardings(plan: MeshPlan, cache_shapes):
+    """KV/SSM cache: batch over DP; cache length over the model axis
+    (sequence-sharded KV — works for any kv-head count); SSM state P-dim
+    over the model axis."""
+    dp, tp = plan.dp_axes, plan.tp_axis
+
+    def rule(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        s = leaf.shape
+        if name in ("k", "v", "cross_k", "cross_v"):
+            return _named(plan, s, (None, dp, None, tp, None))
+        if name == "ssm_state":
+            return _named(plan, s, (None, dp, None, None, tp))
+        if name == "conv_state":
+            return _named(plan, s, (None, dp, None, tp))
+        return NamedSharding(plan.mesh, P())
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def constrain(mesh, x, axes):
+    """with_sharding_constraint with divisibility-guarded axes.
+
+    ``axes``: one entry per dim — an axis name, a tuple of axis names, or
+    None. Used inside model code where only the mesh is in scope."""
+    if mesh is None:
+        return x
+    plan = make_plan(mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, _spec(plan, x.shape, axes,
+                                          strict=False)))
+
+
+def dp_axes_of(mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def head_constraint(mesh, x):
+    """(B, H, S, hd) attention tensors: batch over DP, heads over TP."""
+    if mesh is None:
+        return x
+    return constrain(mesh, x, (dp_axes_of(mesh), "model", None, None))
+
+
+def logits_constraint(plan: MeshPlan, x):
+    """Keep logits vocab-sharded to avoid a (B, S, V) replicated tensor."""
+    return jax.lax.with_sharding_constraint(
+        x, _named(plan, x.shape,
+                  (plan.dp_axes,) + (None,) * (x.ndim - 2)
+                  + (plan.tp_axis,)))

@@ -1,0 +1,530 @@
+"""Physical optimizer and plan (paper section 3.2, blue boxes; Fig. 3).
+
+Maps the optimized logical plan to pipelines of physical operators for
+data-parallel execution by serverless workers:
+
+  * logical→physical operator mapping (repartition vs. broadcast join,
+    direct vs. sort aggregation strategies),
+  * pipeline-breaker identification and shuffle-point insertion,
+  * worker counts per pipeline from input size and per-function network
+    burst capacity,
+  * shuffle tier selection (standard vs. hot/express storage) from the
+    object-request-rate reasoning of the paper,
+  * per-pipeline *semantic hashes* — computed from the logical subtree a
+    pipeline completes plus the catalog's file lists, *before* physical
+    properties (worker counts, partition fan-out, exchange tier) are
+    attached, so cached results match across physical configurations
+    (section 3.4).
+
+All artifacts are JSON/msgpack-serializable: fragment specs are the
+function invocation payloads (section 3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any
+
+from repro.data.catalog import Catalog
+from repro.exec.expr import expr_from_dict, expr_to_dict
+from repro.sql import ast
+from repro.sql.logical import (LAggregate, LFilter, LJoin, LLimit, LNode,
+                               LProject, LScan, LSort)
+
+DIRECT_AGG_MAX_GROUPS = 4096
+
+
+@dataclasses.dataclass
+class PlannerConfig:
+    # Per-worker input target: the network burst capacity of one function
+    # (paper: worker count is input size / burst capacity).
+    bytes_per_worker: int = 32 << 20
+    max_workers: int = 2500
+    # Build sides smaller than this are broadcast instead of repartitioned.
+    broadcast_threshold_bytes: int = 16 << 20
+    # Exchange fan-out (defaults derived from producer width if None).
+    exchange_partitions: int | None = None
+    # Above this many shuffle objects, tier the exchange to hot storage.
+    hot_shuffle_object_threshold: int = 64
+    filter_selectivity_guess: float = 0.3
+
+
+@dataclasses.dataclass
+class Partitioning:
+    kind: str                      # none | hash
+    keys: tuple[str, ...] = ()
+    n_dest: int = 1
+    tier: str = "s3-standard"
+
+    def to_dict(self):
+        return {"kind": self.kind, "keys": list(self.keys),
+                "n_dest": self.n_dest, "tier": self.tier}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(d["kind"], tuple(d["keys"]), d["n_dest"], d["tier"])
+
+
+@dataclasses.dataclass
+class Pipeline:
+    pid: int
+    sem_hash: str
+    op: dict                       # serializable operator tree
+    n_fragments: int
+    deps: list[int]
+    partitioning: Partitioning
+    output_schema: list[dict]      # ColumnSpec dicts
+    scan_units: list[str]          # table files (scan pipelines only)
+    final: bool = False
+    # estimated input bytes (for elastic worker sizing / cost model)
+    input_bytes: int = 0
+
+
+@dataclasses.dataclass
+class PhysicalPlan:
+    pipelines: dict[int, Pipeline]
+    root_pid: int
+    output_names: list[str]
+
+    def stages(self) -> list[list[int]]:
+        """Topological stage order (pipelines grouped by dependency depth)."""
+        depth: dict[int, int] = {}
+
+        def d(pid: int) -> int:
+            if pid not in depth:
+                deps = self.pipelines[pid].deps
+                depth[pid] = 1 + max((d(x) for x in deps), default=-1)
+            return depth[pid]
+
+        for pid in self.pipelines:
+            d(pid)
+        stages: dict[int, list[int]] = {}
+        for pid, dep in depth.items():
+            stages.setdefault(dep, []).append(pid)
+        return [sorted(stages[k]) for k in sorted(stages)]
+
+
+def _h(obj: Any) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:24]
+
+
+def _schema_dicts(names_types) -> list[dict]:
+    return [{"name": n, "kind": k, "dtype": dt} for n, k, dt in names_types]
+
+
+class PhysicalPlanner:
+    def __init__(self, catalog: Catalog,
+                 config: PlannerConfig | None = None):
+        self.catalog = catalog
+        self.config = config or PlannerConfig()
+        self.pipelines: dict[int, Pipeline] = {}
+        self._next_pid = 0
+
+    # -- helpers ------------------------------------------------------------
+    def _tables_version(self, node: LNode) -> str:
+        tables = sorted({n.table for n in _walk(node)
+                         if isinstance(n, LScan)})
+        return _h([(t, tuple(self.catalog.table(t).files))
+                   for t in tables])
+
+    def _subtree_bytes(self, node: LNode) -> int:
+        """Crude input-size estimate: scanned bytes scaled per filter."""
+        if isinstance(node, LScan):
+            meta = self.catalog.table(node.table)
+            frac = len(node.schema_cols) / max(len(meta.schema), 1)
+            return int(meta.total_bytes * frac)
+        if isinstance(node, LFilter):
+            return int(self._subtree_bytes(node.child)
+                       * self.config.filter_selectivity_guess)
+        if isinstance(node, LJoin):
+            return self._subtree_bytes(node.left)
+        return sum(self._subtree_bytes(c) for c in node.children()) \
+            if node.children() else 0
+
+    def _workers_for_bytes(self, nbytes: int) -> int:
+        c = self.config
+        return max(1, min(c.max_workers,
+                          -(-nbytes // c.bytes_per_worker)))
+
+    def _exchange_tier(self, producers: int, n_dest: int) -> str:
+        if producers * n_dest > self.config.hot_shuffle_object_threshold:
+            return "s3-express"
+        return "s3-standard"
+
+    def _new_pid(self) -> int:
+        pid = self._next_pid
+        self._next_pid += 1
+        return pid
+
+    # -- main entry ----------------------------------------------------------
+    def compile(self, lqp: LNode) -> PhysicalPlan:
+        # Peel final-stage nodes (project/sort/limit above aggregation).
+        node = lqp
+        limit = None
+        sort_keys: list[tuple[str, bool]] = []
+        if isinstance(node, LLimit):
+            limit = node.n
+            node = node.child
+        if isinstance(node, LSort):
+            sort_keys = list(node.keys)
+            node = node.child
+        post_project: tuple[tuple[str, ast.Expr], ...] | None = None
+        agg_node = None
+        if isinstance(node, LProject) and isinstance(node.child, LAggregate):
+            post_project = node.exprs
+            agg_node = node.child
+            output_names = [n for n, _ in post_project]
+        elif isinstance(node, LProject):
+            output_names = [n for n, _ in node.exprs]
+        else:
+            output_names = sorted(_columns_of_logical(node))
+
+        if agg_node is not None:
+            root = self._compile_aggregate(agg_node, post_project,
+                                           sort_keys, limit)
+        else:
+            root = self._compile_streaming_query(node, sort_keys, limit)
+        return PhysicalPlan(self.pipelines, root, output_names)
+
+    # -- streaming (no aggregate) ---------------------------------------------
+    def _compile_streaming_query(self, node: LNode, sort_keys, limit) -> int:
+        op, deps, units, in_bytes, sub = self._stream(node)
+        sem = _h(("stream", sub.key(), self._tables_version(sub)))
+        n_frag = min(self._workers_for_bytes(in_bytes),
+                     max(len(units), 1)) if units else 1
+        schema = _output_schema_of(node, self.catalog)
+        needs_final = bool(sort_keys) or limit is not None
+        pid = self._new_pid()
+        self.pipelines[pid] = Pipeline(
+            pid, sem, op, n_frag, deps, Partitioning("none"),
+            schema, units, final=not needs_final, input_bytes=in_bytes)
+        if not needs_final:
+            return pid
+        fsem = _h(("final", sub.key(), sort_keys, limit,
+                   self._tables_version(sub)))
+        fop = {"t": "final",
+               "child": {"t": "scan_exchange", "source": sem,
+                         "mode": "all"},
+               "project": None,
+               "sort_keys": [[k, d] for k, d in sort_keys],
+               "limit": limit}
+        fpid = self._new_pid()
+        self.pipelines[fpid] = Pipeline(
+            fpid, fsem, fop, 1, [pid], Partitioning("none"), schema, [],
+            final=True)
+        return fpid
+
+    # -- aggregation queries ----------------------------------------------------
+    def _compile_aggregate(self, agg: LAggregate, post_project,
+                           sort_keys, limit) -> int:
+        op, deps, units, in_bytes, sub = self._stream(agg.child)
+        strategy, sizes = self._agg_strategy(agg)
+        aggs_ser = [[name, fn, expr_to_dict(arg) if arg else None]
+                    for name, fn, arg in agg.aggs]
+        partial_op = {"t": "partial_agg", "child": op,
+                      "group_cols": list(agg.group_cols),
+                      "aggs": aggs_ser, "strategy": strategy,
+                      "sizes": sizes}
+        tv = self._tables_version(agg)
+        partial_sem = _h(("partial_agg", agg.key(), tv))
+        n_frag = min(self._workers_for_bytes(in_bytes),
+                     max(len(units), 1)) if units else 1
+
+        partial_schema = _agg_schema(agg, self.catalog)
+        if strategy == "direct" or not agg.group_cols:
+            n_dest, merge_frags = 1, 1
+        else:
+            n_dest = self.config.exchange_partitions or \
+                max(1, min(n_frag, 16))
+            merge_frags = n_dest
+        part = Partitioning(
+            "hash", tuple(agg.group_cols), n_dest,
+            self._exchange_tier(n_frag, n_dest)) if n_dest > 1 else \
+            Partitioning("none")
+        ppid = self._new_pid()
+        self.pipelines[ppid] = Pipeline(
+            ppid, partial_sem, partial_op, n_frag, deps, part,
+            partial_schema, units, input_bytes=in_bytes)
+
+        merge_aggs = [[name, {"sum": "sum", "count": "sum", "min": "min",
+                              "max": "max"}[fn],
+                       expr_to_dict(ast.Col(name))]
+                      for name, fn, _ in agg.aggs]
+        merge_child = {"t": "scan_exchange", "source": partial_sem,
+                       "mode": "partition" if n_dest > 1 else "all"}
+        merge_op: dict = {"t": "merge_agg", "child": merge_child,
+                          "group_cols": list(agg.group_cols),
+                          "aggs": merge_aggs, "strategy": strategy,
+                          "sizes": sizes}
+        if post_project is not None:
+            merge_op = {"t": "project", "child": merge_op,
+                        "exprs": [[n, expr_to_dict(e)]
+                                  for n, e in post_project]}
+            partial_types = {s["name"]: s for s in partial_schema}
+            out_schema = []
+            for n, e in post_project:
+                if isinstance(e, ast.Col) and e.name in partial_types:
+                    src = partial_types[e.name]
+                    out_schema.append({"name": n, "kind": src["kind"],
+                                       "dtype": src["dtype"]})
+                else:
+                    out_schema.append({"name": n, "kind": "num",
+                                       "dtype": "<f8"})
+        else:
+            out_schema = partial_schema
+
+        fold_final = merge_frags == 1
+        merge_sem = _h(("merge_agg", agg.key(),
+                        tuple((n, e.key()) for n, e in (post_project or ())),
+                        tuple(sort_keys) if fold_final else (),
+                        limit if fold_final else None, tv))
+        if fold_final and (sort_keys or limit is not None):
+            merge_op = {"t": "final", "child": merge_op, "project": None,
+                        "sort_keys": [[k, d] for k, d in sort_keys],
+                        "limit": limit}
+        mpid = self._new_pid()
+        self.pipelines[mpid] = Pipeline(
+            mpid, merge_sem, merge_op, merge_frags, [ppid],
+            Partitioning("none"), out_schema, [], final=fold_final)
+        if fold_final:
+            return mpid
+
+        fsem = _h(("final", agg.key(),
+                   tuple((n, e.key()) for n, e in (post_project or ())),
+                   tuple(sort_keys), limit, tv))
+        fop = {"t": "final",
+               "child": {"t": "scan_exchange", "source": merge_sem,
+                         "mode": "all"},
+               "project": None,
+               "sort_keys": [[k, d] for k, d in sort_keys],
+               "limit": limit}
+        fpid = self._new_pid()
+        self.pipelines[fpid] = Pipeline(
+            fpid, fsem, fop, 1, [mpid], Partitioning("none"), out_schema,
+            [], final=True)
+        return fpid
+
+    def _agg_strategy(self, agg: LAggregate):
+        sizes = []
+        for c in agg.group_cols:
+            ct = _column_type(agg.child, c, self.catalog)
+            if ct is not None and ct[0] == "dict":
+                sizes.append(len(ct[2]))
+            else:
+                return "sort", None
+        import numpy as _np
+        if not sizes:
+            return "direct", []
+        if int(_np.prod(sizes)) <= DIRECT_AGG_MAX_GROUPS:
+            return "direct", sizes
+        return "sort", None
+
+    # -- streaming segment construction ------------------------------------------
+    def _stream(self, node: LNode):
+        """Compile a streamable subtree; returns
+        (op_dict, pipeline_deps, scan_units, input_bytes, logical_subtree)."""
+        if isinstance(node, LScan):
+            meta = self.catalog.table(node.table)
+            op = {"t": "scan_table", "table": node.table,
+                  "columns": list(node.schema_cols), "zone_preds": []}
+            frac = len(node.schema_cols) / max(len(meta.schema), 1)
+            return op, [], list(meta.files), int(meta.total_bytes * frac), \
+                node
+        if isinstance(node, LFilter):
+            op, deps, units, nbytes, sub = self._stream(node.child)
+            if op["t"] == "scan_table":
+                op["zone_preds"].extend(_zone_preds(node.pred))
+            return ({"t": "filter", "child": op,
+                     "pred": expr_to_dict(node.pred)},
+                    deps, units, nbytes, node)
+        if isinstance(node, LProject):
+            op, deps, units, nbytes, sub = self._stream(node.child)
+            return ({"t": "project", "child": op,
+                     "exprs": [[n, expr_to_dict(e)] for n, e in node.exprs]},
+                    deps, units, nbytes, node)
+        if isinstance(node, LJoin):
+            return self._stream_join(node)
+        raise TypeError(f"not streamable: {node}")
+
+    def _stream_join(self, node: LJoin):
+        probe_op, probe_deps, units, in_bytes, _ = self._stream(node.left)
+        build_bytes = self._subtree_bytes(node.right)
+        payload = sorted(_columns_of_logical(node.right))
+        tv_b = self._tables_version(node.right)
+        build_sem = _h(("build", node.right.key(), tv_b))
+
+        bop, bdeps, bunits, bbytes, _ = self._stream(node.right)
+        build_schema = _output_schema_of(node.right, self.catalog)
+        bfrags = min(self._workers_for_bytes(bbytes),
+                     max(len(bunits), 1)) if bunits else 1
+
+        if build_bytes <= self.config.broadcast_threshold_bytes:
+            # Broadcast join: build side materializes unpartitioned; every
+            # probe fragment reads all of it.
+            bpid = self._new_pid()
+            self.pipelines[bpid] = Pipeline(
+                bpid, build_sem, bop, bfrags, bdeps,
+                Partitioning("none"), build_schema, bunits,
+                input_bytes=bbytes)
+            join_op = {"t": "join",
+                       "probe": probe_op,
+                       "build": {"t": "scan_exchange", "source": build_sem,
+                                 "mode": "all"},
+                       "probe_key": node.left_key,
+                       "build_key": node.right_key,
+                       "payload": payload}
+            return join_op, probe_deps + [bpid], units, in_bytes, node
+
+        # Repartition join: both sides exchange on the join key; the join
+        # runs in a new pipeline with one fragment per hash bucket.
+        n_dest = self.config.exchange_partitions or \
+            max(1, min(self._workers_for_bytes(in_bytes), 16))
+        probe_sem = _h(("exchange", node.left.key(), node.left_key,
+                        self._tables_version(node.left)))
+        probe_schema = _output_schema_of(node.left, self.catalog)
+        pfrags = min(self._workers_for_bytes(in_bytes),
+                     max(len(units), 1)) if units else 1
+        ppid = self._new_pid()
+        self.pipelines[ppid] = Pipeline(
+            ppid, probe_sem, probe_op, pfrags, probe_deps,
+            Partitioning("hash", (node.left_key,), n_dest,
+                         self._exchange_tier(pfrags, n_dest)),
+            probe_schema, units, input_bytes=in_bytes)
+        bpid = self._new_pid()
+        self.pipelines[bpid] = Pipeline(
+            bpid, build_sem, bop, bfrags, bdeps,
+            Partitioning("hash", (node.right_key,), n_dest,
+                         self._exchange_tier(bfrags, n_dest)),
+            build_schema, bunits, input_bytes=bbytes)
+        join_op = {"t": "join",
+                   "probe": {"t": "scan_exchange", "source": probe_sem,
+                             "mode": "partition"},
+                   "build": {"t": "scan_exchange", "source": build_sem,
+                             "mode": "partition"},
+                   "probe_key": node.left_key,
+                   "build_key": node.right_key,
+                   "payload": payload}
+        # The join continues streaming in a pipeline with n_dest fragments;
+        # callers embed join_op and set deps/n_fragments accordingly via
+        # the _JoinSegment marker.
+        return join_op, [ppid, bpid, ("_n_frag", n_dest)], [], \
+            in_bytes, node
+
+
+# -- logical schema helpers ----------------------------------------------------
+
+def _walk(node: LNode):
+    yield node
+    for c in node.children():
+        yield from _walk(c)
+
+
+def _columns_of_logical(node: LNode) -> set[str]:
+    if isinstance(node, LScan):
+        return set(node.schema_cols)
+    if isinstance(node, LFilter):
+        return _columns_of_logical(node.child)
+    if isinstance(node, LProject):
+        return {n for n, _ in node.exprs}
+    if isinstance(node, LJoin):
+        return _columns_of_logical(node.left) | \
+            _columns_of_logical(node.right)
+    if isinstance(node, LAggregate):
+        return set(node.group_cols) | {n for n, _, _ in node.aggs}
+    return _columns_of_logical(node.child)
+
+
+def _column_type(node: LNode, col: str, catalog: Catalog):
+    """(kind, dtype, dictionary) for a column produced by a subtree."""
+    if isinstance(node, LScan):
+        meta = catalog.table(node.table)
+        if meta.has_column(col):
+            s = meta.spec(col)
+            return (s.kind, s.dtype, s.dictionary)
+        return None
+    if isinstance(node, (LFilter, LSort, LLimit)):
+        return _column_type(node.child, col, catalog)
+    if isinstance(node, LProject):
+        for n, e in node.exprs:
+            if n == col:
+                if isinstance(e, ast.Col):
+                    return _column_type(node.child, e.name, catalog)
+                return ("num", "<f8", None)
+        return None
+    if isinstance(node, LJoin):
+        return _column_type(node.left, col, catalog) or \
+            _column_type(node.right, col, catalog)
+    if isinstance(node, LAggregate):
+        if col in node.group_cols:
+            return _column_type(node.child, col, catalog)
+        for n, fn, _ in node.aggs:
+            if n == col:
+                return ("num", "<i8" if fn == "count" else "<f8", None)
+        return None
+    raise TypeError(node)
+
+
+def _output_schema_of(node: LNode, catalog: Catalog) -> list[dict]:
+    out = []
+    for c in sorted(_columns_of_logical(node)):
+        ct = _column_type(node, c, catalog)
+        kind, dtype, _ = ct if ct else ("num", "<f8", None)
+        if kind == "bytes":
+            continue  # opaque strings are pruned before execution
+        out.append({"name": c, "kind": kind, "dtype": dtype})
+    return out
+
+
+def _agg_schema(agg: LAggregate, catalog: Catalog) -> list[dict]:
+    out = []
+    for c in agg.group_cols:
+        ct = _column_type(agg.child, c, catalog)
+        kind, dtype, _ = ct if ct else ("num", "<i8", None)
+        out.append({"name": c, "kind": kind, "dtype": "<i8"})
+    for name, fn, _ in agg.aggs:
+        out.append({"name": name, "kind": "num", "dtype": "<f8"})
+    return out
+
+
+def _project_schema(exprs) -> list[dict]:
+    return [{"name": n, "kind": "num", "dtype": "<f8"} for n, _ in exprs]
+
+
+def _zone_preds(pred: ast.Expr) -> list[list]:
+    """Extract (col, op, literal) conjuncts usable for row-group pruning."""
+    out = []
+    for c in ast.conjuncts(pred):
+        if isinstance(c, ast.Cmp) and isinstance(c.left, ast.Col) \
+                and isinstance(c.right, ast.Lit) and c.op != "<>":
+            op = "==" if c.op == "=" else c.op
+            out.append([c.left.name, op, c.right.value])
+        elif isinstance(c, ast.Cmp) and isinstance(c.right, ast.Col) \
+                and isinstance(c.left, ast.Lit) and c.op != "<>":
+            flip = {"<": ">", "<=": ">=", ">": "<", ">=": "<=", "=": "=="}
+            out.append([c.right.name, flip[c.op], c.left.value])
+        elif isinstance(c, ast.InList) and isinstance(c.term, ast.Col) \
+                and all(isinstance(v, ast.Lit) for v in c.values):
+            out.append([c.term.name, "in",
+                        [v.value for v in c.values]])
+    return out
+
+
+def compile_query(lqp: LNode, catalog: Catalog,
+                  config: PlannerConfig | None = None) -> PhysicalPlan:
+    planner = PhysicalPlanner(catalog, config)
+    plan = planner.compile(lqp)
+    _fix_join_segments(plan)
+    return plan
+
+
+def _fix_join_segments(plan: PhysicalPlan) -> None:
+    """Resolve the ('_n_frag', D) markers emitted for repartition joins:
+    the pipeline embedding such a join must have D fragments and no scan
+    units."""
+    for p in plan.pipelines.values():
+        markers = [d for d in p.deps if isinstance(d, tuple)]
+        if markers:
+            p.deps = [d for d in p.deps if not isinstance(d, tuple)]
+            p.n_fragments = markers[0][1]
+            p.scan_units = []

@@ -1,0 +1,242 @@
+"""Serverless object store abstraction (Amazon S3 analog).
+
+Immutable binary objects addressed by string keys, with ranged reads,
+per-request simulated latency draws (tier models from ``tiers.py``), and
+cost accounting. Backends: in-memory (tests, single process) and local
+filesystem (shared across processes).
+
+Workers in Skyrise communicate *only* through this store; object writes are
+atomic and last-writer-wins, which together with deterministic worker outputs
+makes re-triggering and racing duplicate workers safe (paper section 3.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import threading
+from typing import Iterable
+
+import numpy as np
+
+from repro.storage.tiers import TIERS, StorageTier
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Outcome of a single storage request (one HTTP round trip analog)."""
+
+    data: bytes | None
+    sim_latency_s: float
+    cost_cents: float
+    nbytes: int
+
+
+@dataclasses.dataclass
+class StoreStats:
+    get_requests: int = 0
+    put_requests: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    cost_cents: float = 0.0
+    sim_latency_s: float = 0.0
+
+    def merge(self, other: "StoreStats") -> None:
+        self.get_requests += other.get_requests
+        self.put_requests += other.put_requests
+        self.bytes_read += other.bytes_read
+        self.bytes_written += other.bytes_written
+        self.cost_cents += other.cost_cents
+        self.sim_latency_s += other.sim_latency_s
+
+
+class Backend:
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str, rng: tuple[int, int] | None) -> bytes:
+        raise NotImplementedError
+
+    def size(self, key: str) -> int:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def list(self, prefix: str) -> list[str]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+
+class MemoryBackend(Backend):
+    """Dict-backed store; thread-safe; shared within one process."""
+
+    def __init__(self) -> None:
+        self._objects: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._objects[key] = bytes(data)
+
+    def get(self, key: str, rng: tuple[int, int] | None) -> bytes:
+        with self._lock:
+            obj = self._objects[key]
+        if rng is None:
+            return obj
+        off, length = rng
+        return obj[off:off + length]
+
+    def size(self, key: str) -> int:
+        with self._lock:
+            return len(self._objects[key])
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._objects
+
+    def list(self, prefix: str) -> list[str]:
+        with self._lock:
+            return sorted(k for k in self._objects if k.startswith(prefix))
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._objects.pop(key, None)
+
+
+class FilesystemBackend(Backend):
+    """Local-FS store; keys map to paths; atomic renames emulate S3 puts."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        path = os.path.join(self.root, key)
+        if os.path.commonpath([os.path.abspath(path), self.root]) != \
+                os.path.abspath(self.root):
+            raise ValueError(f"key escapes store root: {key}")
+        return path
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)  # atomic, last-writer-wins
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get(self, key: str, rng: tuple[int, int] | None) -> bytes:
+        with open(self._path(key), "rb") as f:
+            if rng is None:
+                return f.read()
+            off, length = rng
+            f.seek(off)
+            return f.read(length)
+
+    def size(self, key: str) -> int:
+        return os.path.getsize(self._path(key))
+
+    def exists(self, key: str) -> bool:
+        return os.path.isfile(self._path(key))
+
+    def list(self, prefix: str) -> list[str]:
+        out = []
+        for dirpath, _, files in os.walk(self.root):
+            for name in files:
+                rel = os.path.relpath(os.path.join(dirpath, name), self.root)
+                rel = rel.replace(os.sep, "/")
+                if rel.startswith(prefix):
+                    out.append(rel)
+        return sorted(out)
+
+    def delete(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key))
+        except FileNotFoundError:
+            pass
+
+
+class ObjectStore:
+    """A keyed object store with a tier latency/cost model attached.
+
+    Multiple ObjectStore views (different tiers) may share one backend —
+    Skyrise tiers shuffle data to hotter storage while table data stays on
+    the standard tier (paper sections 3.2, 5.1).
+    """
+
+    def __init__(self, backend: Backend | None = None,
+                 tier: str | StorageTier = "s3-standard",
+                 seed: int = 0) -> None:
+        self.backend = backend if backend is not None else MemoryBackend()
+        self.tier = TIERS[tier] if isinstance(tier, str) else tier
+        self._rng = np.random.default_rng(seed)
+        self._rng_lock = threading.Lock()
+        self.stats = StoreStats()
+        self._stats_lock = threading.Lock()
+
+    # -- tier views --------------------------------------------------------
+    def with_tier(self, tier: str | StorageTier) -> "ObjectStore":
+        view = ObjectStore.__new__(ObjectStore)
+        view.backend = self.backend
+        view.tier = TIERS[tier] if isinstance(tier, str) else tier
+        view._rng = self._rng
+        view._rng_lock = self._rng_lock
+        view.stats = self.stats        # shared accounting
+        view._stats_lock = self._stats_lock
+        return view
+
+    # -- accounting --------------------------------------------------------
+    def _account(self, *, write: bool, nbytes: int) -> tuple[float, float]:
+        with self._rng_lock:
+            latency = self.tier.draw_latency_s(self._rng, write=write,
+                                               nbytes=nbytes)
+        cost = self.tier.request_cost_cents(write=write, nbytes=nbytes)
+        with self._stats_lock:
+            if write:
+                self.stats.put_requests += 1
+                self.stats.bytes_written += nbytes
+            else:
+                self.stats.get_requests += 1
+                self.stats.bytes_read += nbytes
+            self.stats.cost_cents += cost
+            self.stats.sim_latency_s += latency
+        return latency, cost
+
+    # -- object API --------------------------------------------------------
+    def put(self, key: str, data: bytes) -> RequestResult:
+        self.backend.put(key, data)
+        latency, cost = self._account(write=True, nbytes=len(data))
+        return RequestResult(None, latency, cost, len(data))
+
+    def get(self, key: str,
+            rng: tuple[int, int] | None = None) -> RequestResult:
+        data = self.backend.get(key, rng)
+        latency, cost = self._account(write=False, nbytes=len(data))
+        return RequestResult(data, latency, cost, len(data))
+
+    def size(self, key: str) -> int:
+        return self.backend.size(key)
+
+    def exists(self, key: str) -> bool:
+        return self.backend.exists(key)
+
+    def list(self, prefix: str = "") -> list[str]:
+        return self.backend.list(prefix)
+
+    def delete(self, key: str) -> None:
+        self.backend.delete(key)
+
+    def delete_prefix(self, prefix: str) -> None:
+        for key in self.list(prefix):
+            self.backend.delete(key)
+
+    def total_bytes(self, keys: Iterable[str]) -> int:
+        return sum(self.size(k) for k in keys)

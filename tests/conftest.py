@@ -1,0 +1,27 @@
+import numpy as np
+import pytest
+
+import repro.exec  # noqa: F401  (enables x64 for SQL arithmetic)
+from repro.data import generate_tpch
+from repro.storage import InputHandler, ObjectStore
+
+
+@pytest.fixture(scope="session")
+def tpch_store():
+    store = ObjectStore(tier="local", seed=0)
+    catalog = generate_tpch(store, sf=0.01, n_parts=4, seed=0)
+    return store, catalog
+
+
+@pytest.fixture(scope="session")
+def tpch_tables(tpch_store):
+    """Full in-memory numpy tables for oracle evaluation."""
+    store, catalog = tpch_store
+    ih = InputHandler(store)
+    tables = {}
+    for name, meta in catalog.tables.items():
+        parts = [ih.read_table(f)[0] for f in meta.files]
+        tables[name] = {
+            c.name: np.concatenate([p[c.name] for p in parts])
+            for c in meta.schema}
+    return tables

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (reduced configs, CPU, f32 compute):
+forward + one train step assert shapes and finiteness; prefill + decode
+must agree with the full forward — for every assigned architecture."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.models.decode import decode_step, prefill
+from repro.models.model import forward, init_params
+from repro.models.steps import make_train_step
+from repro.optim import AdamW
+
+F32 = jnp.float32
+
+
+def _batch(cfg, key, B=2, S=48):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_frames, cfg.d_model), F32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits = forward(cfg, params, batch["tokens"], compute_dtype=F32,
+                     frames=batch.get("frames"))
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(cfg, opt, compute_dtype=F32))
+    params2, _, metrics = step(params, opt.init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    B, S = 2, 48
+    tokens = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    frames = (jax.random.normal(key, (B, cfg.enc_frames, cfg.d_model), F32)
+              if cfg.enc_dec else None)
+    full = forward(cfg, params, tokens, compute_dtype=F32, frames=frames)
+    last, cache = prefill(cfg, params, tokens[:, :S], compute_dtype=F32,
+                          frames=frames, max_len=S + 1)
+    dec, cache2 = decode_step(cfg, params, cache, tokens[:, S],
+                              compute_dtype=F32)
+    scale = np.abs(np.asarray(full[:, S - 1], np.float32)).max() + 1e-9
+    assert np.abs(np.asarray(last) - np.asarray(full[:, S - 1])
+                  ).max() / scale < 2e-3, "prefill mismatch"
+    assert np.abs(np.asarray(dec) - np.asarray(full[:, S])
+                  ).max() / scale < 2e-3, "decode mismatch"
+    assert int(cache2["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_loss_decreases(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key, B=4, S=32)
+    opt = AdamW(lr=3e-3, weight_decay=0.0)
+    step = jax.jit(make_train_step(cfg, opt, compute_dtype=F32))
+    state = opt.init(params)
+    losses = []
+    for _ in range(5):
+        params, state, m = step(params, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "chameleon-34b": (48, 8192, 64, 8, 22016, 65536),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+    }
+    for arch, (L, d, h, kv, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v), arch
+    assert get_config("mamba2-130m").ssm_state == 128
+    assert get_config("hymba-1.5b").ssm_state == 16
+    assert get_config("qwen3-moe-235b-a22b").n_experts == 128
+    assert get_config("qwen3-moe-235b-a22b").top_k == 8
+    assert get_config("granite-moe-1b-a400m").n_experts == 32
+
+
+def test_param_count_sanity():
+    # llama3-405b should be ~405B params
+    n = get_config("llama3-405b").param_count()
+    assert 3.8e11 < n < 4.3e11, n
+    # mamba2-130m ~130M
+    n = get_config("mamba2-130m").param_count()
+    assert 0.8e8 < n < 1.8e8, n
+    # MoE active < total
+    cfg = get_config("qwen3-moe-235b-a22b")
+    assert cfg.active_param_count() < cfg.param_count() / 5

@@ -1,0 +1,87 @@
+"""Distributed engine vs numpy oracle on the paper's TPC-H workload."""
+
+import numpy as np
+import pytest
+
+from repro.core import (CoordinatorConfig, FaasPlatform, QueryCoordinator)
+from repro.sql import oracle
+from repro.sql.logical import Binder
+from repro.sql.parser import parse
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.sql.rules import optimize
+
+CFG = CoordinatorConfig(planner=PlannerConfig(
+    bytes_per_worker=250_000, broadcast_threshold_bytes=150_000,
+    exchange_partitions=3))
+
+
+def _run(store, catalog, sql):
+    coord = QueryCoordinator(store, catalog, platform=FaasPlatform(seed=1),
+                             config=CFG)
+    res = coord.execute_sql(sql)
+    return res.fetch(store), res
+
+
+def _oracle(catalog, tables, sql):
+    plan, _ = Binder(catalog).bind(parse(sql))
+    return oracle.run(optimize(plan), tables)
+
+
+@pytest.mark.parametrize("qname", ["q1", "q3", "q6", "q12", "q14", "q19"])
+def test_tpch_query_matches_oracle(qname, tpch_store, tpch_tables):
+    store, catalog = tpch_store
+    got, _ = _run(store, catalog, QUERIES[qname])
+    want = _oracle(catalog, tpch_tables, QUERIES[qname])
+    assert set(want).issubset(set(got))
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float64), np.asarray(want[k], np.float64),
+            rtol=1e-9, atol=1e-9, err_msg=f"{qname}.{k}")
+
+
+def test_filter_only_query(tpch_store, tpch_tables):
+    store, catalog = tpch_store
+    sql = ("select o_orderkey, o_totalprice from orders "
+           "where o_totalprice > 300000 and o_orderstatus = 'F'")
+    got, _ = _run(store, catalog, sql)
+    want = _oracle(catalog, tpch_tables, sql)
+    got_sorted = np.sort(got["o_orderkey"])
+    want_sorted = np.sort(want["o_orderkey"])
+    assert np.array_equal(got_sorted, want_sorted)
+
+
+def test_order_by_limit(tpch_store, tpch_tables):
+    store, catalog = tpch_store
+    sql = ("select o_orderkey, o_totalprice from orders "
+           "order by o_totalprice desc, o_orderkey limit 7")
+    got, _ = _run(store, catalog, sql)
+    want = _oracle(catalog, tpch_tables, sql)
+    assert np.array_equal(got["o_orderkey"], want["o_orderkey"])
+
+
+def test_broadcast_join_path(tpch_store, tpch_tables):
+    # huge broadcast threshold → join executes as broadcast
+    store, catalog = tpch_store
+    cfg = CoordinatorConfig(planner=PlannerConfig(
+        bytes_per_worker=250_000, broadcast_threshold_bytes=1 << 30))
+    coord = QueryCoordinator(store, catalog,
+                             platform=FaasPlatform(seed=2), config=cfg)
+    res = coord.execute_sql(QUERIES["q12"])
+    got = res.fetch(store)
+    want = _oracle(catalog, tpch_tables, QUERIES["q12"])
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k], np.float64),
+                                   np.asarray(want[k], np.float64))
+    # only 2 pipelines: orders build + lineitem scan/join/agg + final
+    assert len(res.stats.pipelines) == 3
+
+
+def test_avg_decomposition(tpch_store, tpch_tables):
+    store, catalog = tpch_store
+    sql = ("select l_returnflag, avg(l_quantity) as aq, count(*) as c "
+           "from lineitem group by l_returnflag order by l_returnflag")
+    got, _ = _run(store, catalog, sql)
+    want = _oracle(catalog, tpch_tables, sql)
+    np.testing.assert_allclose(np.asarray(got["aq"]),
+                               np.asarray(want["aq"]), rtol=1e-12)

@@ -1,0 +1,84 @@
+"""End-to-end system behaviour: the full Skyrise lifecycle — generate
+TPC-H onto serverless object storage, process SQL through the serverless
+coordinator/worker runtime under injected infrastructure faults, verify
+results, costs, caching, and elastic scaling across scale factors."""
+
+import numpy as np
+
+from repro.core import (CoordinatorConfig, FaasPlatform, FaultPlan,
+                        QueryCoordinator)
+from repro.data import generate_tpch
+from repro.sql import oracle
+from repro.sql.logical import Binder
+from repro.sql.parser import parse
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.sql.rules import optimize
+from repro.storage import InputHandler, ObjectStore
+
+
+def test_end_to_end_lifecycle():
+    store = ObjectStore(tier="s3-standard", seed=11)
+    catalog = generate_tpch(store, sf=0.02, n_parts=5, seed=3)
+    cfg = CoordinatorConfig(planner=PlannerConfig(
+        bytes_per_worker=400_000, broadcast_threshold_bytes=200_000,
+        exchange_partitions=4))
+    platform = FaasPlatform(
+        seed=9, faults=FaultPlan(transient_error_prob=0.05,
+                                 straggler_prob=0.1, seed=13))
+
+    # oracle tables
+    ih = InputHandler(store)
+    tables = {}
+    for name, meta in catalog.tables.items():
+        parts = [ih.read_table(f)[0] for f in meta.files]
+        tables[name] = {
+            c.name: np.concatenate([p[c.name] for p in parts])
+            for c in meta.schema}
+
+    total_cost = 0.0
+    for qname in ("q1", "q6", "q12"):
+        coord = QueryCoordinator(store, catalog, platform=platform,
+                                 config=cfg)
+        res = coord.execute_sql(QUERIES[qname])
+        got = res.fetch(store)
+        plan, _ = Binder(catalog).bind(parse(QUERIES[qname]))
+        want = oracle.run(optimize(plan), tables)
+        for k in want:
+            np.testing.assert_allclose(
+                np.asarray(got[k], np.float64),
+                np.asarray(want[k], np.float64), rtol=1e-9,
+                err_msg=f"{qname}.{k}")
+        assert res.stats.sim_latency_s > 0
+        total_cost += res.stats.cost.total_cents
+    assert total_cost > 0
+
+    # second round: full cache hits, near-zero marginal cost
+    rerun_cost = 0.0
+    for qname in ("q1", "q6", "q12"):
+        coord = QueryCoordinator(store, catalog, platform=platform,
+                                 config=cfg)
+        res = coord.execute_sql(QUERIES[qname])
+        assert res.stats.cache_hits == len(res.stats.pipelines)
+        rerun_cost += res.stats.cost.total_cents
+    assert rerun_cost < total_cost / 20
+
+
+def test_elasticity_worker_scaling():
+    """Fig. 7's mechanism: worker fleets grow with input size while
+    latency stays within an order of magnitude."""
+    latencies = {}
+    workers = {}
+    for sf in (0.005, 0.02):
+        store = ObjectStore(tier="s3-standard", seed=1)
+        catalog = generate_tpch(store, sf=sf,
+                                n_parts=max(1, int(sf * 400)), seed=0)
+        cfg = CoordinatorConfig(planner=PlannerConfig(
+            bytes_per_worker=150_000))
+        coord = QueryCoordinator(store, catalog,
+                                 platform=FaasPlatform(seed=2), config=cfg)
+        res = coord.execute_sql(QUERIES["q6"])
+        latencies[sf] = res.stats.sim_latency_s
+        workers[sf] = res.stats.pipelines[0].n_fragments
+    assert workers[0.02] > workers[0.005]
+    assert latencies[0.02] < latencies[0.005] * 10
