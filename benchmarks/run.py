@@ -10,6 +10,7 @@ measurements on this host.
   Fig 7    → elasticity     (Q1+Q6 across scale factors)
   §3.3     → stragglers     (re-triggering on/off)
   §3.4     → cache          (recurring-query cost)
+  sessions → concurrency    (multi-query shared-quota scheduling)
   kernels  → Pallas kernels (interpret mode on CPU)
 """
 
@@ -28,6 +29,7 @@ SUITES = {
     "elasticity": suites.bench_elasticity,
     "stragglers": suites.bench_stragglers,
     "cache": suites.bench_result_cache,
+    "concurrency": suites.bench_concurrency,
     "kernels": suites.bench_kernels,
 }
 

@@ -13,8 +13,7 @@ import time
 import numpy as np
 
 import repro.exec  # noqa: F401 (x64)
-from repro.core import (CoordinatorConfig, FaasPlatform, FaultPlan,
-                        QueryCoordinator)
+from repro.api import CoordinatorConfig, FaasPlatform, FaultPlan, connect
 from repro.core.cost import LAMBDA_COLD_START, LAMBDA_WARM_START
 from repro.data import generate_tpch
 from repro.sql.physical import PlannerConfig
@@ -30,6 +29,15 @@ def _db(sf, seed=0, tier="s3-standard", n_parts=None):
     store = ObjectStore(tier=tier, seed=seed)
     catalog = generate_tpch(store, sf=sf, seed=0, n_parts=n_parts)
     return store, catalog
+
+
+def _session(sf, *, cfg=CFG, seed=0, tier="s3-standard", n_parts=None,
+             platform_seed=0, faults=None, quota=1000, **kw):
+    store, catalog = _db(sf, seed=seed, tier=tier, n_parts=n_parts)
+    return connect(store, catalog,
+                   platform=FaasPlatform(seed=platform_seed, quota=quota,
+                                         faults=faults),
+                   config=cfg, **kw)
 
 
 # -- Table 2: startup latencies -----------------------------------------------------
@@ -78,24 +86,20 @@ def bench_storage():
 # -- Fig 5 + Fig 6: TPC-H latency and cost -------------------------------------------
 
 def bench_tpch(sf: float = 0.05):
-    store, catalog = _db(sf, n_parts=8)
-    platform = FaasPlatform(seed=4)
+    cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
     rows = []
-    for qname in ("q1", "q6", "q12", "q3", "q14"):
-        cfg = CoordinatorConfig(planner=CFG.planner,
-                                use_result_cache=False)
-        coord = QueryCoordinator(store, catalog, platform=platform,
-                                 config=cfg)
-        t0 = time.perf_counter()
-        res = coord.execute_sql(QUERIES[qname])
-        wall = time.perf_counter() - t0
-        s = res.stats
-        rows.append((
-            f"tpch/sf{sf:g}_{qname}", wall * 1e6,
-            f"sim_latency_s={s.sim_latency_s:.2f};"
-            f"cost_cents={s.cost.total_cents:.4f};"
-            f"workers={sum(p.n_fragments for p in s.pipelines)};"
-            f"bytes_read={sum(p.bytes_read for p in s.pipelines)}"))
+    with _session(sf, cfg=cfg, n_parts=8, platform_seed=4) as session:
+        for qname in ("q1", "q6", "q12", "q3", "q14"):
+            t0 = time.perf_counter()
+            res = session.sql(QUERIES[qname])
+            wall = time.perf_counter() - t0
+            s = res.stats
+            rows.append((
+                f"tpch/sf{sf:g}_{qname}", wall * 1e6,
+                f"sim_latency_s={s.sim_latency_s:.2f};"
+                f"cost_cents={s.cost.total_cents:.4f};"
+                f"workers={sum(p.n_fragments for p in s.pipelines)};"
+                f"bytes_read={sum(p.bytes_read for p in s.pipelines)}"))
     return rows
 
 
@@ -104,20 +108,18 @@ def bench_tpch(sf: float = 0.05):
 def bench_elasticity(scale_factors=(0.01, 0.04, 0.16)):
     rows = []
     for sf in scale_factors:
-        store, catalog = _db(sf, tier="s3-standard",
-                             n_parts=max(2, int(sf * 200)))
-        platform = FaasPlatform(seed=5)
-        sim_total = 0.0
-        workers = 0
-        for qname in ("q1", "q6"):
-            coord = QueryCoordinator(
-                store, catalog, platform=platform,
-                config=CoordinatorConfig(
+        with _session(
+                sf, n_parts=max(2, int(sf * 200)), platform_seed=5,
+                cfg=CoordinatorConfig(
                     planner=PlannerConfig(bytes_per_worker=400_000),
-                    use_result_cache=False))
-            res = coord.execute_sql(QUERIES[qname])
-            sim_total += res.stats.sim_latency_s
-            workers += sum(p.n_fragments for p in res.stats.pipelines)
+                    use_result_cache=False)) as session:
+            sim_total = 0.0
+            workers = 0
+            for qname in ("q1", "q6"):
+                res = session.sql(QUERIES[qname])
+                sim_total += res.stats.sim_latency_s
+                workers += sum(p.n_fragments
+                               for p in res.stats.pipelines)
         rows.append((f"elasticity/sf{sf:g}_q1q6", sim_total * 1e6,
                      f"sim_latency_s={sim_total:.2f};workers={workers}"))
     return rows
@@ -128,15 +130,16 @@ def bench_elasticity(scale_factors=(0.01, 0.04, 0.16)):
 def bench_stragglers():
     rows = []
     for label, detect in (("on", 3.0), ("off", 1e9)):
-        store, catalog = _db(0.02, tier="s3-standard", n_parts=6)
-        plat = FaasPlatform(seed=6, faults=FaultPlan(
-            straggle_fragments=((0, 1, 0), (0, 3, 0)),
-            straggler_factor=25.0, seed=8))
-        cfg = CoordinatorConfig(planner=CFG.planner,
-                                straggler_detect_factor=detect,
-                                use_result_cache=False)
-        coord = QueryCoordinator(store, catalog, platform=plat, config=cfg)
-        res = coord.execute_sql(QUERIES["q6"])
+        with _session(
+                0.02, n_parts=6, platform_seed=6,
+                faults=FaultPlan(
+                    straggle_fragments=((0, 1, 0), (0, 3, 0)),
+                    straggler_factor=25.0, seed=8),
+                cfg=CoordinatorConfig(
+                    planner=CFG.planner,
+                    straggler_detect_factor=detect,
+                    use_result_cache=False)) as session:
+            res = session.sql(QUERIES["q6"])
         s = res.stats
         rows.append((
             f"stragglers/retrigger_{label}", s.sim_latency_s * 1e6,
@@ -149,21 +152,64 @@ def bench_stragglers():
 # -- Section 3.4: result cache -----------------------------------------------------------
 
 def bench_result_cache():
-    store, catalog = _db(0.02, n_parts=6)
-    platform = FaasPlatform(seed=7)
     rows = []
-    for i, label in ((0, "cold"), (1, "warm")):
-        coord = QueryCoordinator(store, catalog, platform=platform,
-                                 config=CFG)
+    with _session(0.02, n_parts=6, platform_seed=7) as session:
+        for i, label in ((0, "cold"), (1, "warm")):
+            t0 = time.perf_counter()
+            res = session.sql(QUERIES["q12"])
+            wall = time.perf_counter() - t0
+            s = res.stats
+            rows.append((
+                f"cache/q12_{label}", wall * 1e6,
+                f"sim_latency_s={s.sim_latency_s:.3f};"
+                f"cost_cents={s.cost.total_cents:.5f};"
+                f"cache_hits={s.cache_hits}"))
+    return rows
+
+
+# -- SkyriseSession: cross-query admission over one shared quota --------------------------
+
+def bench_concurrency(n_queries: int = 4, quota: int = 8):
+    """Multi-query sessions: N queries through one shared platform.
+
+    Sequential = one query at a time (the old one-coordinator-per-query
+    pattern); concurrent = all submitted up front, interleaved by the
+    session scheduler under the shared admission quota.
+    """
+    qnames = ("q1", "q6", "q12", "q14")[:n_queries]
+    rows = []
+    cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
+
+    # warmup: pay in-process JIT compilation once so neither timed run
+    # benefits from the other's compile cache
+    with _session(0.02, cfg=cfg, n_parts=6, quota=quota) as warm:
+        for q in qnames:
+            warm.sql(QUERIES[q])
+
+    with _session(0.02, cfg=cfg, n_parts=6, quota=quota,
+                  max_concurrent_queries=1) as session:
         t0 = time.perf_counter()
-        res = coord.execute_sql(QUERIES["q12"])
-        wall = time.perf_counter() - t0
-        s = res.stats
-        rows.append((
-            f"cache/q12_{label}", wall * 1e6,
-            f"sim_latency_s={s.sim_latency_s:.3f};"
-            f"cost_cents={s.cost.total_cents:.5f};"
-            f"cache_hits={s.cache_hits}"))
+        for q in qnames:
+            session.sql(QUERIES[q])
+        seq_wall = time.perf_counter() - t0
+        rows.append((f"concurrency/{n_queries}q_sequential",
+                     seq_wall * 1e6,
+                     f"invocations={session.platform.invocations};"
+                     f"peak_in_flight="
+                     f"{session.platform.admission.max_in_flight}"))
+
+    with _session(0.02, cfg=cfg, n_parts=6, quota=quota,
+                  max_concurrent_queries=n_queries) as session:
+        t0 = time.perf_counter()
+        handles = [session.submit(QUERIES[q]) for q in qnames]
+        for h in handles:
+            h.result()
+        conc_wall = time.perf_counter() - t0
+        st = session.stats()
+    rows.append((f"concurrency/{n_queries}q_concurrent", conc_wall * 1e6,
+                 f"speedup={seq_wall / conc_wall:.2f}x;"
+                 f"peak_in_flight={st['max_workers_in_flight']};"
+                 f"quota={quota}"))
     return rows
 
 

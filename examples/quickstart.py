@@ -1,39 +1,35 @@
 """Quickstart: a fully serverless SQL query, end to end.
 
-Generates TPC-H onto the (simulated) object store, runs Q6 through the
-serverless coordinator/worker runtime, prints the result with its cost,
-then re-runs it to show the semantic result cache.
+Opens a ``SkyriseSession`` (the unified client API), generates TPC-H
+onto the (simulated) object store, runs Q6 through the serverless
+worker runtime, prints the result with its cost, then re-runs it to
+show the semantic result cache.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import CoordinatorConfig, FaasPlatform, QueryCoordinator
-from repro.data import generate_tpch
+from repro.api import CoordinatorConfig, connect
 from repro.sql.physical import PlannerConfig
 from repro.sql.queries import TPCH_Q6
-from repro.storage import ObjectStore
 
 
 def main():
-    store = ObjectStore(tier="s3-standard")
+    session = connect(
+        config=CoordinatorConfig(planner=PlannerConfig(
+            bytes_per_worker=512 << 10)))
     print("generating TPC-H sf=0.02 …")
-    catalog = generate_tpch(store, sf=0.02, n_parts=4)
+    session.ensure_tpch(sf=0.02, n_parts=4)
 
-    platform = FaasPlatform()          # shared warm pool across queries
-    cfg = CoordinatorConfig(planner=PlannerConfig(
-        bytes_per_worker=512 << 10))
-
-    for attempt in ("cold", "warm (cached)"):
-        coordinator = QueryCoordinator(store, catalog, platform=platform,
-                                       config=cfg)
-        res = coordinator.execute_sql(TPCH_Q6)
-        cols = res.fetch(store)
-        s = res.stats
-        print(f"\n[{attempt}] Q6 revenue = {cols['revenue'][0]:,.2f}")
-        print(f"  sim latency {s.sim_latency_s:.2f}s · "
-              f"cost {s.cost.total_cents:.4f}¢ · "
-              f"workers {sum(p.n_fragments for p in s.pipelines)} · "
-              f"cache hits {s.cache_hits}/{len(s.pipelines)}")
+    with session:
+        for attempt in ("cold", "warm (cached)"):
+            res = session.sql(TPCH_Q6)
+            cols = res.fetch(session.store)
+            s = res.stats
+            print(f"\n[{attempt}] Q6 revenue = {cols['revenue'][0]:,.2f}")
+            print(f"  sim latency {s.sim_latency_s:.2f}s · "
+                  f"cost {s.cost.total_cents:.4f}¢ · "
+                  f"workers {sum(p.n_fragments for p in s.pipelines)} · "
+                  f"cache hits {s.cache_hits}/{len(s.pipelines)}")
 
 
 if __name__ == "__main__":

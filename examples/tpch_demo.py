@@ -1,55 +1,59 @@
 """The paper's evaluation in miniature: TPC-H queries on serverless
 infrastructure with fault injection, straggler re-triggering, cost
-accounting, and the result cache (paper sections 3.3, 3.4, 4).
+accounting, and the result cache (paper sections 3.3, 3.4, 4) — now
+*concurrently submitted* through one ``SkyriseSession`` so all queries
+share a single function-concurrency quota, warm sandbox pool, and
+semantic result cache.
 
     PYTHONPATH=src python examples/tpch_demo.py
 """
 
-import numpy as np
-
-from repro.core import (CoordinatorConfig, FaasPlatform, FaultPlan,
-                        QueryCoordinator)
-from repro.data import generate_tpch
+from repro.api import CoordinatorConfig, FaultPlan, connect
 from repro.sql.physical import PlannerConfig
 from repro.sql.queries import QUERIES
-from repro.storage import ObjectStore
 
 
 def main():
-    store = ObjectStore(tier="s3-standard")
-    print("generating TPC-H sf=0.05 …")
-    catalog = generate_tpch(store, sf=0.05, n_parts=8)
-
     # hostile infrastructure: 10% transient worker failures, 10% stragglers
-    platform = FaasPlatform(seed=1, faults=FaultPlan(
-        transient_error_prob=0.1, straggler_prob=0.1,
-        straggler_factor=20.0, seed=2))
-    cfg = CoordinatorConfig(planner=PlannerConfig(
-        bytes_per_worker=512 << 10, exchange_partitions=4),
-        max_attempts=6)
+    session = connect(
+        quota=32,
+        faults=FaultPlan(transient_error_prob=0.1, straggler_prob=0.1,
+                         straggler_factor=20.0, seed=2),
+        config=CoordinatorConfig(
+            planner=PlannerConfig(bytes_per_worker=512 << 10,
+                                  exchange_partitions=4),
+            max_attempts=6),
+        max_concurrent_queries=5, seed=1)
+    print("generating TPC-H sf=0.05 …")
+    session.ensure_tpch(sf=0.05, n_parts=8)
 
-    print(f"\n{'query':>6s} {'sim s':>8s} {'cost ¢':>9s} {'workers':>8s} "
-          f"{'retries':>8s} {'retrig':>7s} {'rows':>6s}")
-    for qname in ("q1", "q6", "q12", "q3", "q14"):
-        coord = QueryCoordinator(store, catalog, platform=platform,
-                                 config=cfg)
-        res = coord.execute_sql(QUERIES[qname])
-        cols = res.fetch(store)
-        s = res.stats
-        n = len(next(iter(cols.values()))) if cols else 0
-        print(f"{qname:>6s} {s.sim_latency_s:8.2f} "
-              f"{s.cost.total_cents:9.4f} "
-              f"{sum(p.n_fragments for p in s.pipelines):8d} "
-              f"{sum(p.transient_failures for p in s.pipelines):8d} "
-              f"{sum(p.stragglers_retriggered for p in s.pipelines):7d} "
-              f"{n:6d}")
+    qnames = ("q1", "q6", "q12", "q3", "q14")
+    with session:
+        handles = {q: session.submit(QUERIES[q]) for q in qnames}
 
-    print("\nQ12 answer (codes are dictionary indices — 2=MAIL, 5=SHIP):")
-    coord = QueryCoordinator(store, catalog, platform=platform, config=cfg)
-    res = coord.execute_sql(QUERIES["q12"])
-    cols = res.fetch(store)
-    for i in range(len(cols["l_shipmode"])):
-        print("  " + ", ".join(f"{k}={cols[k][i]:.0f}" for k in cols))
+        print(f"\n{'query':>6s} {'sim s':>8s} {'cost ¢':>9s} "
+              f"{'workers':>8s} {'retries':>8s} {'retrig':>7s} {'rows':>6s}")
+        for qname, h in handles.items():
+            cols = h.fetch()
+            s = h.stats()
+            n = len(next(iter(cols.values()))) if cols else 0
+            print(f"{qname:>6s} {s.sim_latency_s:8.2f} "
+                  f"{s.cost.total_cents:9.4f} "
+                  f"{sum(p.n_fragments for p in s.pipelines):8d} "
+                  f"{sum(p.transient_failures for p in s.pipelines):8d} "
+                  f"{sum(p.stragglers_retriggered for p in s.pipelines):7d} "
+                  f"{n:6d}")
+
+        st = session.stats()
+        print(f"\nall 5 queries shared one platform: "
+              f"{st['platform_invocations']} invocations, peak "
+              f"{st['max_workers_in_flight']}/{st['quota']} in flight")
+
+        print("\nQ12 answer (codes are dictionary indices — 2=MAIL, "
+              "5=SHIP):")
+        cols = session.submit(QUERIES["q12"]).fetch()  # full cache hit
+        for i in range(len(cols["l_shipmode"])):
+            print("  " + ", ".join(f"{k}={cols[k][i]:.0f}" for k in cols))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Skyrise public client API.
+
+Everything a client needs is here::
+
+    from repro.api import connect
+
+    session = connect(quota=128)          # shared platform + store + cache
+    session.ensure_tpch(sf=0.01)
+
+    res = session.sql("select count(*) as n from lineitem")   # blocking
+    handle = session.submit(TPCH_Q12)                         # concurrent
+    print(handle.explain())
+    cols = handle.result().fetch(session.store)
+    print(handle.stats().cost.total_cents)
+
+Sessions multiplex concurrently submitted queries over one
+``FaasPlatform`` concurrency quota (wave-based admission spanning
+queries), one worker handler, and one semantic result cache — the
+multi-tenant layer the paper's single-query coordinator deliberately
+leaves out (section 3.1).
+"""
+
+from repro.core.engine import (CoordinatorConfig, QueryAborted,
+                               QueryCancelled, QueryResult, QueryStats,
+                               explain_plan)
+from repro.core.events import ConsoleObserver, QueryObserver
+from repro.core.platform import FaasPlatform, FaultPlan
+
+from repro.api.handle import QueryHandle, QueryState
+from repro.api.session import SkyriseSession, connect
+
+__all__ = [
+    "ConsoleObserver", "CoordinatorConfig", "FaasPlatform", "FaultPlan",
+    "QueryAborted", "QueryCancelled", "QueryHandle", "QueryObserver",
+    "QueryResult", "QueryState", "QueryStats", "SkyriseSession",
+    "connect", "explain_plan",
+]

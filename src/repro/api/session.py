@@ -1,0 +1,278 @@
+"""``SkyriseSession``: the unified multi-query client entry point.
+
+The paper's coordinator owns exactly one query (section 3.1); the
+*service* is multi-tenant — many queries share one FaaS concurrency
+quota, one object store, and one semantic result cache (section 3.4). A
+session owns those shared pieces once::
+
+    from repro.api import connect
+
+    session = connect(quota=64)
+    session.ensure_tpch(sf=0.01)
+    handles = [session.submit(sql) for sql in queries]   # concurrent
+    for h in handles:
+        print(h.result().fetch(session.store))
+
+``submit`` enqueues and returns a :class:`QueryHandle` immediately; a
+small scheduler drives up to ``max_concurrent_queries`` per-query
+engines, all drawing execution waves from the platform's shared
+``AdmissionController`` — so the combined in-flight worker fleet of all
+queries never exceeds the per-user quota.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+
+from repro.core.cost import CostModel
+from repro.core.engine import (CoordinatorConfig, QueryCancelled,
+                               QueryEngine, QueryResult)
+from repro.core.events import ObserverMux, QueryObserver
+from repro.core.platform import FaasPlatform, FaultPlan
+from repro.core.registry import ResultRegistry
+from repro.core.worker import make_worker_handler
+from repro.data.catalog import Catalog
+from repro.storage.object_store import (FilesystemBackend, ObjectStore)
+
+from repro.api.handle import QueryHandle, QueryState
+
+_session_counter = itertools.count()
+
+
+class SkyriseSession:
+    """Owns the shared serverless infrastructure of many queries."""
+
+    def __init__(self, store: ObjectStore | None = None,
+                 catalog: Catalog | None = None, *,
+                 store_dir: str | None = None,
+                 tier: str | None = None,
+                 platform: FaasPlatform | None = None,
+                 quota: int | None = None,
+                 faults: FaultPlan | None = None,
+                 config: CoordinatorConfig | None = None,
+                 cost_model: CostModel | None = None,
+                 max_concurrent_queries: int = 4,
+                 observers: tuple[QueryObserver, ...] = (),
+                 seed: int = 0):
+        # Reject conflicting arguments instead of silently ignoring the
+        # knobs a pre-built component absorbs.
+        if platform is not None and (quota is not None
+                                     or faults is not None):
+            raise ValueError("pass either a platform or quota/faults "
+                             "(set them on the platform), not both")
+        if store is not None and (store_dir is not None
+                                  or tier is not None):
+            raise ValueError("pass either a store or store_dir/tier "
+                             "(they configure the built store), not both")
+        if store is None:
+            backend = FilesystemBackend(store_dir) if store_dir else None
+            store = ObjectStore(backend, tier=tier or "s3-standard",
+                                seed=seed)
+        self.store = store
+        self.catalog = catalog
+        self.platform = platform or FaasPlatform(
+            quota=1000 if quota is None else quota, seed=seed,
+            faults=faults)
+        self.config = config or CoordinatorConfig()
+        self.cost_model = cost_model or CostModel()
+        # Shared across every query of the session: one result cache,
+        # one worker handler (code package), one admission ledger.
+        self.registry = ResultRegistry(store)
+        self.handler = make_worker_handler(store)
+        self.observers = ObserverMux(list(observers))
+
+        self.max_concurrent_queries = max(1, max_concurrent_queries)
+        self._sid = next(_session_counter)
+        self._qid = itertools.count()
+        self._cv = threading.Condition()
+        self._queue: deque[QueryHandle] = deque()
+        self._threads: list[threading.Thread] = []
+        self._active = 0
+        self._paused = False
+        self._closing = False
+        self._handles: list[QueryHandle] = []
+
+    # -- catalog management --------------------------------------------------
+    def attach_catalog(self, catalog: Catalog) -> "SkyriseSession":
+        self.catalog = catalog
+        return self
+
+    def ensure_tpch(self, sf: float = 0.01, *, n_parts: int | None = None,
+                    seed: int = 0) -> Catalog:
+        """Load the TPC-H catalog from the store, generating it first if
+        absent (store-level idempotence: two sessions on one store share
+        the dataset)."""
+        key = f"tpch/sf{sf:g}/catalog"
+        if self.store.exists(key):
+            catalog = Catalog.load(self.store, key)
+        else:
+            from repro.data import generate_tpch
+            catalog = generate_tpch(self.store, sf=sf, n_parts=n_parts,
+                                    seed=seed)
+        self.attach_catalog(catalog)
+        return catalog
+
+    # -- query API -----------------------------------------------------------
+    def submit(self, sql: str) -> QueryHandle:
+        """Enqueue a query; returns its handle immediately."""
+        if self.catalog is None:
+            raise RuntimeError("no catalog attached — call "
+                               "attach_catalog() or ensure_tpch() first")
+        handle = QueryHandle(f"s{self._sid}-q{next(self._qid)}", sql, self)
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("session is closed")
+            self._queue.append(handle)
+            self._handles.append(handle)
+            self._ensure_workers_locked()
+            self._cv.notify_all()
+        return handle
+
+    def sql(self, text: str, timeout: float | None = None) -> QueryResult:
+        """Submit and block for the result (single-query convenience)."""
+        return self.submit(text).result(timeout)
+
+    def explain(self, text: str) -> str:
+        """Compile ``text`` and describe its physical plan (no workers
+        are invoked)."""
+        if self.catalog is None:
+            raise RuntimeError("no catalog attached — call "
+                               "attach_catalog() or ensure_tpch() first")
+        return QueryHandle("explain", text, self).explain()
+
+    # -- scheduler -----------------------------------------------------------
+    def pause(self) -> None:
+        """Stop admitting queued queries (already-running ones finish).
+        Lets clients build a batch, reorder, or cancel before any worker
+        is invoked."""
+        with self._cv:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cv:
+            self._paused = False
+            self._cv.notify_all()
+
+    def drain(self) -> None:
+        """Block until every submitted query reached a terminal state."""
+        for h in list(self._handles):
+            h.wait()
+
+    def close(self, *, cancel_pending: bool = False) -> None:
+        """Finish (or cancel) outstanding queries and stop the workers."""
+        if cancel_pending:
+            for h in list(self._handles):
+                h.cancel()
+        with self._cv:
+            self._closing = True
+            self._paused = False
+            self._cv.notify_all()
+            threads = list(self._threads)
+        for t in threads:
+            t.join()
+
+    def __enter__(self) -> "SkyriseSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- session-level introspection ----------------------------------------
+    def stats(self) -> dict:
+        """Aggregate session statistics (shared-infrastructure view)."""
+        adm = self.platform.admission
+        states = [h.state for h in self._handles]
+        return {
+            "queries_submitted": len(self._handles),
+            "queries_by_state": {
+                s.value: sum(1 for x in states if x is s)
+                for s in QueryState if any(x is s for x in states)},
+            "platform_invocations": self.platform.invocations,
+            "platform_cold_starts": self.platform.cold_starts,
+            "quota": adm.quota,
+            "max_workers_in_flight": adm.max_in_flight,
+            "store_cost_cents": self.store.stats.cost_cents,
+        }
+
+    def add_observer(self, observer: QueryObserver) -> None:
+        self.observers.add(observer)
+
+    # -- internals -----------------------------------------------------------
+    def _engine(self, handle: QueryHandle) -> QueryEngine:
+        return QueryEngine(
+            self.store, self.catalog, platform=self.platform,
+            config=self.config, cost_model=self.cost_model,
+            registry=self.registry, handler=self.handler,
+            observer=self.observers, query_id=handle.query_id,
+            cancel_check=handle._raise_if_cancelled)
+
+    def _plan_for(self, handle: QueryHandle):
+        """Plan (but do not execute) a handle's query, caching the plan
+        on the handle so the scheduler reuses it."""
+        with handle._lock:
+            plan = handle._plan
+        if plan is None:
+            plan = self._engine(handle).plan_sql(handle.sql)
+            with handle._lock:
+                handle._plan = plan
+        return plan
+
+    def _notify_state(self, handle: QueryHandle, state: QueryState) -> None:
+        self.observers.on_query_state(handle.query_id, state.value)
+
+    def _ensure_workers_locked(self) -> None:
+        want = min(self.max_concurrent_queries, len(self._queue))
+        idle = len(self._threads) - self._active
+        for _ in range(max(0, want - idle)):
+            if len(self._threads) >= self.max_concurrent_queries:
+                break
+            t = threading.Thread(
+                target=self._worker_loop,
+                name=f"skyrise-s{self._sid}-w{len(self._threads)}",
+                daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._closing and (self._paused
+                                             or not self._queue):
+                    self._cv.wait()
+                if self._closing and not self._queue:
+                    return
+                handle = self._queue.popleft()
+                self._active += 1
+            try:
+                self._run(handle)
+            finally:
+                with self._cv:
+                    self._active -= 1
+                    self._cv.notify_all()
+
+    def _run(self, handle: QueryHandle) -> None:
+        if not handle._begin(QueryState.PLANNING):
+            return  # cancelled while queued: no worker was ever invoked
+        engine = self._engine(handle)
+        try:
+            plan = self._plan_for(handle)
+            if not handle._begin(QueryState.RUNNING):
+                return
+            handle._finish(engine.execute_plan(plan))
+        except QueryCancelled:
+            handle._finish_cancelled()
+        except BaseException as e:  # noqa: BLE001 - surfaced via result()
+            handle._fail(e)
+
+
+def connect(store: ObjectStore | None = None,
+            catalog: Catalog | None = None, **kwargs) -> SkyriseSession:
+    """Open a :class:`SkyriseSession` — the Skyrise client entry point.
+
+    Accepts either pre-built components (``store``, ``catalog``,
+    ``platform``) or the knobs to build them (``store_dir``, ``tier``,
+    ``quota``, ``faults``, ``seed``); see :class:`SkyriseSession`.
+    """
+    return SkyriseSession(store, catalog, **kwargs)

@@ -7,20 +7,18 @@ training job resumes from the last complete stage exactly like an aborted
 query resumes from its last registered pipeline result. Writes are
 deterministic per (run, step) → idempotent across racing re-executions.
 
-Layout: one zstd-compressed object per pytree leaf (parallel ranged
-restore), plus a msgpack manifest; a per-run ``latest`` pointer is the
-only mutated key.
+Layout: one compressed object per pytree leaf (parallel ranged restore),
+plus a msgpack manifest recording the codec (zstd when available, stdlib
+zlib otherwise); a per-run ``latest`` pointer is the only mutated key.
 """
 
 from __future__ import annotations
 
-import io
-
 import jax
 import msgpack
 import numpy as np
-import zstandard
 
+from repro.storage import compression
 from repro.storage.object_store import ObjectStore
 
 
@@ -38,12 +36,12 @@ def save_checkpoint(store: ObjectStore, run: str, step: int,
                     tree) -> str:
     """Returns the manifest key."""
     prefix = f"ckpt/{run}/step{step:08d}"
-    cctx = zstandard.ZstdCompressor(level=1)
-    manifest = {"step": step, "leaves": []}
+    codec = compression.DEFAULT_CODEC
+    manifest = {"step": step, "codec": codec, "leaves": []}
     for name, leaf in _flatten_with_names(tree):
         arr = np.asarray(leaf)
-        key = f"{prefix}/{name.replace('/', '.')}.zst"
-        store.put(key, cctx.compress(arr.tobytes()))
+        key = f"{prefix}/{name.replace('/', '.')}.{codec}"
+        store.put(key, compression.compress(arr.tobytes(), codec, level=1))
         manifest["leaves"].append({
             "name": name, "key": key, "dtype": str(arr.dtype),
             "shape": list(arr.shape)})
@@ -70,11 +68,11 @@ def load_checkpoint(store: ObjectStore, run: str, template,
             raise FileNotFoundError(f"no checkpoint for run {run}")
     mkey = f"ckpt/{run}/step{step:08d}/MANIFEST"
     manifest = msgpack.unpackb(store.get(mkey).data)
-    dctx = zstandard.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")
     by_name = {}
     for leaf in manifest["leaves"]:
-        raw = dctx.decompress(store.get(leaf["key"]).data,
-                              max_output_size=1 << 31)
+        raw = compression.decompress(store.get(leaf["key"]).data, codec,
+                                     max_output_size=1 << 31)
         by_name[leaf["name"]] = np.frombuffer(
             raw, dtype=np.dtype(leaf["dtype"])).reshape(leaf["shape"])
     names = [n for n, _ in _flatten_with_names(template)]

@@ -1,17 +1,27 @@
 """The paper's primary contribution: the fully serverless query-processing
-runtime — per-query coordinator, FaaS platform model, adaptive straggler
-re-triggering, failure taxonomy with stage-checkpoint restart, semantic
-result cache, elastic worker sizing, and the end-to-end cost model."""
+runtime — per-query execution engine, FaaS platform model with cross-query
+admission control, adaptive straggler re-triggering, failure taxonomy with
+stage-checkpoint restart, semantic result cache, elastic worker sizing,
+and the end-to-end cost model.
 
-from repro.core.coordinator import (CoordinatorConfig, QueryAborted,
-                                    QueryCoordinator, QueryResult,
-                                    QueryStats)
+The public client entry point is :mod:`repro.api` (``connect()`` →
+``SkyriseSession``); this package holds the engine underneath it.
+"""
+
+from repro.core.coordinator import QueryCoordinator
 from repro.core.cost import CostBreakdown, CostModel
-from repro.core.platform import FaasPlatform, FaultPlan
+from repro.core.engine import (CoordinatorConfig, PipelineReport,
+                               QueryAborted, QueryCancelled, QueryEngine,
+                               QueryResult, QueryStats, explain_plan)
+from repro.core.events import ConsoleObserver, ObserverMux, QueryObserver
+from repro.core.platform import (AdmissionController, FaasPlatform,
+                                 FaultPlan)
 from repro.core.registry import ResultRegistry
 
 __all__ = [
-    "CoordinatorConfig", "CostBreakdown", "CostModel", "FaasPlatform",
-    "FaultPlan", "QueryAborted", "QueryCoordinator", "QueryResult",
-    "QueryStats", "ResultRegistry",
+    "AdmissionController", "ConsoleObserver", "CoordinatorConfig",
+    "CostBreakdown", "CostModel", "FaasPlatform", "FaultPlan",
+    "ObserverMux", "PipelineReport", "QueryAborted", "QueryCancelled",
+    "QueryCoordinator", "QueryEngine", "QueryObserver", "QueryResult",
+    "QueryStats", "ResultRegistry", "explain_plan",
 ]

@@ -1,299 +1,45 @@
-"""Skyrise query coordinator (paper sections 3.1, 3.3).
+"""Deprecated single-query coordinator facade.
 
-A coordinator instance manages the lifecycle of exactly one query: it
-compiles SQL to pipelines, schedules them stage-wise by dependency,
-invokes one worker function per fragment (two-level √W fan-out for large
-fleets), tracks worker progress, and adapts:
+The execution machinery lives in :mod:`repro.core.engine`
+(``QueryEngine``); multi-query sessions live in :mod:`repro.api`
+(``connect`` / ``SkyriseSession``). ``QueryCoordinator`` remains as a
+thin shim so pre-session call sites keep working:
 
-  * stragglers → re-triggered mid-query (safe: workers are idempotent and
-    write deterministic single objects; racing duplicates overwrite
-    identical results);
-  * transient infrastructure failures → bounded retries; on repeated
-    failure the fragment's input units are *reassigned to more workers*;
-  * deterministic (code/data) failures → abort; completed pipelines stay
-    registered, so a re-run restarts from the last complete stage
-    (stage results are checkpoints);
-  * completed pipelines are registered in the result cache under their
-    semantic hash and skipped by later queries (section 3.4).
+    coord = QueryCoordinator(store, catalog, platform=platform)
+    res = coord.execute_sql("select ...")
 
-The coordinator is stateless between queries: everything it needs is in
-the catalog, the registry, and the object store.
+New code should use the session API instead::
+
+    from repro.api import connect
+    session = connect(store=store, catalog=catalog, platform=platform)
+    res = session.sql("select ...")
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 
-import numpy as np
-
-from repro.core.cost import CostBreakdown, CostModel
-from repro.core.platform import FaasPlatform, InvocationResult
-from repro.core.registry import ResultRegistry
-from repro.core.worker import make_worker_handler
-from repro.data.catalog import Catalog
-from repro.sql.logical import Binder
-from repro.sql.parser import parse
-from repro.sql.physical import (PhysicalPlan, Pipeline, PlannerConfig,
-                                compile_query)
-from repro.sql.rules import optimize
-from repro.storage.io_handlers import InputHandler
-from repro.storage.object_store import ObjectStore
+# Re-exported for backward compatibility: these names historically lived
+# in this module.
+from repro.core.engine import (CoordinatorConfig, PipelineReport,  # noqa: F401
+                               QueryAborted, QueryEngine, QueryResult,
+                               QueryStats)
 
 
-class QueryAborted(RuntimeError):
-    def __init__(self, msg: str, post_mortem: dict):
-        super().__init__(msg)
-        self.post_mortem = post_mortem
+class QueryCoordinator(QueryEngine):
+    """Deprecated alias for :class:`repro.core.engine.QueryEngine`.
 
+    Each instance owns a private registry handle and worker handler bound
+    to ``store`` (the historical behavior); the semantic result cache is
+    still shared across coordinators through the store itself.
+    """
 
-@dataclasses.dataclass
-class PipelineReport:
-    pid: int
-    sem_hash: str
-    n_fragments: int
-    cache_hit: bool = False
-    attempts: int = 0
-    stragglers_retriggered: int = 0
-    transient_failures: int = 0
-    reassignments: int = 0
-    sim_s: float = 0.0
-    rows_out: int = 0
-    bytes_read: int = 0
-    bytes_written: int = 0
-    requests: int = 0
-
-
-@dataclasses.dataclass
-class QueryStats:
-    sim_latency_s: float = 0.0
-    wall_s: float = 0.0
-    pipelines: list[PipelineReport] = dataclasses.field(default_factory=list)
-    cost: CostBreakdown = dataclasses.field(default_factory=CostBreakdown)
-
-    @property
-    def cache_hits(self) -> int:
-        return sum(1 for p in self.pipelines if p.cache_hit)
-
-
-@dataclasses.dataclass
-class QueryResult:
-    location: str
-    output_names: list[str]
-    stats: QueryStats
-
-    def fetch(self, store: ObjectStore) -> dict[str, np.ndarray]:
-        cols, _, _ = InputHandler(store).read_table(self.location)
-        return cols
-
-
-@dataclasses.dataclass
-class CoordinatorConfig:
-    planner: PlannerConfig = dataclasses.field(default_factory=PlannerConfig)
-    straggler_detect_factor: float = 3.0
-    straggler_min_timeout_s: float = 0.5
-    max_attempts: int = 3
-    two_level_threshold: int = 16
-    response_poll_overhead_s: float = 0.01
-    use_result_cache: bool = True
-
-
-class QueryCoordinator:
-    def __init__(self, store: ObjectStore, catalog: Catalog, *,
-                 platform: FaasPlatform | None = None,
-                 config: CoordinatorConfig | None = None,
-                 cost_model: CostModel | None = None):
-        self.store = store
-        self.catalog = catalog
-        self.platform = platform or FaasPlatform()
-        self.config = config or CoordinatorConfig()
-        self.cost_model = cost_model or CostModel()
-        self.registry = ResultRegistry(store)
-        self.handler = make_worker_handler(store)
-
-    # -- public API ----------------------------------------------------------
-    def execute_sql(self, sql: str) -> QueryResult:
-        stmt = parse(sql)
-        lqp, _ = Binder(self.catalog).bind(stmt)
-        lqp = optimize(lqp)
-        plan = compile_query(lqp, self.catalog, self.config.planner)
-        return self.execute_plan(plan)
-
-    def execute_plan(self, plan: PhysicalPlan) -> QueryResult:
-        t_wall = time.perf_counter()
-        stats = QueryStats()
-        for stage in plan.stages():
-            stage_sim = 0.0
-            for pid in stage:
-                report = self._run_pipeline(plan.pipelines[pid], stats)
-                stats.pipelines.append(report)
-                stage_sim = max(stage_sim, report.sim_s)
-            stats.sim_latency_s += stage_sim
-        stats.wall_s = time.perf_counter() - t_wall
-        stats.cost.merge(
-            self.cost_model.coordinator_cost(stats.sim_latency_s))
-        root = plan.pipelines[plan.root_pid]
-        location = f"results/{root.sem_hash}/f0000/out.spax"
-        return QueryResult(location, plan.output_names, stats)
-
-    # -- pipeline scheduling ----------------------------------------------------
-    def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
-        report = PipelineReport(p.pid, p.sem_hash, p.n_fragments)
-        if self.config.use_result_cache and self.registry.lookup(p.sem_hash):
-            report.cache_hit = True
-            return report
-
-        prefix = f"results/{p.sem_hash}"
-        sources = self._resolve_sources(p.op)
-        specs = {
-            f: self._fragment_spec(p, f, p.n_fragments, prefix, sources)
-            for f in range(p.n_fragments)
-        }
-
-        cfg = self.config
-        two_level = p.n_fragments >= cfg.two_level_threshold
-        dispatch = self.platform.dispatch_time_s(p.n_fragments,
-                                                 two_level=two_level)
-        completions: dict[int, float] = {}
-        results: dict[int, InvocationResult] = {}
-        extra_fragments: list[dict] = []
-
-        # Quota-bounded waves (admission control).
-        order = list(specs)
-        wave_start = 0.0
-        for wave in self.platform.wave_sizes(len(order)):
-            frags = order[:wave]
-            order = order[wave:]
-            for f in frags:
-                res = self._run_fragment(p, specs[f], report, stats,
-                                         extra_fragments)
-                results[f] = res
-                completions[f] = wave_start + res.sim_runtime_s
-            wave_start = max((completions[f] for f in frags),
-                             default=wave_start)
-
-        # Straggler mitigation: detect against the fleet's fast quartile
-        # (the median is already contaminated in small or straggler-heavy
-        # fleets), then re-trigger; the effective completion races the
-        # original against the duplicate — safe because workers are
-        # idempotent single-object writers.
-        if len(completions) >= 2:
-            runtimes = np.array(list(completions.values()))
-            fast = float(np.percentile(runtimes, 25, method="lower"))
-            threshold = max(cfg.straggler_detect_factor * fast,
-                            cfg.straggler_min_timeout_s)
-            for f, t in list(completions.items()):
-                if t > threshold:
-                    dup = self._invoke(p, specs[f], report, stats,
-                                       attempt=100 + report.attempts)
-                    report.stragglers_retriggered += 1
-                    if dup.error is None:
-                        completions[f] = min(t, threshold
-                                             + dup.sim_runtime_s)
-
-        report.sim_s = (dispatch + max(completions.values(), default=0.0)
-                        + cfg.response_poll_overhead_s)
-
-        n_total = p.n_fragments + len(extra_fragments)
-        self.registry.register(
-            p.sem_hash, prefix=prefix, n_fragments=n_total,
-            partitioning=p.partitioning.to_dict(), schema=p.output_schema,
-            stats={"rows_out": report.rows_out})
-        return report
-
-    # -- fragment execution with retries/reassignment -----------------------------
-    def _run_fragment(self, p: Pipeline, spec: dict,
-                      report: PipelineReport, stats: QueryStats,
-                      extra_fragments: list[dict]) -> InvocationResult:
-        attempt = 0
-        total_runtime = 0.0
-        while True:
-            res = self._invoke(p, spec, report, stats, attempt=attempt)
-            total_runtime += res.sim_runtime_s
-            if res.error is None:
-                res.sim_runtime_s = total_runtime
-                return res
-            report.transient_failures += 1
-            attempt += 1
-            if attempt >= self.config.max_attempts:
-                raise QueryAborted(
-                    f"pipeline {p.pid} fragment {spec['fragment']} failed "
-                    f"{attempt} times",
-                    post_mortem={"pipeline": p.pid,
-                                 "fragment": spec["fragment"],
-                                 "attempts": attempt,
-                                 "last_error": res.error})
-            # Reassignment: after two failures, split a multi-unit
-            # fragment's inputs across an additional fresh worker.
-            if attempt >= 2 and len(spec["scan_units"]) > 1:
-                spec, extra = self._split_fragment(p, spec,
-                                                   len(extra_fragments))
-                extra_fragments.append(extra)
-                report.reassignments += 1
-                eres = self._invoke(p, extra, report, stats,
-                                    attempt=attempt)
-                if eres.error is not None:
-                    raise QueryAborted(
-                        "reassigned fragment failed",
-                        post_mortem={"pipeline": p.pid,
-                                     "fragment": extra["fragment"]})
-                total_runtime += 0.0  # runs in parallel with the retry
-
-    def _split_fragment(self, p: Pipeline, spec: dict, n_extra: int):
-        units = spec["scan_units"]
-        half = len(units) // 2
-        new_frag = p.n_fragments + n_extra
-        first = dict(spec, scan_units=units[:half])
-        second = dict(spec, scan_units=units[half:], fragment=new_frag)
-        return first, second
-
-    def _invoke(self, p: Pipeline, spec: dict, report: PipelineReport,
-                stats: QueryStats, *, attempt: int) -> InvocationResult:
-        report.attempts += 1
-        res = self.platform.invoke(self.handler, spec, pipeline=p.pid,
-                                   fragment=spec["fragment"],
-                                   attempt=attempt)
-        tier_ops = {}
-        if res.payload is not None:
-            s = res.payload["stats"]
-            tier_ops = s["tier_ops"]
-            report.rows_out += s["rows_out"]
-            report.bytes_read += s["bytes_read"]
-            report.bytes_written += s["bytes_written"]
-            report.requests += s["requests"]
-        stats.cost.merge(
-            self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
-        return res
-
-    # -- plumbing -------------------------------------------------------------
-    def _resolve_sources(self, op: dict) -> dict:
-        sources: dict[str, dict] = {}
-
-        def collect(o: dict):
-            if o["t"] == "scan_exchange":
-                entry = self.registry.lookup(o["source"])
-                if entry is None:
-                    raise QueryAborted(
-                        f"upstream result {o['source']} missing",
-                        post_mortem={"source": o["source"]})
-                sources[o["source"]] = entry
-            for k in ("child", "probe", "build"):
-                if k in o:
-                    collect(o[k])
-        collect(op)
-        return sources
-
-    def _fragment_spec(self, p: Pipeline, f: int, n: int, prefix: str,
-                       sources: dict) -> dict:
-        return {
-            "query_id": p.sem_hash,
-            "pipeline": p.pid,
-            "fragment": f,
-            "n_fragments": n,
-            "op": p.op,
-            "scan_units": p.scan_units[f::n],
-            "output": {"prefix": prefix,
-                       "partitioning": p.partitioning.to_dict(),
-                       "schema": p.output_schema},
-            "sources": sources,
-        }
+    def __init__(self, store, catalog, *, platform=None, config=None,
+                 cost_model=None):
+        warnings.warn(
+            "QueryCoordinator is deprecated; use repro.api.connect() — "
+            "a SkyriseSession shares one platform quota, worker handler, "
+            "and result cache across concurrent queries",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(store, catalog, platform=platform, config=config,
+                         cost_model=cost_model)

@@ -1,0 +1,406 @@
+"""Per-query execution engine (paper sections 3.1, 3.3).
+
+One ``QueryEngine`` manages the lifecycle of exactly one query: it
+compiles SQL to pipelines, schedules them stage-wise by dependency,
+invokes one worker function per fragment (two-level √W fan-out for large
+fleets), tracks worker progress, and adapts:
+
+  * stragglers → re-triggered mid-query (safe: workers are idempotent and
+    write deterministic single objects; racing duplicates overwrite
+    identical results);
+  * transient infrastructure failures → bounded retries; on repeated
+    failure the fragment's input units are *reassigned to more workers*;
+  * deterministic (code/data) failures → abort; completed pipelines stay
+    registered, so a re-run restarts from the last complete stage
+    (stage results are checkpoints);
+  * completed pipelines are registered in the result cache under their
+    semantic hash and skipped by later queries (section 3.4).
+
+Engines are cheap and stateless between queries: everything they need is
+in the catalog, the registry, and the object store. A ``SkyriseSession``
+(``repro.api``) runs many engines concurrently against one shared
+``FaasPlatform``; worker waves — *across* queries, not just within one
+pipeline — are admitted through the platform's ``AdmissionController``
+so the fleet never exceeds the function-concurrency quota.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.cost import CostBreakdown, CostModel
+from repro.core.events import QueryObserver
+from repro.core.platform import (AdmissionController, FaasPlatform,
+                                 InvocationResult)
+from repro.core.registry import ResultRegistry
+from repro.core.worker import make_worker_handler
+from repro.data.catalog import Catalog
+from repro.sql.logical import Binder
+from repro.sql.parser import parse
+from repro.sql.physical import (PhysicalPlan, Pipeline, PlannerConfig,
+                                compile_query)
+from repro.sql.rules import optimize
+from repro.storage.io_handlers import InputHandler
+from repro.storage.object_store import ObjectStore
+
+
+class QueryAborted(RuntimeError):
+    def __init__(self, msg: str, post_mortem: dict):
+        super().__init__(msg)
+        self.post_mortem = post_mortem
+
+
+class QueryCancelled(RuntimeError):
+    """Raised inside the engine when the owning handle was cancelled."""
+
+
+@dataclasses.dataclass
+class PipelineReport:
+    pid: int
+    sem_hash: str
+    n_fragments: int
+    cache_hit: bool = False
+    attempts: int = 0
+    stragglers_retriggered: int = 0
+    transient_failures: int = 0
+    reassignments: int = 0
+    sim_s: float = 0.0
+    rows_out: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+    requests: int = 0
+
+
+@dataclasses.dataclass
+class QueryStats:
+    sim_latency_s: float = 0.0
+    wall_s: float = 0.0
+    pipelines: list[PipelineReport] = dataclasses.field(default_factory=list)
+    cost: CostBreakdown = dataclasses.field(default_factory=CostBreakdown)
+    query_id: str = ""
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for p in self.pipelines if p.cache_hit)
+
+
+@dataclasses.dataclass
+class QueryResult:
+    locations: list[str]
+    output_names: list[str]
+    stats: QueryStats
+
+    @property
+    def location(self) -> str:
+        """First result object (back-compat; see ``locations``)."""
+        return self.locations[0]
+
+    def fetch(self, store: ObjectStore) -> dict[str, np.ndarray]:
+        """Read and concatenate all result fragments, in fragment order."""
+        ih = InputHandler(store)
+        parts = [ih.read_table(loc)[0] for loc in self.locations]
+        if len(parts) == 1:
+            return parts[0]
+        return {k: np.concatenate([p[k] for p in parts])
+                for k in parts[0]}
+
+
+@dataclasses.dataclass
+class CoordinatorConfig:
+    planner: PlannerConfig = dataclasses.field(default_factory=PlannerConfig)
+    straggler_detect_factor: float = 3.0
+    straggler_min_timeout_s: float = 0.5
+    max_attempts: int = 3
+    two_level_threshold: int = 16
+    response_poll_overhead_s: float = 0.01
+    use_result_cache: bool = True
+
+
+class QueryEngine:
+    """Executes one query against session-shared infrastructure.
+
+    ``registry``/``handler`` default to private instances (standalone
+    use); a session passes its shared ones so the result cache and the
+    worker code are shared across queries.
+    """
+
+    def __init__(self, store: ObjectStore, catalog: Catalog, *,
+                 platform: FaasPlatform | None = None,
+                 config: CoordinatorConfig | None = None,
+                 cost_model: CostModel | None = None,
+                 registry: ResultRegistry | None = None,
+                 handler=None,
+                 observer: QueryObserver | None = None,
+                 query_id: str = "query",
+                 cancel_check: Callable[[], None] | None = None):
+        self.store = store
+        self.catalog = catalog
+        self.platform = platform or FaasPlatform()
+        self.config = config or CoordinatorConfig()
+        self.cost_model = cost_model or CostModel()
+        self.registry = registry or ResultRegistry(store)
+        self.handler = handler or make_worker_handler(store)
+        self.observer = observer or QueryObserver()
+        self.query_id = query_id
+        self._cancel_check = cancel_check
+        self.admission: AdmissionController = self.platform.admission
+
+    # -- public API ----------------------------------------------------------
+    def plan_sql(self, sql: str) -> PhysicalPlan:
+        stmt = parse(sql)
+        lqp, _ = Binder(self.catalog).bind(stmt)
+        lqp = optimize(lqp)
+        return compile_query(lqp, self.catalog, self.config.planner)
+
+    def execute_sql(self, sql: str) -> QueryResult:
+        return self.execute_plan(self.plan_sql(sql))
+
+    def execute_plan(self, plan: PhysicalPlan) -> QueryResult:
+        t_wall = time.perf_counter()
+        stats = QueryStats(query_id=self.query_id)
+        for stage in plan.stages():
+            stage_sim = 0.0
+            for pid in stage:
+                self._check_cancel()
+                report = self._run_pipeline(plan.pipelines[pid], stats)
+                stats.pipelines.append(report)
+                stage_sim = max(stage_sim, report.sim_s)
+            stats.sim_latency_s += stage_sim
+        stats.wall_s = time.perf_counter() - t_wall
+        stats.cost.merge(
+            self.cost_model.coordinator_cost(stats.sim_latency_s))
+        root = plan.pipelines[plan.root_pid]
+        return QueryResult(self._result_locations(root),
+                           plan.output_names, stats)
+
+    # -- result location ------------------------------------------------------
+    def _result_locations(self, root: Pipeline) -> list[str]:
+        """Resolve the root pipeline's objects from its registry entry.
+
+        The registered layout is authoritative: a cache hit may have been
+        produced under a *different* physical configuration (fragment
+        count) than the current plan — semantic hashing guarantees only
+        logical equivalence (section 3.4).
+        """
+        entry = self.registry.lookup(root.sem_hash)
+        if entry is not None:
+            prefix, n = entry["prefix"], entry["n_fragments"]
+        else:  # cache disabled + nothing registered (defensive)
+            prefix, n = f"results/{root.sem_hash}", root.n_fragments
+        return [f"{prefix}/f{f:04d}/out.spax" for f in range(n)]
+
+    # -- pipeline scheduling ----------------------------------------------------
+    def _check_cancel(self) -> None:
+        if self._cancel_check is not None:
+            self._cancel_check()
+
+    def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
+        report = PipelineReport(p.pid, p.sem_hash, p.n_fragments)
+        if self.config.use_result_cache and self.registry.lookup(p.sem_hash):
+            report.cache_hit = True
+            self.observer.on_pipeline_complete(self.query_id, report)
+            return report
+        self.observer.on_pipeline_start(self.query_id, p.pid, p.sem_hash,
+                                        p.n_fragments)
+
+        prefix = f"results/{p.sem_hash}"
+        sources = self._resolve_sources(p.op)
+        specs = {
+            f: self._fragment_spec(p, f, p.n_fragments, prefix, sources)
+            for f in range(p.n_fragments)
+        }
+
+        cfg = self.config
+        two_level = p.n_fragments >= cfg.two_level_threshold
+        dispatch = self.platform.dispatch_time_s(p.n_fragments,
+                                                 two_level=two_level)
+        completions: dict[int, float] = {}
+        extra_fragments: list[dict] = []
+
+        # Quota-bounded waves, admitted against the *shared* ledger so
+        # concurrent queries on this platform never exceed the quota
+        # together. Slots are held for the wave's synchronous execution
+        # and released before requesting more (no hold-and-wait).
+        order = list(specs)
+        wave_start = 0.0
+        while order:
+            self._check_cancel()
+            grant = self.admission.acquire(len(order))
+            frags, order = order[:grant], order[grant:]
+            try:
+                for f in frags:
+                    res = self._run_fragment(p, specs[f], report, stats,
+                                             extra_fragments)
+                    completions[f] = wave_start + res.sim_runtime_s
+            finally:
+                self.admission.release(grant)
+            wave_start = max((completions[f] for f in frags),
+                             default=wave_start)
+
+        # Straggler mitigation: detect against the fleet's fast quartile
+        # (the median is already contaminated in small or straggler-heavy
+        # fleets), then re-trigger; the effective completion races the
+        # original against the duplicate — safe because workers are
+        # idempotent single-object writers.
+        if len(completions) >= 2:
+            runtimes = np.array(list(completions.values()))
+            fast = float(np.percentile(runtimes, 25, method="lower"))
+            threshold = max(cfg.straggler_detect_factor * fast,
+                            cfg.straggler_min_timeout_s)
+            for f, t in list(completions.items()):
+                if t > threshold:
+                    self.observer.on_straggler(self.query_id, p.pid, f)
+                    grant = self.admission.acquire(1)
+                    try:
+                        dup = self._invoke(p, specs[f], report, stats,
+                                           attempt=100 + report.attempts)
+                    finally:
+                        self.admission.release(grant)
+                    report.stragglers_retriggered += 1
+                    if dup.error is None:
+                        completions[f] = min(t, threshold
+                                             + dup.sim_runtime_s)
+
+        report.sim_s = (dispatch + max(completions.values(), default=0.0)
+                        + cfg.response_poll_overhead_s)
+
+        n_total = p.n_fragments + len(extra_fragments)
+        self.registry.register(
+            p.sem_hash, prefix=prefix, n_fragments=n_total,
+            partitioning=p.partitioning.to_dict(), schema=p.output_schema,
+            stats={"rows_out": report.rows_out})
+        self.observer.on_pipeline_complete(self.query_id, report)
+        return report
+
+    # -- fragment execution with retries/reassignment -----------------------------
+    def _run_fragment(self, p: Pipeline, spec: dict,
+                      report: PipelineReport, stats: QueryStats,
+                      extra_fragments: list[dict]) -> InvocationResult:
+        attempt = 0
+        total_runtime = 0.0
+        while True:
+            res = self._invoke(p, spec, report, stats, attempt=attempt)
+            total_runtime += res.sim_runtime_s
+            if res.error is None:
+                res.sim_runtime_s = total_runtime
+                return res
+            report.transient_failures += 1
+            attempt += 1
+            if attempt >= self.config.max_attempts:
+                raise QueryAborted(
+                    f"pipeline {p.pid} fragment {spec['fragment']} failed "
+                    f"{attempt} times",
+                    post_mortem={"pipeline": p.pid,
+                                 "fragment": spec["fragment"],
+                                 "attempts": attempt,
+                                 "last_error": res.error})
+            self.observer.on_retry(self.query_id, p.pid, spec["fragment"],
+                                   attempt)
+            # Reassignment: after two failures, split a multi-unit
+            # fragment's inputs across an additional fresh worker. The
+            # extra worker reuses the failed worker's quota slot (still
+            # held by this wave), so no new admission is requested.
+            if attempt >= 2 and len(spec["scan_units"]) > 1:
+                spec, extra = self._split_fragment(p, spec,
+                                                   len(extra_fragments))
+                extra_fragments.append(extra)
+                report.reassignments += 1
+                eres = self._invoke(p, extra, report, stats,
+                                    attempt=attempt)
+                if eres.error is not None:
+                    raise QueryAborted(
+                        "reassigned fragment failed",
+                        post_mortem={"pipeline": p.pid,
+                                     "fragment": extra["fragment"]})
+                total_runtime += 0.0  # runs in parallel with the retry
+
+    def _split_fragment(self, p: Pipeline, spec: dict, n_extra: int):
+        units = spec["scan_units"]
+        half = len(units) // 2
+        new_frag = p.n_fragments + n_extra
+        first = dict(spec, scan_units=units[:half])
+        second = dict(spec, scan_units=units[half:], fragment=new_frag)
+        return first, second
+
+    def _invoke(self, p: Pipeline, spec: dict, report: PipelineReport,
+                stats: QueryStats, *, attempt: int) -> InvocationResult:
+        report.attempts += 1
+        res = self.platform.invoke(self.handler, spec, pipeline=p.pid,
+                                   fragment=spec["fragment"],
+                                   attempt=attempt)
+        tier_ops = {}
+        if res.payload is not None:
+            s = res.payload["stats"]
+            tier_ops = s["tier_ops"]
+            report.rows_out += s["rows_out"]
+            report.bytes_read += s["bytes_read"]
+            report.bytes_written += s["bytes_written"]
+            report.requests += s["requests"]
+        stats.cost.merge(
+            self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
+        return res
+
+    # -- plumbing -------------------------------------------------------------
+    def _resolve_sources(self, op: dict) -> dict:
+        sources: dict[str, dict] = {}
+
+        def collect(o: dict):
+            if o["t"] == "scan_exchange":
+                entry = self.registry.lookup(o["source"])
+                if entry is None:
+                    raise QueryAborted(
+                        f"upstream result {o['source']} missing",
+                        post_mortem={"source": o["source"]})
+                sources[o["source"]] = entry
+            for k in ("child", "probe", "build"):
+                if k in o:
+                    collect(o[k])
+        collect(op)
+        return sources
+
+    def _fragment_spec(self, p: Pipeline, f: int, n: int, prefix: str,
+                       sources: dict) -> dict:
+        return {
+            "query_id": p.sem_hash,
+            "pipeline": p.pid,
+            "fragment": f,
+            "n_fragments": n,
+            "op": p.op,
+            "scan_units": p.scan_units[f::n],
+            "output": {"prefix": prefix,
+                       "partitioning": p.partitioning.to_dict(),
+                       "schema": p.output_schema},
+            "sources": sources,
+        }
+
+
+def explain_plan(plan: PhysicalPlan) -> str:
+    """Human-readable physical plan: stages, pipelines, fragment fleets."""
+
+    def op_kinds(op: dict) -> list[str]:
+        kinds = [op["t"]]
+        for k in ("child", "probe", "build"):
+            if k in op:
+                kinds.extend(op_kinds(op[k]))
+        return kinds
+
+    lines = [f"physical plan · {len(plan.pipelines)} pipelines · "
+             f"output {plan.output_names}"]
+    for si, stage in enumerate(plan.stages()):
+        lines.append(f"stage {si}:")
+        for pid in stage:
+            p = plan.pipelines[pid]
+            role = " (root)" if pid == plan.root_pid else ""
+            part = p.partitioning
+            dest = (f"hash[{','.join(part.keys)}]×{part.n_dest} "
+                    f"@{part.tier}" if part.kind == "hash" else "single")
+            lines.append(
+                f"  pipeline {pid}{role} · sem={p.sem_hash[:10]} · "
+                f"{p.n_fragments} workers · "
+                f"in≈{p.input_bytes / 1e6:.1f}MB · out={dest}")
+            lines.append("    ops: " + " → ".join(op_kinds(p.op)[::-1]))
+    return "\n".join(lines)

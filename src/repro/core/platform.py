@@ -20,11 +20,59 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from typing import Callable
 
 import numpy as np
 
 from repro.core.cost import LAMBDA_COLD_START, LAMBDA_WARM_START
+
+
+class AdmissionController:
+    """Cross-query admission control over one function-concurrency quota.
+
+    Every query engine sharing a platform draws its execution waves from
+    this ledger, so *concurrently submitted queries* — not just fragments
+    within one pipeline — are bounded by the per-user quota (paper
+    section 2.1). ``acquire`` blocks until at least one slot is free and
+    grants up to ``want`` slots; callers release after the wave returns.
+
+    ``max_in_flight`` is the observed high-water mark (test/ops signal
+    that the quota was never exceeded).
+    """
+
+    def __init__(self, quota: int):
+        if quota < 1:
+            raise ValueError(f"concurrency quota must be >= 1, got {quota}")
+        self.quota = quota
+        self._cv = threading.Condition()
+        self._in_flight = 0
+        self.max_in_flight = 0
+
+    @property
+    def in_flight(self) -> int:
+        with self._cv:
+            return self._in_flight
+
+    def acquire(self, want: int) -> int:
+        """Block until slots are free; grant ``min(want, available)``."""
+        if want <= 0:
+            return 0
+        with self._cv:
+            while self.quota - self._in_flight <= 0:
+                self._cv.wait()
+            grant = min(want, self.quota - self._in_flight)
+            self._in_flight += grant
+            self.max_in_flight = max(self.max_in_flight, self._in_flight)
+            return grant
+
+    def release(self, n: int) -> None:
+        if n <= 0:
+            return
+        with self._cv:
+            self._in_flight -= n
+            assert self._in_flight >= 0, "admission release underflow"
+            self._cv.notify_all()
 
 
 @dataclasses.dataclass
@@ -73,9 +121,12 @@ class FaasPlatform:
         self.quota = quota
         self.faults = faults or FaultPlan()
         self._rng = np.random.default_rng(seed)
+        self._lock = threading.Lock()
         self._warm_sandboxes = 0
         self.invocations = 0
         self.cold_starts = 0
+        # Shared ledger: all queries on this platform draw waves from it.
+        self.admission = AdmissionController(quota)
 
     # -- startup latency draws -------------------------------------------------
     def _start_latency(self, cold: bool) -> float:
@@ -102,36 +153,34 @@ class FaasPlatform:
                payload: dict, *, pipeline: int, fragment: int,
                attempt: int) -> InvocationResult:
         """Run one worker function. The handler returns
-        (response_payload, sim_worker_runtime_s)."""
-        self.invocations += 1
-        cold = self._warm_sandboxes <= 0
-        if cold:
-            self.cold_starts += 1
-        else:
-            self._warm_sandboxes -= 1
-        start = self._start_latency(cold)
+        (response_payload, sim_worker_runtime_s). Thread-safe: sandbox
+        bookkeeping is locked; the handler itself runs unlocked so
+        concurrent queries overlap."""
+        with self._lock:
+            self.invocations += 1
+            cold = self._warm_sandboxes <= 0
+            if cold:
+                self.cold_starts += 1
+            else:
+                self._warm_sandboxes -= 1
+            start = self._start_latency(cold)
 
         fail, straggle = self.faults.roll(pipeline, fragment, attempt)
         if fail:
             # the sandbox died mid-flight; it still cost its startup time
-            self._warm_sandboxes += 1
+            with self._lock:
+                self._warm_sandboxes += 1
             return InvocationResult(None, "transient", start, start, cold)
         try:
             response, runtime = handler(payload)
         except TransientWorkerError as e:  # pragma: no cover - defensive
-            self._warm_sandboxes += 1
+            with self._lock:
+                self._warm_sandboxes += 1
             return InvocationResult(None, str(e), start, start, cold)
         if straggle:
             runtime = runtime * self.faults.straggler_factor
-        self._warm_sandboxes += 1
+        with self._lock:
+            self._warm_sandboxes += 1
         return InvocationResult(response, None, start, start + runtime,
                                 cold)
 
-    def wave_sizes(self, n: int) -> list[int]:
-        """Admission control: quota-bounded execution waves."""
-        waves = []
-        while n > 0:
-            w = min(n, self.quota)
-            waves.append(w)
-            n -= w
-        return waves

@@ -8,10 +8,15 @@ must partition over the production meshes — 16×16 (data, model) single pod
 and 2×16×16 (pod, data, model) multi-pod — and fit per-device memory.
 Emits the roofline terms per cell for EXPERIMENTS.md.
 
+``--queries`` is the SQL analog: compile every TPC-H query to its
+physical pipeline plan through the ``repro.api`` session (planning only —
+zero workers invoked), proving planner coherence across scale factors.
+
 Usage:
   python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
   python -m repro.launch.dryrun --all [--mesh single|multi|both]
   python -m repro.launch.dryrun --all --out bench/dryrun.jsonl
+  python -m repro.launch.dryrun --queries [--sf 0.01]
 """
 
 import argparse
@@ -194,6 +199,35 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     return record, compiled
 
 
+def dryrun_queries(sf: float = 0.01, out: str | None = None) -> int:
+    """Plan (never execute) all TPC-H queries; returns failure count."""
+    from repro.api import connect
+    from repro.sql.queries import QUERIES
+
+    session = connect(tier="local")
+    session.ensure_tpch(sf=sf, n_parts=4)
+    out_f = open(out, "a") if out else None
+    failures = 0
+    for qname, sql in QUERIES.items():
+        try:
+            text = session.explain(sql)
+            n_pipes = text.splitlines()[0]
+            print(f"[ok]   {qname}: {n_pipes}")
+            rec = {"query": qname, "sf": sf, "status": "ok",
+                   "plan": text}
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {qname}: {e!r}")
+            rec = {"query": qname, "sf": sf, "status": "error",
+                   "error": repr(e)}
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+    if out_f:
+        out_f.close()
+    assert session.platform.invocations == 0, "dry-run invoked workers"
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -210,7 +244,18 @@ def main() -> None:
                     help="gradient accumulation steps")
     ap.add_argument("--bf16-adam", action="store_true",
                     help="bf16 optimizer moments")
+    ap.add_argument("--queries", action="store_true",
+                    help="SQL mode: compile all TPC-H plans (no "
+                         "execution) through the repro.api session")
+    ap.add_argument("--sf", type=float, default=0.01,
+                    help="TPC-H scale factor for --queries")
     args = ap.parse_args()
+
+    if args.queries:
+        failures = dryrun_queries(sf=args.sf, out=args.out)
+        if failures:
+            raise SystemExit(f"{failures} query plans failed")
+        return
 
     extra = {}
     if args.seq_parallel:

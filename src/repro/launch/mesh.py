@@ -12,19 +12,28 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types`` kwarg for ``jax.make_mesh`` where supported.
+
+    ``jax.sharding.AxisType`` only exists on newer jax; older versions
+    treat every axis as Auto already, so omitting the kwarg is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(len(axes)))
 
 
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small mesh for CPU tests (requires host-device override)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **auto_axis_kwargs(2))
 
 
 # TPU v5e hardware constants (roofline denominators).

@@ -1,6 +1,13 @@
 """SQL query driver: the end-to-end Skyrise entry point.
 
+Built on the public client API (``repro.api``): one ``SkyriseSession``
+owns the object store, the FaaS platform (with its concurrency quota),
+and the semantic result cache; queries are *submitted* and run
+concurrently against that shared infrastructure.
+
   PYTHONPATH=src python -m repro.launch.sql --sf 0.05 --query q12
+  PYTHONPATH=src python -m repro.launch.sql --query q1,q6,q12   # concurrent
+  PYTHONPATH=src python -m repro.launch.sql --query q3 --explain
   PYTHONPATH=src python -m repro.launch.sql --sf 0.01 \
       --sql "select count(*) as n from lineitem where l_quantity < 10"
 """
@@ -11,46 +18,17 @@ import argparse
 
 import numpy as np
 
-from repro.core import CoordinatorConfig, FaasPlatform, QueryCoordinator
-from repro.data import generate_tpch
+from repro.api import ConsoleObserver, CoordinatorConfig, connect
 from repro.sql.physical import PlannerConfig
 from repro.sql.queries import QUERIES
-from repro.storage import FilesystemBackend, ObjectStore
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--sf", type=float, default=0.01)
-    ap.add_argument("--query", default="q12", choices=list(QUERIES))
-    ap.add_argument("--sql", default=None)
-    ap.add_argument("--store-dir", default=None,
-                    help="persist the store on disk (reused across runs)")
-    ap.add_argument("--no-cache", action="store_true")
-    ap.add_argument("--tier", default="s3-standard")
-    args = ap.parse_args()
-
-    backend = FilesystemBackend(args.store_dir) if args.store_dir else None
-    store = ObjectStore(backend, tier=args.tier)
-    catalog_key = f"tpch/sf{args.sf:g}/catalog"
-    if store.exists(catalog_key):
-        from repro.data.catalog import Catalog
-        catalog = Catalog.load(store, catalog_key)
-        print(f"[sql] reusing existing TPC-H sf={args.sf:g}")
-    else:
-        print(f"[sql] generating TPC-H sf={args.sf:g} …")
-        catalog = generate_tpch(store, sf=args.sf)
-
-    cfg = CoordinatorConfig(
-        planner=PlannerConfig(bytes_per_worker=512 << 10),
-        use_result_cache=not args.no_cache)
-    coord = QueryCoordinator(store, catalog, platform=FaasPlatform(),
-                             config=cfg)
-    sql = args.sql or QUERIES[args.query]
-    res = coord.execute_sql(sql)
-    cols = res.fetch(store)
+def _print_result(session, handle) -> None:
+    res = handle.result()
+    cols = res.fetch(session.store)
     s = res.stats
 
-    print(f"\n[sql] result @ {res.location}")
+    print(f"\n[{handle.query_id}] result @ {res.locations}")
     names = [n for n in res.output_names if n in cols]
     print(" | ".join(f"{n:>16s}" for n in names))
     n_rows = len(next(iter(cols.values()))) if cols else 0
@@ -60,10 +38,69 @@ def main() -> None:
                          else f"{cols[n][i]:>16}" for n in names))
     if n_rows > 20:
         print(f"… {n_rows - 20} more rows")
-    print(f"\n[sql] sim latency {s.sim_latency_s:.2f}s · wall "
+    print(f"[{handle.query_id}] sim latency {s.sim_latency_s:.2f}s · wall "
           f"{s.wall_s:.2f}s · cost {s.cost.total_cents:.4f}¢ · "
           f"workers {sum(p.n_fragments for p in s.pipelines)} · "
           f"cache hits {s.cache_hits}/{len(s.pipelines)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sf", type=float, default=0.01)
+    ap.add_argument("--query", default="q12",
+                    help="named TPC-H queries, comma-separated "
+                         f"(concurrent); choices: {list(QUERIES)}")
+    ap.add_argument("--sql", default=None)
+    ap.add_argument("--store-dir", default=None,
+                    help="persist the store on disk (reused across runs)")
+    ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--tier", default="s3-standard")
+    ap.add_argument("--quota", type=int, default=1000,
+                    help="shared function-concurrency quota")
+    ap.add_argument("--explain", action="store_true",
+                    help="print physical plans without executing")
+    ap.add_argument("--verbose", action="store_true",
+                    help="trace pipeline/straggler/retry events")
+    args = ap.parse_args()
+
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=512 << 10),
+        use_result_cache=not args.no_cache)
+    if args.sql:
+        statements = [args.sql]
+    else:
+        names = [q.strip() for q in args.query.split(",") if q.strip()]
+        unknown = [q for q in names if q not in QUERIES]
+        if unknown:
+            raise SystemExit(f"unknown queries {unknown}; "
+                             f"choices: {list(QUERIES)}")
+        statements = [QUERIES[q] for q in names]
+
+    session = connect(store_dir=args.store_dir, tier=args.tier,
+                      quota=args.quota, config=cfg,
+                      observers=(ConsoleObserver(),) if args.verbose
+                      else ())
+    if session.store.exists(f"tpch/sf{args.sf:g}/catalog"):
+        print(f"[sql] reusing existing TPC-H sf={args.sf:g}")
+    else:
+        print(f"[sql] generating TPC-H sf={args.sf:g} …")
+    session.ensure_tpch(sf=args.sf)
+
+    if args.explain:
+        for stmt in statements:
+            print(session.explain(stmt))
+        return
+
+    with session:
+        handles = [session.submit(stmt) for stmt in statements]
+        for handle in handles:
+            _print_result(session, handle)
+        if len(handles) > 1:
+            st = session.stats()
+            print(f"\n[sql] session: {st['queries_submitted']} queries · "
+                  f"{st['platform_invocations']} invocations · peak "
+                  f"{st['max_workers_in_flight']}/{st['quota']} workers "
+                  f"in flight")
 
 
 if __name__ == "__main__":

@@ -130,7 +130,8 @@ class InputHandler:
                 del before
                 spec = footer.spec(n)
                 parts[n].append(
-                    pax.decompress_chunk(spec, meta.raw_len, res.data))
+                    pax.decompress_chunk(spec, meta.raw_len, res.data,
+                                         footer.codec))
         stats.sim_time_s += _pool_makespan(latencies, self.pool_size)
 
         out = {}

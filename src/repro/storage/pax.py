@@ -24,12 +24,13 @@ from typing import Callable, Sequence
 
 import msgpack
 import numpy as np
-import zstandard
+
+from repro.storage import compression
 
 MAGIC = b"SPAX1\x00"
 TAIL_LEN = 4 + len(MAGIC)  # u32 footer length + magic
 
-_ZSTD_LEVEL = 3
+_COMPRESS_LEVEL = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,7 @@ class PaxFooter:
     n_rows: int
     columns: list[ColumnSpec]
     row_groups: list[RowGroupMeta]
+    codec: str = "zstd"
 
     def spec(self, name: str) -> ColumnSpec:
         for c in self.columns:
@@ -79,8 +81,14 @@ def _stats(spec: ColumnSpec, arr: np.ndarray):
 
 def write_pax(columns: dict[str, np.ndarray],
               schema: Sequence[ColumnSpec],
-              row_group_rows: int = 65536) -> bytes:
-    """Serialize columns (all equal length) to SPAX bytes."""
+              row_group_rows: int = 65536,
+              codec: str | None = None) -> bytes:
+    """Serialize columns (all equal length) to SPAX bytes.
+
+    ``codec`` defaults to zstd when available, else zlib; the choice is
+    recorded in the footer so readers dispatch per file.
+    """
+    codec = codec or compression.DEFAULT_CODEC
     names = [c.name for c in schema]
     assert set(names) == set(columns), (names, list(columns))
     n_rows = len(columns[names[0]]) if names else 0
@@ -89,7 +97,6 @@ def write_pax(columns: dict[str, np.ndarray],
         assert len(arr) == n_rows, (c.name, len(arr), n_rows)
         assert arr.dtype == c.np_dtype(), (c.name, arr.dtype, c.dtype)
 
-    cctx = zstandard.ZstdCompressor(level=_ZSTD_LEVEL)
     buf = io.BytesIO()
     buf.write(MAGIC)
     row_groups: list[RowGroupMeta] = []
@@ -101,7 +108,7 @@ def write_pax(columns: dict[str, np.ndarray],
         for c in schema:
             arr = np.ascontiguousarray(columns[c.name][start:stop])
             raw = arr.tobytes()
-            comp = cctx.compress(raw)
+            comp = compression.compress(raw, codec, level=_COMPRESS_LEVEL)
             off = buf.tell()
             buf.write(comp)
             vmin, vmax = _stats(c, arr)
@@ -112,6 +119,7 @@ def write_pax(columns: dict[str, np.ndarray],
 
     footer = {
         "version": 1,
+        "codec": codec,
         "n_rows": n_rows,
         "columns": [
             {"name": c.name, "kind": c.kind, "dtype": c.dtype,
@@ -148,7 +156,8 @@ def parse_footer(footer_bytes: bytes) -> PaxFooter:
              for n, m in rg["chunks"].items()})
         for rg in raw["row_groups"]
     ]
-    return PaxFooter(raw["n_rows"], columns, row_groups)
+    return PaxFooter(raw["n_rows"], columns, row_groups,
+                     raw.get("codec", "zstd"))
 
 
 def footer_byte_range(file_size: int, tail: bytes) -> tuple[int, int]:
@@ -159,9 +168,9 @@ def footer_byte_range(file_size: int, tail: bytes) -> tuple[int, int]:
 
 
 def decompress_chunk(spec: ColumnSpec, meta_raw_len: int,
-                     comp: bytes) -> np.ndarray:
-    raw = zstandard.ZstdDecompressor().decompress(
-        comp, max_output_size=max(meta_raw_len, 1))
+                     comp: bytes, codec: str = "zstd") -> np.ndarray:
+    raw = compression.decompress(comp, codec,
+                                 max_output_size=meta_raw_len)
     return np.frombuffer(raw, dtype=spec.np_dtype())
 
 

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.exec  # noqa: F401 (x64)
 from repro.analysis.roofline import parse_collectives

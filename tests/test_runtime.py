@@ -186,5 +186,18 @@ def test_two_level_invocation_dispatch_scaling():
 
 
 def test_quota_waves():
-    plat = FaasPlatform(seed=0, quota=100)
-    assert plat.wave_sizes(250) == [100, 100, 50]
+    """The admission ledger partitions demand into quota-bounded waves
+    (the single-tenant case: acquire/release with no other holders)."""
+    from repro.core import AdmissionController
+    adm = FaasPlatform(seed=0, quota=100).admission
+    assert isinstance(adm, AdmissionController)
+    waves, n = [], 250
+    while n:
+        g = adm.acquire(n)
+        adm.release(g)
+        waves.append(g)
+        n -= g
+    assert waves == [100, 100, 50]
+    assert adm.max_in_flight == 100
+    with pytest.raises(ValueError):
+        AdmissionController(quota=0)

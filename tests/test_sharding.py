@@ -24,8 +24,9 @@ from repro.launch.specs import build_cell
 from repro.parallel import sharding as sh
 from repro.analysis.roofline import analyze
 
+from repro.launch.mesh import auto_axis_kwargs
 mesh = jax.make_mesh((2, 2, 4), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+                     **auto_axis_kwargs(3))
 plan = sh.make_plan(mesh)
 cfg = get_reduced("granite-3-2b")
 import dataclasses

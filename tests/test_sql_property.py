@@ -4,7 +4,10 @@ randomly generated tables — the system invariant behind the paper's
 idempotent re-execution guarantees."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import CoordinatorConfig, FaasPlatform, QueryCoordinator
 from repro.data.catalog import Catalog, TableMeta
