@@ -17,6 +17,7 @@ measurements on this host.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -38,13 +39,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all"] + list(SUITES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken configs (CI deadlock/regression "
+                         "guard); suites without a smoke mode run "
+                         "unchanged")
     args = ap.parse_args()
     names = list(SUITES) if args.suite == "all" else [args.suite]
     print("name,us_per_call,derived")
     failed = 0
     for name in names:
+        fn = SUITES[name]
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kwargs["smoke"] = True
         try:
-            for row, us, derived in SUITES[name]():
+            for row, us, derived in fn(**kwargs):
                 print(f"{row},{us:.1f},{derived}")
         except Exception:  # noqa: BLE001
             failed += 1

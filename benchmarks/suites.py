@@ -34,10 +34,9 @@ def _db(sf, seed=0, tier="s3-standard", n_parts=None):
 def _session(sf, *, cfg=CFG, seed=0, tier="s3-standard", n_parts=None,
              platform_seed=0, faults=None, quota=1000, **kw):
     store, catalog = _db(sf, seed=seed, tier=tier, n_parts=n_parts)
-    return connect(store, catalog,
-                   platform=FaasPlatform(seed=platform_seed, quota=quota,
-                                         faults=faults),
-                   config=cfg, **kw)
+    # session-built platform → close() also shuts down its thread pool
+    return connect(store, catalog, quota=quota, faults=faults,
+                   seed=platform_seed, config=cfg, **kw)
 
 
 # -- Table 2: startup latencies -----------------------------------------------------
@@ -169,24 +168,33 @@ def bench_result_cache():
 
 # -- SkyriseSession: cross-query admission over one shared quota --------------------------
 
-def bench_concurrency(n_queries: int = 4, quota: int = 8):
+def bench_concurrency(n_queries: int = 4, quota: int = 8, *,
+                      smoke: bool = False):
     """Multi-query sessions: N queries through one shared platform.
 
     Sequential = one query at a time (the old one-coordinator-per-query
-    pattern); concurrent = all submitted up front, interleaved by the
-    session scheduler under the shared admission quota.
+    pattern); concurrent = all submitted up front, their fragments
+    running wall-clock-parallel on the threaded backend under the shared
+    admission quota (per-fragment slot release). The dedup row submits
+    one query N× concurrently: in-flight claim/publish sharing keeps the
+    invocation count at one solo execution.
+
+    ``smoke`` shrinks the config for CI deadlock detection.
     """
+    sf, n_parts = (0.01, 4) if smoke else (0.02, 6)
+    if smoke:
+        n_queries, quota = min(n_queries, 2), min(quota, 4)
     qnames = ("q1", "q6", "q12", "q14")[:n_queries]
     rows = []
     cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
 
     # warmup: pay in-process JIT compilation once so neither timed run
     # benefits from the other's compile cache
-    with _session(0.02, cfg=cfg, n_parts=6, quota=quota) as warm:
+    with _session(sf, cfg=cfg, n_parts=n_parts, quota=quota) as warm:
         for q in qnames:
             warm.sql(QUERIES[q])
 
-    with _session(0.02, cfg=cfg, n_parts=6, quota=quota,
+    with _session(sf, cfg=cfg, n_parts=n_parts, quota=quota,
                   max_concurrent_queries=1) as session:
         t0 = time.perf_counter()
         for q in qnames:
@@ -198,7 +206,7 @@ def bench_concurrency(n_queries: int = 4, quota: int = 8):
                      f"peak_in_flight="
                      f"{session.platform.admission.max_in_flight}"))
 
-    with _session(0.02, cfg=cfg, n_parts=6, quota=quota,
+    with _session(sf, cfg=cfg, n_parts=n_parts, quota=quota,
                   max_concurrent_queries=n_queries) as session:
         t0 = time.perf_counter()
         handles = [session.submit(QUERIES[q]) for q in qnames]
@@ -210,6 +218,24 @@ def bench_concurrency(n_queries: int = 4, quota: int = 8):
                  f"speedup={seq_wall / conc_wall:.2f}x;"
                  f"peak_in_flight={st['max_workers_in_flight']};"
                  f"quota={quota}"))
+
+    # in-flight dedup: N concurrent submissions of one query share a
+    # single execution (cache enabled; claims span the whole session)
+    with _session(sf, cfg=CoordinatorConfig(planner=CFG.planner),
+                  n_parts=n_parts, quota=quota,
+                  max_concurrent_queries=n_queries) as session:
+        t0 = time.perf_counter()
+        handles = [session.submit(QUERIES[qnames[0]])
+                   for _ in range(n_queries)]
+        for h in handles:
+            h.result()
+        dedup_wall = time.perf_counter() - t0
+        st = session.stats()
+    rows.append((
+        f"concurrency/{n_queries}x_same_query_dedup", dedup_wall * 1e6,
+        f"invocations={st['platform_invocations']};"
+        f"claims={st['registry_claims']};"
+        f"inflight_dedup_hits={st['inflight_dedup_hits']}"))
     return rows
 
 

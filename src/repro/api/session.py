@@ -15,9 +15,14 @@ session owns those shared pieces once::
 
 ``submit`` enqueues and returns a :class:`QueryHandle` immediately; a
 small scheduler drives up to ``max_concurrent_queries`` per-query
-engines, all drawing execution waves from the platform's shared
-``AdmissionController`` — so the combined in-flight worker fleet of all
-queries never exceeds the per-user quota.
+engines. Their fragments run wall-clock-parallel on the platform's
+thread pool, each holding one slot of the shared ``AdmissionController``
+for exactly its own lifetime (per-fragment slot release) — so the
+combined in-flight worker fleet of all queries never exceeds the
+per-user quota, and a finished worker's slot immediately serves any
+waiting query. Concurrent queries that want the same pipeline
+(semantic hash) share one in-flight execution through the registry's
+claim/publish/await_complete protocol instead of racing duplicates.
 """
 
 from __future__ import annotations
@@ -72,6 +77,9 @@ class SkyriseSession:
                                 seed=seed)
         self.store = store
         self.catalog = catalog
+        # A platform this session built is also torn down by close();
+        # an externally passed one may be shared with other sessions.
+        self._owns_platform = platform is None
         self.platform = platform or FaasPlatform(
             quota=1000 if quota is None else quota, seed=seed,
             faults=faults)
@@ -172,6 +180,8 @@ class SkyriseSession:
             threads = list(self._threads)
         for t in threads:
             t.join()
+        if self._owns_platform:
+            self.platform.close()
 
     def __enter__(self) -> "SkyriseSession":
         return self
@@ -193,6 +203,8 @@ class SkyriseSession:
             "platform_cold_starts": self.platform.cold_starts,
             "quota": adm.quota,
             "max_workers_in_flight": adm.max_in_flight,
+            "registry_claims": self.registry.claims,
+            "inflight_dedup_hits": self.registry.dedup_hits,
             "store_cost_cents": self.store.stats.cost_cents,
         }
 

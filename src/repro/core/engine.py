@@ -14,12 +14,21 @@ fleets), tracks worker progress, and adapts:
     registered, so a re-run restarts from the last complete stage
     (stage results are checkpoints);
   * completed pipelines are registered in the result cache under their
-    semantic hash and skipped by later queries (section 3.4).
+    semantic hash and skipped by later queries (section 3.4);
+  * *in-flight* pipelines are claimed in the registry, so a concurrent
+    query wanting the same semantic hash blocks on the one running
+    execution (claim/publish/await_complete) instead of racing it.
+
+A pipeline's fragments execute concurrently in wall-clock on the
+platform's thread pool. Admission is per *fragment slot*: each fragment
+holds exactly one quota slot for exactly its own lifetime, so a finished
+worker's slot is instantly available to any fragment of any query — no
+wave barrier on the slowest worker.
 
 Engines are cheap and stateless between queries: everything they need is
 in the catalog, the registry, and the object store. A ``SkyriseSession``
 (``repro.api``) runs many engines concurrently against one shared
-``FaasPlatform``; worker waves — *across* queries, not just within one
+``FaasPlatform``; fragments — *across* queries, not just within one
 pipeline — are admitted through the platform's ``AdmissionController``
 so the fleet never exceeds the function-concurrency quota.
 """
@@ -27,6 +36,8 @@ so the fleet never exceeds the function-concurrency quota.
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import threading
 import time
 from typing import Callable
 
@@ -64,6 +75,7 @@ class PipelineReport:
     sem_hash: str
     n_fragments: int
     cache_hit: bool = False
+    deduped: bool = False    # in-flight dedup: shared a peer's execution
     attempts: int = 0
     stragglers_retriggered: int = 0
     transient_failures: int = 0
@@ -148,6 +160,8 @@ class QueryEngine:
         self.query_id = query_id
         self._cancel_check = cancel_check
         self.admission: AdmissionController = self.platform.admission
+        # fragments of one pipeline report concurrently
+        self._metrics_lock = threading.Lock()
 
     # -- public API ----------------------------------------------------------
     def plan_sql(self, sql: str) -> PhysicalPlan:
@@ -200,10 +214,38 @@ class QueryEngine:
 
     def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
         report = PipelineReport(p.pid, p.sem_hash, p.n_fragments)
-        if self.config.use_result_cache and self.registry.lookup(p.sem_hash):
-            report.cache_hit = True
-            self.observer.on_pipeline_complete(self.query_id, report)
-            return report
+        claimed = False
+        if self.config.use_result_cache:
+            # claim/publish/await_complete: exactly one of N concurrent
+            # queries wanting this sem_hash executes it; the rest block
+            # on the in-flight entry and share the published result.
+            while True:
+                if self.registry.lookup(p.sem_hash):
+                    report.cache_hit = True
+                    self.observer.on_pipeline_complete(self.query_id,
+                                                       report)
+                    return report
+                if self.registry.claim(p.sem_hash):
+                    claimed = True
+                    break
+                entry = self.registry.await_complete(
+                    p.sem_hash, cancel_check=self._check_cancel)
+                if entry is not None:
+                    report.cache_hit = True
+                    report.deduped = True
+                    self.observer.on_pipeline_complete(self.query_id,
+                                                       report)
+                    return report
+                # the owner abandoned (failed/cancelled) → try to claim
+        try:
+            return self._execute_pipeline(p, stats, report)
+        except BaseException:
+            if claimed:
+                self.registry.abandon(p.sem_hash)
+            raise
+
+    def _execute_pipeline(self, p: Pipeline, stats: QueryStats,
+                          report: PipelineReport) -> PipelineReport:
         self.observer.on_pipeline_start(self.query_id, p.pid, p.sem_hash,
                                         p.n_fragments)
 
@@ -218,32 +260,26 @@ class QueryEngine:
         two_level = p.n_fragments >= cfg.two_level_threshold
         dispatch = self.platform.dispatch_time_s(p.n_fragments,
                                                  two_level=two_level)
-        completions: dict[int, float] = {}
         extra_fragments: list[dict] = []
 
-        # Quota-bounded waves, admitted against the *shared* ledger so
-        # concurrent queries on this platform never exceed the quota
-        # together. Slots are held for the wave's synchronous execution
-        # and released before requesting more (no hold-and-wait).
-        order = list(specs)
-        wave_start = 0.0
-        while order:
-            self._check_cancel()
-            grant = self.admission.acquire(len(order))
-            frags, order = order[:grant], order[grant:]
-            try:
-                for f in frags:
-                    res = self._run_fragment(p, specs[f], report, stats,
-                                             extra_fragments)
-                    completions[f] = wave_start + res.sim_runtime_s
-            finally:
-                self.admission.release(grant)
-            wave_start = max((completions[f] for f in frags),
-                             default=wave_start)
+        # The whole fleet runs concurrently in wall-clock; each fragment
+        # holds one admission slot for exactly its own lifetime
+        # (retries included), released on completion — so concurrent
+        # queries interleave at fragment granularity, not wave
+        # granularity. ``completions`` holds per-fragment *runtimes*.
+        results = self.platform.invoke_many(
+            self.handler, list(specs.values()), pipeline=p.pid,
+            cancel_check=self._check_cancel,
+            run=lambda spec: self._run_fragment(p, spec, report, stats,
+                                                extra_fragments))
+        completions: dict[int, float] = {
+            f: res.sim_runtime_s for f, res in zip(specs, results)}
 
-        # Straggler mitigation: detect against the fleet's fast quartile
+        # Straggler mitigation: detect on per-fragment *runtimes* (never
+        # on quota-wave-offset completion times — a later wave's normal
+        # fragment is not a straggler) against the fleet's fast quartile
         # (the median is already contaminated in small or straggler-heavy
-        # fleets), then re-trigger; the effective completion races the
+        # fleets), then re-trigger; the effective runtime races the
         # original against the duplicate — safe because workers are
         # idempotent single-object writers.
         if len(completions) >= 2:
@@ -254,41 +290,71 @@ class QueryEngine:
             for f, t in list(completions.items()):
                 if t > threshold:
                     self.observer.on_straggler(self.query_id, p.pid, f)
-                    grant = self.admission.acquire(1)
+                    self.admission.acquire(1)
                     try:
+                        # the duplicate's rows/bytes repeat the original
+                        # worker's output — bill its cost, don't
+                        # double-count its payload
                         dup = self._invoke(p, specs[f], report, stats,
-                                           attempt=100 + report.attempts)
+                                           attempt=100 + report.attempts,
+                                           count_payload=False)
                     finally:
-                        self.admission.release(grant)
+                        self.admission.release(1)
                     report.stragglers_retriggered += 1
                     if dup.error is None:
                         completions[f] = min(t, threshold
                                              + dup.sim_runtime_s)
 
-        report.sim_s = (dispatch + max(completions.values(), default=0.0)
+        report.sim_s = (dispatch
+                        + self._sim_makespan(list(completions.values()))
                         + cfg.response_poll_overhead_s)
 
         n_total = p.n_fragments + len(extra_fragments)
-        self.registry.register(
+        self.registry.publish(
             p.sem_hash, prefix=prefix, n_fragments=n_total,
             partitioning=p.partitioning.to_dict(), schema=p.output_schema,
             stats={"rows_out": report.rows_out})
         self.observer.on_pipeline_complete(self.query_id, report)
         return report
 
+    def _sim_makespan(self, runtimes: list[float]) -> float:
+        """Simulated completion of a fleet under per-slot admission:
+        list-scheduling makespan over ``quota`` slots — each fragment
+        starts the moment a slot frees (never on a wave boundary). With
+        quota ≥ fleet size this is simply ``max(runtimes)``."""
+        if not runtimes:
+            return 0.0
+        slots = [0.0] * min(self.admission.quota, len(runtimes))
+        for r in runtimes:
+            heapq.heappush(slots, heapq.heappop(slots) + r)
+        return max(slots)
+
     # -- fragment execution with retries/reassignment -----------------------------
     def _run_fragment(self, p: Pipeline, spec: dict,
                       report: PipelineReport, stats: QueryStats,
                       extra_fragments: list[dict]) -> InvocationResult:
+        """Run one fragment to success (bounded retries, reassignment).
+
+        Runs inside the platform executor, holding exactly one admission
+        slot for its whole lifetime — retries and the reassignment's
+        extra worker reuse that slot, so no new admission is requested.
+        Thread-safe: many fragments of one pipeline run this
+        concurrently.
+        """
         attempt = 0
-        total_runtime = 0.0
+        failed_runtime = 0.0    # failed attempts serialize before success
+        extra_runtime = 0.0     # reassigned worker, parallel to the retry
         while True:
             res = self._invoke(p, spec, report, stats, attempt=attempt)
-            total_runtime += res.sim_runtime_s
             if res.error is None:
-                res.sim_runtime_s = total_runtime
+                # the reassigned extra worker races the retry in
+                # parallel; the slower of the two is the critical path
+                res.sim_runtime_s = failed_runtime + max(
+                    res.sim_runtime_s, extra_runtime)
                 return res
-            report.transient_failures += 1
+            failed_runtime += res.sim_runtime_s
+            with self._metrics_lock:
+                report.transient_failures += 1
             attempt += 1
             if attempt >= self.config.max_attempts:
                 raise QueryAborted(
@@ -301,14 +367,14 @@ class QueryEngine:
             self.observer.on_retry(self.query_id, p.pid, spec["fragment"],
                                    attempt)
             # Reassignment: after two failures, split a multi-unit
-            # fragment's inputs across an additional fresh worker. The
-            # extra worker reuses the failed worker's quota slot (still
-            # held by this wave), so no new admission is requested.
+            # fragment's inputs across an additional fresh worker that
+            # runs in parallel with the (now half-sized) retry.
             if attempt >= 2 and len(spec["scan_units"]) > 1:
-                spec, extra = self._split_fragment(p, spec,
-                                                   len(extra_fragments))
-                extra_fragments.append(extra)
-                report.reassignments += 1
+                with self._metrics_lock:
+                    n_extra = len(extra_fragments)
+                    spec, extra = self._split_fragment(p, spec, n_extra)
+                    extra_fragments.append(extra)
+                    report.reassignments += 1
                 eres = self._invoke(p, extra, report, stats,
                                     attempt=attempt)
                 if eres.error is not None:
@@ -316,32 +382,40 @@ class QueryEngine:
                         "reassigned fragment failed",
                         post_mortem={"pipeline": p.pid,
                                      "fragment": extra["fragment"]})
-                total_runtime += 0.0  # runs in parallel with the retry
+                extra_runtime = max(extra_runtime, eres.sim_runtime_s)
 
     def _split_fragment(self, p: Pipeline, spec: dict, n_extra: int):
         units = spec["scan_units"]
         half = len(units) // 2
         new_frag = p.n_fragments + n_extra
-        first = dict(spec, scan_units=units[:half])
         second = dict(spec, scan_units=units[half:], fragment=new_frag)
-        return first, second
+        # narrow the original dict in place: the pipeline's shared specs
+        # map must reflect the split, or a later straggler re-trigger of
+        # this fragment would re-run the full pre-split input and
+        # overwrite its output object with rows the extra fragment also
+        # produced (duplicated rows on fetch)
+        spec["scan_units"] = units[:half]
+        return spec, second
 
     def _invoke(self, p: Pipeline, spec: dict, report: PipelineReport,
-                stats: QueryStats, *, attempt: int) -> InvocationResult:
-        report.attempts += 1
+                stats: QueryStats, *, attempt: int,
+                count_payload: bool = True) -> InvocationResult:
         res = self.platform.invoke(self.handler, spec, pipeline=p.pid,
                                    fragment=spec["fragment"],
                                    attempt=attempt)
         tier_ops = {}
-        if res.payload is not None:
-            s = res.payload["stats"]
-            tier_ops = s["tier_ops"]
-            report.rows_out += s["rows_out"]
-            report.bytes_read += s["bytes_read"]
-            report.bytes_written += s["bytes_written"]
-            report.requests += s["requests"]
-        stats.cost.merge(
-            self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
+        with self._metrics_lock:
+            report.attempts += 1
+            if res.payload is not None:
+                s = res.payload["stats"]
+                tier_ops = s["tier_ops"]    # real storage ops: billed
+                if count_payload:           # …but a duplicate's output
+                    report.rows_out += s["rows_out"]    # repeats rows
+                    report.bytes_read += s["bytes_read"]
+                    report.bytes_written += s["bytes_written"]
+                    report.requests += s["requests"]
+            stats.cost.merge(
+                self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
         return res
 
     # -- plumbing -------------------------------------------------------------

@@ -10,7 +10,13 @@ from __future__ import annotations
 
 
 class QueryObserver:
-    """Base class: subclass and override the events you care about."""
+    """Base class: subclass and override the events you care about.
+
+    Concurrency contract: fragments execute wall-clock-parallel, so
+    ``on_retry`` (and hooks of different queries in one session) may
+    fire concurrently from worker threads — observers that mutate
+    shared state must synchronize it themselves.
+    """
 
     def on_query_state(self, query_id: str, state: str) -> None:
         """Lifecycle transition (QUEUED/PLANNING/RUNNING/...)."""
@@ -82,8 +88,12 @@ class ConsoleObserver(QueryObserver):
                 f"{n_fragments} workers")
 
     def on_pipeline_complete(self, query_id, report):
-        tag = "cache hit" if report.cache_hit else (
-            f"{report.attempts} attempts, {report.sim_s:.2f}s sim")
+        if report.deduped:
+            tag = "shared in-flight execution"
+        elif report.cache_hit:
+            tag = "cache hit"
+        else:
+            tag = f"{report.attempts} attempts, {report.sim_s:.2f}s sim"
         self._p(f"[{query_id}] pipeline {report.pid} done ({tag})")
 
     def on_straggler(self, query_id, pid, fragment):

@@ -11,9 +11,14 @@ Models the pieces of AWS Lambda that shape Skyrise's behavior:
   * fault injection (transient errors, stragglers, worker kills) to
     exercise the coordinator's adaptive re-triggering.
 
-Execution is sequential on this host; *simulated* wall-clock is accounted
-as the parallel critical path: dispatch + max over workers of
-(start latency + worker runtime), per wave.
+Execution is *wall-clock parallel* on this host: the platform owns a
+thread-pool ``executor`` bounded by the admission quota, and
+``invoke_many`` runs a fleet of fragments concurrently — each fragment
+occupies exactly one admission slot, acquired before it is submitted and
+released the moment it completes (per-slot release, no wave barrier).
+*Simulated* wall-clock is accounted separately as the parallel critical
+path over the quota (list-scheduling makespan, see
+``QueryEngine._sim_makespan``).
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable
 
 import numpy as np
@@ -115,6 +121,7 @@ class FaasPlatform:
     """Simulated function platform shared by all queries in a session."""
 
     INVOKE_OVERHEAD_S = 0.002       # one async Invoke API call
+    MAX_HOST_THREADS = 64           # host-resource cap on the pool size
 
     def __init__(self, *, quota: int = 1000, seed: int = 0,
                  faults: FaultPlan | None = None):
@@ -125,8 +132,40 @@ class FaasPlatform:
         self._warm_sandboxes = 0
         self.invocations = 0
         self.cold_starts = 0
-        # Shared ledger: all queries on this platform draw waves from it.
+        # Shared ledger: all queries on this platform draw slots from it.
         self.admission = AdmissionController(quota)
+        self._executor: ThreadPoolExecutor | None = None
+
+    @property
+    def executor(self) -> ThreadPoolExecutor:
+        """Wall-clock backend, created on first use: admission bounds
+        in-flight fragments to the quota; the pool size additionally
+        caps host threads (slots held by queued-but-unstarted tasks
+        still release when they run, so a pool smaller than the quota
+        cannot deadlock)."""
+        with self._lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=min(self.quota, self.MAX_HOST_THREADS),
+                    thread_name_prefix="faas-worker")
+            return self._executor
+
+    def close(self) -> None:
+        """Shut down the thread pool (a later invocation transparently
+        recreates it). Sessions that built their own platform call this
+        from ``SkyriseSession.close``."""
+        with self._lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=True)
+
+    def __del__(self):
+        # backstop for standalone engines/coordinators that default-
+        # construct a platform and have no close path: wake the pool's
+        # idle threads so an unreferenced platform doesn't strand them
+        executor = self.__dict__.get("_executor")
+        if executor is not None:
+            executor.shutdown(wait=False)
 
     # -- startup latency draws -------------------------------------------------
     def _start_latency(self, cold: bool) -> float:
@@ -168,14 +207,13 @@ class FaasPlatform:
         fail, straggle = self.faults.roll(pipeline, fragment, attempt)
         if fail:
             # the sandbox died mid-flight; it still cost its startup time
-            with self._lock:
-                self._warm_sandboxes += 1
+            # but must NOT rejoin the warm pool — the retry pays a fresh
+            # (usually cold) start instead of warm-starting on a sandbox
+            # the simulation just declared dead
             return InvocationResult(None, "transient", start, start, cold)
         try:
             response, runtime = handler(payload)
         except TransientWorkerError as e:  # pragma: no cover - defensive
-            with self._lock:
-                self._warm_sandboxes += 1
             return InvocationResult(None, str(e), start, start, cold)
         if straggle:
             runtime = runtime * self.faults.straggler_factor
@@ -183,4 +221,75 @@ class FaasPlatform:
             self._warm_sandboxes += 1
         return InvocationResult(response, None, start, start + runtime,
                                 cold)
+
+    def invoke_many(self, handler: Callable[[dict], tuple[dict, float]],
+                    specs: list[dict], *, pipeline: int, attempt: int = 0,
+                    cancel_check: Callable[[], None] | None = None,
+                    run: Callable[[dict], InvocationResult] | None = None,
+                    ) -> list[InvocationResult]:
+        """Run a fleet of fragments concurrently in wall-clock.
+
+        Every fragment occupies exactly one admission slot: the slot is
+        acquired (blocking) before the fragment is submitted to the
+        executor and released the moment that fragment completes — *not*
+        when the whole fleet finishes — so a finished worker's slot is
+        immediately available to any query on the platform (per-slot
+        release; no wave barrier).
+
+        ``run`` overrides the per-fragment body (the engine passes its
+        retry/reassignment wrapper); the default is a single ``invoke``.
+        Returns one ``InvocationResult`` per spec, in spec order. If any
+        fragment raises, the remaining fragments are drained and the
+        first error is re-raised.
+        """
+        if run is None:
+            def run(spec: dict) -> InvocationResult:
+                return self.invoke(handler, spec, pipeline=pipeline,
+                                   fragment=spec["fragment"],
+                                   attempt=attempt)
+        futures: list[Future] = []
+        try:
+            for spec in specs:
+                if cancel_check is not None:
+                    cancel_check()
+                self.admission.acquire(1)
+                try:
+                    fut = self.executor.submit(self._run_slot, run, spec)
+                except BaseException:
+                    self.admission.release(1)  # slot has no task to free it
+                    raise
+                futures.append(fut)
+        except BaseException:
+            # cancelled (or failed) mid-submission: queued-but-unstarted
+            # fragments are cancelled outright (their slot never reaches
+            # _run_slot, so release it here); already-running ones finish
+            # (idempotent writers) and are drained so their slots are
+            # back before propagating
+            for fut in futures:
+                if fut.cancel():
+                    self.admission.release(1)
+                    continue
+                try:
+                    fut.result()
+                except BaseException:  # noqa: BLE001 - draining
+                    pass
+            raise
+        results: list[InvocationResult] = []
+        first_error: BaseException | None = None
+        for fut in futures:
+            try:
+                results.append(fut.result())
+            except BaseException as e:  # noqa: BLE001 - re-raised below
+                if first_error is None:
+                    first_error = e
+        if first_error is not None:
+            raise first_error
+        return results
+
+    def _run_slot(self, run: Callable[[dict], InvocationResult],
+                  spec: dict) -> InvocationResult:
+        try:
+            return run(spec)
+        finally:
+            self.admission.release(1)
 

@@ -7,31 +7,160 @@ the workers that produced them. Before scheduling a pipeline, the
 coordinator consults the registry and skips cache hits.
 
 Backed by the low-latency KV tier (DynamoDB analog) of the object store.
+
+In-flight dedup (cross-query plan sharing): concurrent queries wanting
+the same ``sem_hash`` share one execution instead of racing idempotently.
+The protocol is ``claim`` / ``publish`` / ``await_complete``:
+
+  * ``claim(h)`` — conditional-put analog: writes an *incomplete* entry
+    and returns True iff no complete or in-flight entry existed; exactly
+    one of N concurrent claimants wins and executes the pipeline;
+  * losers call ``await_complete(h)`` and block until the owner
+    ``publish``-es the finished entry (they then treat it as a cache
+    hit) or ``abandon``-s the claim (owner failed/cancelled — a waiter
+    re-claims and executes itself);
+  * claims live in the same KV tier as results, so dedup spans *all*
+    sessions sharing one store, not just queries inside one session.
 """
 
 from __future__ import annotations
+
+import threading
+import time
+import uuid
 
 import msgpack
 
 from repro.storage.object_store import ObjectStore
 
+# One process-wide condition serializes claim writes and wakes waiters on
+# publish/abandon across every registry instance — sessions sharing one
+# backing store share in-flight state through the store itself, so the
+# notification channel must span registry instances too. Cross-process
+# waiters fall back to the poll interval.
+_INFLIGHT_CV = threading.Condition()
+# In-process waiters wake via notify (instant, free); the billed KV
+# re-read happens on notify or at the coarse cross-process interval.
+# The short wake interval only drives cancel_check/TTL responsiveness.
+_WAKE_POLL_S = 0.05
+_CROSS_PROCESS_POLL_S = 1.0
+
 
 class ResultRegistry:
-    def __init__(self, store: ObjectStore, namespace: str = "registry"):
+    def __init__(self, store: ObjectStore, namespace: str = "registry",
+                 claim_ttl_s: float = 60.0):
         self.store = store.with_tier("dynamodb")
         self.namespace = namespace
+        # A claim whose owner died without abandoning (process killed)
+        # must not hang waiters forever: past the TTL it counts as
+        # abandoned and the next claimant steals it. Stealing a claim
+        # whose owner is merely slow is safe — workers are idempotent
+        # single-object writers, so a racing duplicate execution only
+        # wastes invocations, never corrupts results.
+        self.claim_ttl_s = claim_ttl_s
+        self.claims = 0         # executions this registry won via claim()
+        self.dedup_hits = 0     # await_complete() calls resolved by a peer
+        self._owned: dict[str, str] = {}    # sem_hash → our claim token
 
     def _key(self, sem_hash: str) -> str:
         return f"{self.namespace}/{sem_hash}"
 
-    def lookup(self, sem_hash: str) -> dict | None:
-        """Returns the result's physical layout metadata, or None."""
+    def _read(self, sem_hash: str) -> dict | None:
         key = self._key(sem_hash)
         if not self.store.exists(key):
             return None
-        entry = msgpack.unpackb(self.store.get(key).data)
-        return entry if entry.get("complete") else None
+        return msgpack.unpackb(self.store.get(key).data)
 
+    def lookup(self, sem_hash: str) -> dict | None:
+        """Returns the result's physical layout metadata, or None (absent
+        entries and in-flight claims both miss)."""
+        entry = self._read(sem_hash)
+        return entry if entry and entry.get("complete") else None
+
+    # -- in-flight dedup -----------------------------------------------------
+    def _stale(self, entry: dict) -> bool:
+        return (not entry.get("complete")
+                and time.time() - entry.get("claimed_at", 0.0)
+                > self.claim_ttl_s)
+
+    def claim(self, sem_hash: str) -> bool:
+        """Atomically claim execution of ``sem_hash``.
+
+        True → the caller owns the (single) execution and must finish
+        with ``publish`` or ``abandon``. False → the result is already
+        complete or another query is executing it (``await_complete``).
+        A claim older than ``claim_ttl_s`` is stolen (orphaned owner).
+        """
+        with _INFLIGHT_CV:
+            entry = self._read(sem_hash)
+            if entry is not None and not self._stale(entry):
+                return False
+            token = uuid.uuid4().hex
+            self.store.put(self._key(sem_hash), msgpack.packb(
+                {"complete": False, "claimed_at": time.time(),
+                 "owner": token}))
+            self._owned[sem_hash] = token
+            self.claims += 1
+            return True
+
+    def publish(self, sem_hash: str, *, prefix: str, n_fragments: int,
+                partitioning: dict, schema: list[dict],
+                stats: dict | None = None) -> None:
+        """Register the finished result and wake every waiter."""
+        self.register(sem_hash, prefix=prefix, n_fragments=n_fragments,
+                      partitioning=partitioning, schema=schema,
+                      stats=stats)
+        with _INFLIGHT_CV:
+            self._owned.pop(sem_hash, None)
+            _INFLIGHT_CV.notify_all()
+
+    def abandon(self, sem_hash: str) -> None:
+        """Drop an unfinished claim (owner failed or was cancelled) so a
+        waiter can re-claim and run the pipeline itself. Only the claim
+        this registry wrote is deleted — if the claim was TTL-stolen in
+        the meantime, the stealer's live claim stays untouched."""
+        with _INFLIGHT_CV:
+            token = self._owned.pop(sem_hash, None)
+            entry = self._read(sem_hash)
+            if (entry is not None and not entry.get("complete")
+                    and entry.get("owner") == token):
+                self.store.delete(self._key(sem_hash))
+            _INFLIGHT_CV.notify_all()
+
+    def await_complete(self, sem_hash: str,
+                       cancel_check=None) -> dict | None:
+        """Block until the in-flight execution of ``sem_hash`` resolves.
+
+        Returns the complete entry if the owner published it (treat as a
+        cache hit), or None if the claim was abandoned — explicitly, or
+        implicitly by exceeding ``claim_ttl_s`` (orphaned owner) —
+        after which the caller should try to ``claim`` again.
+        ``cancel_check`` is polled while waiting and may raise to abort
+        the wait.
+        """
+        with _INFLIGHT_CV:
+            entry = self._read(sem_hash)
+            last_read = time.monotonic()
+            while True:
+                if entry is None or self._stale(entry):
+                    return None
+                if entry.get("complete"):
+                    self.dedup_hits += 1
+                    return entry
+                if cancel_check is not None:
+                    cancel_check()
+                notified = _INFLIGHT_CV.wait(timeout=_WAKE_POLL_S)
+                # staleness is judged on the cached entry (claimed_at is
+                # immutable per claim), so the billed KV read only
+                # happens when something can actually have changed:
+                # an in-process publish/abandon notification, or the
+                # coarse cross-process poll interval
+                if notified or (time.monotonic() - last_read
+                                >= _CROSS_PROCESS_POLL_S):
+                    entry = self._read(sem_hash)
+                    last_read = time.monotonic()
+
+    # -- completed entries ---------------------------------------------------
     def register(self, sem_hash: str, *, prefix: str, n_fragments: int,
                  partitioning: dict, schema: list[dict],
                  stats: dict | None = None) -> None:

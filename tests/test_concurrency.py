@@ -1,0 +1,335 @@
+"""Wall-clock parallel execution backend (threaded ``invoke_many`` with
+per-fragment slot release), in-flight cross-query dedup
+(claim/publish/await_complete), straggler detection on runtimes,
+reassignment critical-path accounting, and warm-pool bookkeeping."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (CoordinatorConfig, FaasPlatform, FaultPlan,
+                       QueryObserver, connect)
+from repro.core.engine import QueryAborted, QueryEngine
+from repro.core.registry import ResultRegistry
+from repro.core.worker import make_worker_handler
+from repro.data import generate_tpch
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.storage import ObjectStore
+
+CFG = CoordinatorConfig(planner=PlannerConfig(
+    bytes_per_worker=250_000, broadcast_threshold_bytes=150_000,
+    exchange_partitions=3))
+
+
+def _fresh_db(seed=0, tier="local", n_parts=4):
+    store = ObjectStore(tier=tier, seed=seed)
+    catalog = generate_tpch(store, sf=0.01, n_parts=n_parts, seed=0)
+    return store, catalog
+
+
+# -- tentpole: fragments truly overlap in wall-clock --------------------------
+
+def test_fragments_overlap_in_wall_clock():
+    """With quota ≥ fleet size, a pipeline's wall-clock is measurably
+    below the sum of its fragment handler times."""
+    store, catalog = _fresh_db()
+    real = make_worker_handler(store)
+    handler_walls = []
+
+    def slow_handler(payload):
+        t0 = time.perf_counter()
+        resp, rt = real(payload)
+        time.sleep(0.15)
+        handler_walls.append(time.perf_counter() - t0)
+        return resp, rt
+
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=50_000),
+        use_result_cache=False)
+    engine = QueryEngine(store, catalog,
+                         platform=FaasPlatform(quota=64, seed=0),
+                         config=cfg, handler=slow_handler)
+    res = engine.execute_sql(
+        "select l_quantity, l_extendedprice from lineitem")
+    assert res.stats.pipelines[-1].n_fragments >= 3
+    assert res.stats.wall_s < 0.6 * sum(handler_walls)
+
+
+def test_quota_never_exceeded_under_threaded_backend():
+    """Stress: 16 concurrent queries × quota 8 — the combined in-flight
+    fleet never exceeds the quota, and every slot is returned."""
+    store, catalog = _fresh_db()
+    quota = 8
+    platform = FaasPlatform(quota=quota, seed=0)
+    cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
+    with connect(store, catalog, platform=platform, config=cfg,
+                 max_concurrent_queries=16) as session:
+        qnames = ("q1", "q6", "q12", "q14")
+        handles = [session.submit(QUERIES[qnames[i % len(qnames)]])
+                   for i in range(16)]
+        for h in handles:
+            h.result(timeout=600)
+    adm = platform.admission
+    assert 1 <= adm.max_in_flight <= quota
+    assert adm.in_flight == 0
+
+
+# -- tentpole: in-flight dedup ------------------------------------------------
+
+class _StartRecorder(QueryObserver):
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.started = []
+
+    def on_pipeline_start(self, query_id, pid, sem_hash, n_fragments):
+        with self.lock:
+            self.started.append(sem_hash)
+
+
+def _slow(handler, delay=0.2):
+    def slow_handler(payload):
+        resp, rt = handler(payload)
+        time.sleep(delay)
+        return resp, rt
+    return slow_handler
+
+
+def test_inflight_dedup_two_concurrent_identical_queries():
+    """Two concurrent identical queries trigger exactly one pipeline
+    execution: the registry records one claim per pipeline and the
+    second query blocks on await_complete."""
+    store, catalog = _fresh_db()
+    platform = FaasPlatform(quota=32, seed=0)
+    rec = _StartRecorder()
+    with connect(store, catalog, platform=platform, config=CFG,
+                 max_concurrent_queries=2, observers=(rec,)) as session:
+        session.handler = _slow(session.handler)
+        h1 = session.submit(QUERIES["q6"])
+        h2 = session.submit(QUERIES["q6"])
+        r1 = h1.result(timeout=300)
+        r2 = h2.result(timeout=300)
+        st = session.stats()
+    # no sem_hash was executed twice → one set of worker invocations
+    assert len(rec.started) == len(set(rec.started))
+    assert st["registry_claims"] == len(rec.started)
+    # one of the two shared the other's in-flight execution
+    assert st["inflight_dedup_hits"] >= 1
+    # every executed sem_hash ran exactly once across both queries
+    executed = [p.sem_hash for r in (r1, r2)
+                for p in r.stats.pipelines if not p.cache_hit]
+    assert len(executed) == len(set(executed))
+    assert any(p.deduped for r in (r1, r2) for p in r.stats.pipelines)
+    # both clients still get identical full results
+    c1, c2 = r1.fetch(store), r2.fetch(store)
+    for k in c1:
+        np.testing.assert_allclose(np.asarray(c1[k], np.float64),
+                                   np.asarray(c2[k], np.float64))
+
+
+def test_inflight_dedup_across_sessions_sharing_one_store():
+    """Claims live in the store's KV tier, so dedup spans sessions: two
+    sessions submitting the same query concurrently produce exactly one
+    set of worker invocations for the shared pipelines."""
+    # reference: how many invocations one solo execution needs
+    ref_store, ref_catalog = _fresh_db()
+    ref_platform = FaasPlatform(quota=32, seed=0)
+    with connect(ref_store, ref_catalog, platform=ref_platform,
+                 config=CFG) as ref:
+        ref.sql(QUERIES["q12"])
+    solo_invocations = ref_platform.invocations
+
+    store, catalog = _fresh_db()
+    platform = FaasPlatform(quota=32, seed=0)
+    s1 = connect(store, catalog, platform=platform, config=CFG)
+    s2 = connect(store, catalog, platform=platform, config=CFG)
+    try:
+        s1.handler = _slow(s1.handler)
+        s2.handler = _slow(s2.handler)
+        h1 = s1.submit(QUERIES["q12"])
+        h2 = s2.submit(QUERIES["q12"])
+        r1 = h1.result(timeout=300)
+        r2 = h2.result(timeout=300)
+    finally:
+        s1.close()
+        s2.close()
+    assert platform.invocations == solo_invocations
+    assert s1.registry.claims + s2.registry.claims == \
+        len(r1.stats.pipelines)
+    for k1, k2 in zip(sorted(r1.fetch(store)), sorted(r2.fetch(store))):
+        assert k1 == k2
+
+
+def test_failed_query_abandons_claim_so_others_can_run():
+    """A claim owner that aborts must release the claim — a later query
+    for the same sem_hash re-claims and executes instead of hanging."""
+    store, catalog = _fresh_db()
+    kills = tuple((0, 0, a) for a in range(10))
+    plat = FaasPlatform(seed=0, faults=FaultPlan(kill_fragments=kills))
+    engine = QueryEngine(store, catalog, platform=plat, config=CFG)
+    with pytest.raises(QueryAborted):
+        engine.execute_sql(QUERIES["q6"])
+
+    engine2 = QueryEngine(store, catalog, platform=FaasPlatform(seed=0),
+                          config=CFG)
+    res = engine2.execute_sql(QUERIES["q6"])   # hangs if the claim leaked
+    assert len(res.fetch(store)["revenue"]) == 1
+
+
+def test_orphaned_claim_is_stolen_after_ttl():
+    """A claim whose owner died without abandoning (e.g. process kill)
+    must not hang waiters forever: past the TTL the next claimant
+    steals it and executes (idempotent workers make the race safe)."""
+    store, catalog = _fresh_db()
+    engine = QueryEngine(
+        store, catalog, platform=FaasPlatform(seed=0), config=CFG,
+        registry=ResultRegistry(store, claim_ttl_s=0.25))
+    plan = engine.plan_sql(QUERIES["q6"])
+    # simulate a dead owner: claim with a long-TTL registry, never finish
+    assert ResultRegistry(store).claim(
+        plan.pipelines[plan.root_pid].sem_hash)
+    res = engine.execute_plan(plan)       # must steal, not hang
+    assert len(res.fetch(store)["revenue"]) == 1
+
+
+def test_session_closes_owned_platform_executor():
+    store, catalog = _fresh_db()
+    session = connect(store, catalog, config=CFG, quota=4)
+    session.sql(QUERIES["q6"])
+    assert session.platform._executor is not None
+    session.close()
+    assert session.platform._executor is None   # pool torn down
+
+    # an externally shared platform stays up across a session close
+    platform = FaasPlatform(quota=4, seed=0)
+    with connect(store, catalog, platform=platform, config=CFG) as s2:
+        s2.sql(QUERIES["q1"])
+    assert platform._executor is not None
+    platform.close()
+    assert platform._executor is None
+
+
+# -- satellite: straggler detection on runtimes, not wave offsets -------------
+
+def test_no_straggler_misdetection_when_quota_below_fleet():
+    """quota=2, 8 fragments, no fault injection: fragments admitted
+    after the first quota-full batch are NOT stragglers — detection
+    runs on per-fragment runtimes, never on slot-offset completions."""
+    store, catalog = _fresh_db(n_parts=8)
+    real = make_worker_handler(store)
+
+    def handler(payload):
+        resp, _ = real(payload)
+        return resp, 1.0            # uniform simulated runtime
+
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=10_000),
+        use_result_cache=False)
+    engine = QueryEngine(store, catalog,
+                         platform=FaasPlatform(quota=2, seed=0),
+                         config=cfg, handler=handler)
+    res = engine.execute_sql("select l_quantity from lineitem")
+    scan = res.stats.pipelines[0]
+    assert scan.n_fragments == 8    # precondition: fleet ≫ quota
+    assert sum(p.stragglers_retriggered
+               for p in res.stats.pipelines) == 0
+    # per-slot release: 8 × ~1s runtimes over 2 slots ≈ 4s+ of
+    # simulated critical path (list-scheduling makespan, not one wave)
+    assert res.stats.sim_latency_s > 3.5
+
+
+# -- satellite: reassigned fragment joins the critical path -------------------
+
+def test_reassigned_fragment_extends_critical_path():
+    """The extra worker spawned by reassignment runs in parallel with
+    the retry; when it is the slower of the two it must dominate the
+    pipeline's simulated time (max(retry, extra), not +0)."""
+    store, catalog = _fresh_db()
+    real = make_worker_handler(store)
+
+    def handler(payload):
+        resp, _ = real(payload)
+        extra = payload["fragment"] >= payload["n_fragments"]
+        return resp, (5.0 if extra else 0.05)
+
+    plat = FaasPlatform(seed=0, faults=FaultPlan(
+        kill_fragments=((0, 0, 0), (0, 0, 1))))
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=2_000_000),
+        max_attempts=4, use_result_cache=False)
+    engine = QueryEngine(store, catalog, platform=plat, config=cfg,
+                         handler=handler)
+    res = engine.execute_sql(QUERIES["q6"])
+    p0 = res.stats.pipelines[0]
+    assert p0.reassignments == 1
+    assert p0.sim_s >= 5.0          # the extra worker is the slow path
+
+
+def test_straggler_retrigger_after_reassignment_no_duplicate_rows():
+    """A reassigned fragment's spec is narrowed in place: if the slow
+    (reassignment-inflated) fragment is then re-triggered as a
+    straggler, the duplicate must re-run the *split* inputs — re-running
+    the pre-split spec would overwrite the fragment's output with rows
+    the extra fragment also produced."""
+    store, catalog = _fresh_db()
+    real = make_worker_handler(store)
+
+    def handler(payload):
+        resp, _ = real(payload)
+        extra = payload["fragment"] >= payload["n_fragments"]
+        return resp, (5.0 if extra else 1.0)
+
+    plat = FaasPlatform(seed=0, faults=FaultPlan(
+        kill_fragments=((0, 0, 0), (0, 0, 1))))
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=50_000),
+        max_attempts=4, use_result_cache=False)
+    engine = QueryEngine(store, catalog, platform=plat, config=cfg,
+                         handler=handler)
+    res = engine.execute_sql("select l_quantity from lineitem")
+    p0 = res.stats.pipelines[0]
+    assert p0.reassignments == 1
+    assert p0.stragglers_retriggered >= 1   # the regression's trigger
+    cols = res.fetch(store)
+    assert len(cols["l_quantity"]) == catalog.table("lineitem").rows
+    # the duplicate's payload must not double-count reported output
+    assert p0.rows_out == catalog.table("lineitem").rows
+
+
+def test_abandon_after_ttl_steal_keeps_stealers_claim():
+    """abandon() only removes the claim its own registry wrote: an owner
+    that lost its claim to a TTL steal must not delete the stealer's
+    live claim."""
+    store = ObjectStore(tier="local", seed=0)
+    owner = ResultRegistry(store, claim_ttl_s=0.1)
+    stealer = ResultRegistry(store, claim_ttl_s=0.1)
+    assert owner.claim("h")
+    time.sleep(0.15)
+    assert stealer.claim("h")       # TTL steal of the orphaned claim
+    owner.abandon("h")              # stale owner fails afterwards
+    # the stealer's claim is still in force: nobody else can claim
+    assert not ResultRegistry(store, claim_ttl_s=60.0).claim("h")
+
+
+# -- satellite: dead sandboxes must not rejoin the warm pool ------------------
+
+def test_failed_sandbox_does_not_rejoin_warm_pool():
+    plat = FaasPlatform(seed=0, quota=4,
+                        faults=FaultPlan(kill_fragments=((0, 0, 0),)))
+
+    def handler(payload):
+        return {}, 0.01
+
+    r0 = plat.invoke(handler, {}, pipeline=0, fragment=0, attempt=0)
+    assert r0.error is not None and r0.cold
+    assert plat.cold_starts == 1
+    # the dead sandbox is gone: the retry pays a cold start again
+    r1 = plat.invoke(handler, {}, pipeline=0, fragment=0, attempt=1)
+    assert r1.error is None and r1.cold
+    assert plat.cold_starts == 2
+    # a sandbox that finished successfully does rejoin the pool
+    r2 = plat.invoke(handler, {}, pipeline=0, fragment=1, attempt=0)
+    assert not r2.cold
+    assert plat.cold_starts == 2
