@@ -11,13 +11,18 @@ measurements on this host.
   §3.3     → stragglers     (re-triggering on/off)
   §3.4     → cache          (recurring-query cost)
   sessions → concurrency    (multi-query shared-quota scheduling)
+  dispatch → fusion         (fused Pallas path vs generic jnp, parity-checked)
   kernels  → Pallas kernels (interpret mode on CPU)
+
+``--json PATH`` additionally writes the rows as a JSON snapshot (the
+BENCH_*.json files checked in per PR).
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
 
@@ -31,6 +36,7 @@ SUITES = {
     "stragglers": suites.bench_stragglers,
     "cache": suites.bench_result_cache,
     "concurrency": suites.bench_concurrency,
+    "fusion": suites.bench_fusion,
     "kernels": suites.bench_kernels,
 }
 
@@ -43,10 +49,13 @@ def main() -> None:
                     help="shrunken configs (CI deadlock/regression "
                          "guard); suites without a smoke mode run "
                          "unchanged")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as a JSON snapshot")
     args = ap.parse_args()
     names = list(SUITES) if args.suite == "all" else [args.suite]
     print("name,us_per_call,derived")
     failed = 0
+    snapshot = []
     for name in names:
         fn = SUITES[name]
         kwargs = {}
@@ -55,9 +64,16 @@ def main() -> None:
         try:
             for row, us, derived in fn(**kwargs):
                 print(f"{row},{us:.1f},{derived}")
+                snapshot.append({"suite": name, "name": row,
+                                 "us_per_call": round(us, 1),
+                                 "derived": derived})
         except Exception:  # noqa: BLE001
             failed += 1
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": snapshot}, f, indent=1)
+            f.write("\n")
     if failed:
         sys.exit(1)
 

@@ -8,6 +8,7 @@ wall-clock rows are real CPU measurements of this host.
 
 from __future__ import annotations
 
+import contextlib
 import time
 
 import numpy as np
@@ -84,10 +85,13 @@ def bench_storage():
 
 # -- Fig 5 + Fig 6: TPC-H latency and cost -------------------------------------------
 
-def bench_tpch(sf: float = 0.05):
+def bench_tpch(sf: float = 0.05, *, smoke: bool = False):
+    if smoke:
+        sf = 0.02
     cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
     rows = []
-    with _session(sf, cfg=cfg, n_parts=8, platform_seed=4) as session:
+    n_parts = 6 if smoke else 8
+    with _session(sf, cfg=cfg, n_parts=n_parts, platform_seed=4) as session:
         for qname in ("q1", "q6", "q12", "q3", "q14"):
             t0 = time.perf_counter()
             res = session.sql(QUERIES[qname])
@@ -98,13 +102,21 @@ def bench_tpch(sf: float = 0.05):
                 f"sim_latency_s={s.sim_latency_s:.2f};"
                 f"cost_cents={s.cost.total_cents:.4f};"
                 f"workers={sum(p.n_fragments for p in s.pipelines)};"
-                f"bytes_read={sum(p.bytes_read for p in s.pipelines)}"))
+                f"bytes_read={sum(p.bytes_read for p in s.pipelines)};"
+                f"requests={sum(p.requests for p in s.pipelines)};"
+                f"footer_cache_hits="
+                f"{sum(p.footer_cache_hits for p in s.pipelines)};"
+                f"kernel_fragments="
+                f"{sum(p.kernel_fragments for p in s.pipelines)}"))
     return rows
 
 
 # -- Fig 7: elasticity ----------------------------------------------------------------
 
-def bench_elasticity(scale_factors=(0.01, 0.04, 0.16)):
+def bench_elasticity(scale_factors=(0.01, 0.04, 0.16), *,
+                     smoke: bool = False):
+    if smoke:
+        scale_factors = (0.01, 0.04)
     rows = []
     for sf in scale_factors:
         with _session(
@@ -236,6 +248,58 @@ def bench_concurrency(n_queries: int = 4, quota: int = 8, *,
         f"invocations={st['platform_invocations']};"
         f"claims={st['registry_claims']};"
         f"inflight_dedup_hits={st['inflight_dedup_hits']}"))
+    return rows
+
+
+# -- kernel dispatch: fused Pallas path vs generic jnp path ---------------------------------
+
+def bench_fusion(smoke: bool = False):
+    """Fused kernel dispatch vs the generic jnp operator chain, same data.
+
+    Runs Q6 (→ fused ``filter_agg``) and Q1 (→ ``groupby_onehot``) with
+    the dispatch layer on and off, *asserting numeric parity* — a
+    regression raises and fails the CI bench-smoke job. On CPU the
+    kernels execute in Pallas interpret mode, so wall clock there
+    measures dispatch overhead rather than TPU speedup; the storage
+    request reductions (footer cache + range coalescing) and the
+    kernel-path coverage counts are backend-independent.
+    """
+    from repro.exec import lower
+
+    sf, n_parts = (0.01, 4) if smoke else (0.02, 6)
+    cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
+    store, catalog = _db(sf, n_parts=n_parts)
+    rows = []
+    for qname in ("q6", "q1"):
+        runs = {}
+        for mode in ("fused", "jnp"):
+            ctx = contextlib.nullcontext() if mode == "fused" \
+                else lower.disabled()
+            with ctx, connect(store, catalog, quota=1000, config=cfg,
+                              seed=3) as session:
+                session.sql(QUERIES[qname])         # pay JIT tracing once
+                t0 = time.perf_counter()
+                res = session.sql(QUERIES[qname])
+                wall = time.perf_counter() - t0
+                runs[mode] = (wall, res, res.fetch(store))
+        fused_wall, fused, fdata = runs["fused"]
+        jnp_wall, generic, jdata = runs["jnp"]
+        for k in jdata:
+            np.testing.assert_allclose(
+                np.asarray(fdata[k], np.float64),
+                np.asarray(jdata[k], np.float64), rtol=1e-9, atol=1e-9,
+                err_msg=f"fused-vs-jnp parity regression: {qname}.{k}")
+        fs, js = fused.stats, generic.stats
+        rows.append((
+            f"fusion/{qname}_fused_vs_jnp", fused_wall * 1e6,
+            f"jnp_us={jnp_wall * 1e6:.1f};"
+            f"kernel_fragments="
+            f"{sum(p.kernel_fragments for p in fs.pipelines)};"
+            f"requests_fused={sum(p.requests for p in fs.pipelines)};"
+            f"requests_jnp={sum(p.requests for p in js.pipelines)};"
+            f"footer_cache_hits="
+            f"{sum(p.footer_cache_hits for p in fs.pipelines)};"
+            f"parity=ok"))
     return rows
 
 

@@ -86,9 +86,11 @@ class SkyriseSession:
         self.config = config or CoordinatorConfig()
         self.cost_model = cost_model or CostModel()
         # Shared across every query of the session: one result cache,
-        # one worker handler (code package), one admission ledger.
+        # one worker handler (code package) whose SPAX footer cache spans
+        # all fragments of all queries, one admission ledger.
         self.registry = ResultRegistry(store)
         self.handler = make_worker_handler(store)
+        self.footer_cache = self.handler.footer_cache
         self.observers = ObserverMux(list(observers))
 
         self.max_concurrent_queries = max(1, max_concurrent_queries)
@@ -206,6 +208,8 @@ class SkyriseSession:
             "registry_claims": self.registry.claims,
             "inflight_dedup_hits": self.registry.dedup_hits,
             "store_cost_cents": self.store.stats.cost_cents,
+            "footer_cache_hits": self.footer_cache.hits,
+            "footer_cache_entries": len(self.footer_cache),
         }
 
     def add_observer(self, observer: QueryObserver) -> None:

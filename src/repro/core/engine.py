@@ -85,6 +85,10 @@ class PipelineReport:
     bytes_read: int = 0
     bytes_written: int = 0
     requests: int = 0
+    # kernel dispatch + metadata-cache visibility (section 3.3/3.4 hot path)
+    kernel: str = ""               # fused kernel the plan lowers to
+    kernel_fragments: int = 0      # fragments that ran on the fused path
+    footer_cache_hits: int = 0
 
 
 @dataclasses.dataclass
@@ -213,7 +217,8 @@ class QueryEngine:
             self._cancel_check()
 
     def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
-        report = PipelineReport(p.pid, p.sem_hash, p.n_fragments)
+        report = PipelineReport(p.pid, p.sem_hash, p.n_fragments,
+                                kernel=p.kernel or "")
         claimed = False
         if self.config.use_result_cache:
             # claim/publish/await_complete: exactly one of N concurrent
@@ -414,6 +419,10 @@ class QueryEngine:
                     report.bytes_read += s["bytes_read"]
                     report.bytes_written += s["bytes_written"]
                     report.requests += s["requests"]
+                    report.footer_cache_hits += s.get(
+                        "footer_cache_hits", 0)
+                    if s.get("kernel"):
+                        report.kernel_fragments += 1
             stats.cost.merge(
                 self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
         return res
@@ -472,9 +481,10 @@ def explain_plan(plan: PhysicalPlan) -> str:
             part = p.partitioning
             dest = (f"hash[{','.join(part.keys)}]×{part.n_dest} "
                     f"@{part.tier}" if part.kind == "hash" else "single")
+            kern = f" · kernel={p.kernel}" if p.kernel else ""
             lines.append(
                 f"  pipeline {pid}{role} · sem={p.sem_hash[:10]} · "
                 f"{p.n_fragments} workers · "
-                f"in≈{p.input_bytes / 1e6:.1f}MB · out={dest}")
+                f"in≈{p.input_bytes / 1e6:.1f}MB · out={dest}{kern}")
             lines.append("    ops: " + " → ".join(op_kinds(p.op)[::-1]))
     return "\n".join(lines)

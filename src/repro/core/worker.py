@@ -3,17 +3,25 @@
 Deserializes the invocation payload into a fragment plan, executes it, and
 returns the response message the coordinator polls from its queue: result
 location plus execution statistics used for adaptive behavior and billing.
+
+One handler is shared by every fragment of a session (the "code package"),
+so the SPAX footer cache it owns is session-scoped: F fragments scanning G
+partitions parse each footer once per object version.
 """
 
 from __future__ import annotations
 
 from repro.exec.fragment import execute_fragment
+from repro.storage.io_handlers import FooterCache
 from repro.storage.object_store import ObjectStore
 
 
-def make_worker_handler(store: ObjectStore):
+def make_worker_handler(store: ObjectStore,
+                        footer_cache: FooterCache | None = None):
+    cache = footer_cache if footer_cache is not None else FooterCache()
+
     def handler(payload: dict) -> tuple[dict, float]:
-        result = execute_fragment(store, payload)
+        result = execute_fragment(store, payload, footer_cache=cache)
         stats = result.stats
         sim_runtime = stats.sim_io_s + stats.compute_s
         response = {
@@ -28,8 +36,12 @@ def make_worker_handler(store: ObjectStore):
                 "retriggers": stats.retriggers,
                 "bytes_read": stats.bytes_read,
                 "bytes_written": stats.bytes_written,
+                "footer_cache_hits": stats.footer_cache_hits,
+                "kernel": stats.kernel,
                 "tier_ops": stats.tier_ops,
             },
         }
         return response, sim_runtime
+
+    handler.footer_cache = cache
     return handler

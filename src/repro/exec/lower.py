@@ -1,0 +1,213 @@
+"""Kernel dispatch: lower matched fragment op trees to fused Pallas kernels.
+
+The physical→fragment compilation path runs every fragment as a generic
+jit-compiled jnp operator chain (``repro.exec.fragment``). This module is
+the dispatch layer on top: a pattern matcher over the serialized fragment
+op tree recognizes supported hot-loop chains and emits a kernel-backed
+program with the exact same ``blocks → (columns, mask)`` signature, so the
+caller swaps it in transparently and falls back to the generic chain — bit
+compatibly — for every unmatched shape.
+
+Matched patterns (paper section 3.3's one-pass vectorized worker loop):
+
+  ``scan → [filter…] → partial_agg`` (direct, no groups)
+      → :func:`repro.kernels.ops.fused_filter_agg` — predicate and
+        aggregate inputs evaluate inside the kernel over VMEM column
+        tiles; one (1, A) accumulator tile crosses the row-block grid.
+        TPC-H Q6 is the canonical instance.
+
+  ``scan → [filter…] → partial_agg`` (direct, K = prod(sizes) groups)
+      → :func:`repro.kernels.ops.fused_groupby` — group ids become a
+        one-hot matrix against the aggregate inputs; grouped sums run on
+        the MXU, scatter-free. TPC-H Q1 is the canonical instance.
+
+Lowering is value-semantics-preserving: predicates/arguments are the same
+compiled expressions the generic path uses, and in interpret mode (CPU CI)
+the kernels accumulate in float64 like the jnp path. ``set_enabled`` /
+``disabled()`` switch the layer off globally — used by the parity tests
+and the fused-vs-generic benchmark rows.
+
+Adding a new fused kernel: extend :func:`match_fragment` with the new op
+shape, add the kernel factory under ``repro.kernels``, and emit its
+lowered program in :func:`lower_fragment`; everything downstream (jit
+caching, stats, explain output) picks it up from the returned
+:class:`Lowered`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.exec.expr import compile_expr, expr_from_dict
+from repro.exec.operators import decode_group_ids, mixed_radix_strides
+from repro.kernels import ops as kops
+
+# One-hot grouped aggregation materializes a (block, K) matrix in VMEM;
+# cap K well below the direct-agg strategy bound so the tile stays small.
+MAX_KERNEL_GROUPS = 4096
+UNGROUPED_AGG_FNS = frozenset({"sum", "count", "min", "max"})
+GROUPED_AGG_FNS = frozenset({"sum", "count"})   # one-hot matmul can't min/max
+
+_enabled = os.environ.get("SKYRISE_DISABLE_FUSED", "") not in ("1", "true")
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+def set_enabled(flag: bool) -> bool:
+    """Toggle kernel dispatch globally; returns the previous setting."""
+    global _enabled
+    prev, _enabled = _enabled, bool(flag)
+    return prev
+
+
+@contextlib.contextmanager
+def disabled():
+    """Run a scope on the generic jnp path (parity tests, benchmarks)."""
+    prev = set_enabled(False)
+    try:
+        yield
+    finally:
+        set_enabled(prev)
+
+
+@dataclasses.dataclass
+class Match:
+    kernel: str                  # "filter_agg" | "groupby_onehot"
+    leaf: dict                   # the scan_table op feeding the chain
+    preds: list[dict]            # filter predicate expr dicts (conjoined)
+    group_cols: list[str]
+    sizes: list[int]
+    aggs: list                   # [name, fn, arg expr dict | None]
+
+
+@dataclasses.dataclass
+class Lowered:
+    fn: Callable                 # blocks → (columns, mask)
+    leaves: list[tuple[str, dict]]
+    kernel: str
+
+
+def _expr_cols(d: dict, out: set) -> None:
+    if d.get("t") == "col":
+        out.add(d["name"])
+    for v in d.values():
+        if isinstance(v, dict):
+            _expr_cols(v, out)
+        elif isinstance(v, list):
+            for x in v:
+                if isinstance(x, dict):
+                    _expr_cols(x, out)
+
+
+def match_fragment(op: dict) -> Match | None:
+    """Recognize a fragment op tree one of the fused kernels covers."""
+    if op.get("t") != "partial_agg" or op.get("strategy") != "direct":
+        return None
+    preds: list[dict] = []
+    child = op["child"]
+    while child.get("t") == "filter":
+        preds.append(child["pred"])
+        child = child["child"]
+    if child.get("t") != "scan_table":
+        return None
+    group_cols = list(op["group_cols"])
+    sizes = list(op["sizes"] or [])
+    fns = {fn for _, fn, _ in op["aggs"]}
+    if group_cols:
+        if len(sizes) != len(group_cols):
+            return None
+        if int(np.prod(sizes)) > MAX_KERNEL_GROUPS:
+            return None
+        if not fns <= GROUPED_AGG_FNS:
+            return None
+        kernel = "groupby_onehot"
+    else:
+        if not fns <= UNGROUPED_AGG_FNS:
+            return None
+        kernel = "filter_agg"
+    needed: set[str] = set(group_cols)
+    for p in preds:
+        _expr_cols(p, needed)
+    for _, _, arg in op["aggs"]:
+        if arg is not None:
+            _expr_cols(arg, needed)
+    if not needed <= set(child["columns"]):
+        return None
+    return Match(kernel, child, preds, group_cols, sizes, list(op["aggs"]))
+
+
+def match_kernel(op: dict) -> str | None:
+    """Name of the fused kernel ``op`` lowers to, or None (plan/explain)."""
+    m = match_fragment(op)
+    return m.kernel if m is not None else None
+
+
+def _compile_pred(preds: list[dict]):
+    if not preds:
+        return None
+    fns = [compile_expr(expr_from_dict(p)) for p in preds]
+
+    def pred(cols):
+        out = fns[0](cols)
+        for f in fns[1:]:
+            out = out & f(cols)
+        return out
+    return pred
+
+
+def lower_fragment(op: dict) -> Lowered | None:
+    """Build the kernel-backed program for a matched fragment op tree.
+
+    The returned function consumes the same leaf blocks as the generic
+    chain and produces outputs identical in names, shapes, dtypes, and
+    mask semantics to ``operators.make_direct_agg`` — callers need no
+    special-casing beyond swapping the function.
+    """
+    m = match_fragment(op)
+    if m is None:
+        return None
+    pred = _compile_pred(m.preds)
+    agg_names = [name for name, _, _ in m.aggs]
+    aggs = [(fn, compile_expr(expr_from_dict(arg)) if arg is not None
+             else None) for _, fn, arg in m.aggs]
+    leaf_id = "in0"
+    leaves = [(leaf_id, m.leaf)]
+
+    if m.kernel == "filter_agg":
+        def fn(blocks):
+            cols, mask = blocks[leaf_id]
+            acc = kops.fused_filter_agg(cols, mask, pred=pred, aggs=aggs)
+            out = {name: acc[j].reshape(1).astype(jnp.float64)
+                   for j, name in enumerate(agg_names)}
+            return out, jnp.ones((1,), bool)
+        return Lowered(fn, leaves, m.kernel)
+
+    # grouped: mixed-radix group id over dict-coded key columns, same
+    # code assignment as operators.make_direct_agg
+    K = int(np.prod(m.sizes))
+    strides = mixed_radix_strides(m.sizes)
+    group_cols, sizes = list(m.group_cols), list(m.sizes)
+
+    def gid_fn(cols):
+        gid = jnp.zeros(cols[group_cols[0]].shape, jnp.int32)
+        for c, s in zip(group_cols, strides):
+            gid = gid + cols[c].astype(jnp.int32) * s
+        return gid
+
+    def fn(blocks):
+        cols, mask = blocks[leaf_id]
+        tile = kops.fused_groupby(cols, mask, pred=pred, gid_fn=gid_fn,
+                                  aggs=aggs, n_groups=K)
+        out = dict(decode_group_ids(group_cols, sizes, K))
+        for j, name in enumerate(agg_names):
+            out[name] = tile[:, j].astype(jnp.float64)
+        return out, tile[:, -1] > 0
+    return Lowered(fn, leaves, m.kernel)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.exec.expr import compile_expr
+from repro.kernels.common import NEUTRAL
 from repro.sql import ast
 
 INT64_SENTINEL = np.iinfo(np.int64).max
@@ -86,7 +87,28 @@ def make_project(exprs: list[tuple[str, ast.Expr]]):
 # -- aggregation ----------------------------------------------------------------
 
 def _neutral(fn: str):
-    return {"sum": 0.0, "count": 0.0, "min": np.inf, "max": -np.inf}[fn]
+    return NEUTRAL[fn]
+
+
+def mixed_radix_strides(sizes: list[int]) -> list[int]:
+    """Strides assigning each group-key combination a unique id in
+    [0, prod(sizes)) — shared by the jnp direct aggregation and the
+    fused one-hot kernel path so group codes agree bit-for-bit."""
+    strides = []
+    acc = 1
+    for s in reversed(sizes):
+        strides.append(acc)
+        acc *= s
+    return list(reversed(strides))
+
+
+def decode_group_ids(group_cols: list[str], sizes: list[int],
+                     K: int) -> Cols:
+    """Reconstruct the group-key columns from the mixed-radix ids."""
+    ids = jnp.arange(K)
+    return {c: ((ids // s) % size).astype(jnp.int64)
+            for c, s, size in zip(group_cols,
+                                  mixed_radix_strides(sizes), sizes)}
 
 
 def make_direct_agg(group_cols: list[str], sizes: list[int],
@@ -98,12 +120,7 @@ def make_direct_agg(group_cols: list[str], sizes: list[int],
     segment sums lower to one-hot matmuls / scatter-adds.
     """
     K = int(np.prod(sizes)) if group_cols else 1
-    strides = []
-    acc = 1
-    for s in reversed(sizes):
-        strides.append(acc)
-        acc *= s
-    strides = list(reversed(strides))
+    strides = mixed_radix_strides(sizes)
     agg_fns = [(name, fn, compile_expr(arg) if arg is not None else None)
                for name, fn, arg in aggs]
 
@@ -116,10 +133,7 @@ def make_direct_agg(group_cols: list[str], sizes: list[int],
         else:
             gid = jnp.zeros(mask.shape, jnp.int32)
         maskf = mask.astype(jnp.float64)
-        out: Cols = {}
-        ids = jnp.arange(K)
-        for c, s, size in zip(group_cols, strides, sizes):
-            out[c] = ((ids // s) % size).astype(jnp.int64)
+        out: Cols = dict(decode_group_ids(group_cols, sizes, K))
         present = jax.ops.segment_sum(maskf, gid, num_segments=K)
         for name, fn, argf in agg_fns:
             if fn == "count":

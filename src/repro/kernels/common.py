@@ -1,0 +1,34 @@
+"""Helpers shared by the generic fused kernels (the dispatch targets).
+
+Single source of truth for the accumulation-dtype policy, block padding,
+and aggregation neutral elements — the jnp operator path
+(``repro.exec.operators``) and both fused kernels must agree on these or
+their numerics silently diverge.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEUTRAL = {"sum": 0.0, "count": 0.0, "min": float("inf"),
+           "max": float("-inf")}
+
+
+def acc_dtype(interpret: bool):
+    """Interpret mode runs on host XLA where f64 matches the generic jnp
+    path exactly; Mosaic has no f64, so on-TPU accumulation is f32."""
+    if interpret and jax.config.jax_enable_x64:
+        return jnp.float64
+    return jnp.float32
+
+
+def pad_block(arrs, mask, block):
+    """Zero-pad 1-D columns + validity mask to a multiple of ``block``;
+    returns (arrs, mask, n_blocks). Pad rows are masked out."""
+    n = mask.shape[0]
+    pad = (-n) % block
+    if pad:
+        arrs = [jnp.pad(a, (0, pad)) for a in arrs]
+        mask = jnp.pad(mask, (0, pad))
+    return arrs, mask, (n + pad) // block

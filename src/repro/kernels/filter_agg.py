@@ -1,11 +1,24 @@
-"""Fused filter + aggregate scan (TPC-H Q6) — Pallas TPU kernel.
+"""Fused filter + aggregate scan — Pallas TPU kernels.
 
 The hot loop of a scan-heavy serverless query worker: evaluate a
-conjunctive range predicate over columnar blocks and accumulate
-sum(extendedprice·discount) and the matching-row count in one pass —
-columns stream HBM→VMEM once, no intermediate mask or filtered column is
-ever materialized. Grid = row blocks; the (1, 2) result tile accumulates
-across sequential grid steps.
+conjunctive predicate over columnar blocks and accumulate the aggregates
+in one pass — columns stream HBM→VMEM once, no intermediate mask or
+filtered column is ever materialized. Grid = row blocks; the (1, A)
+result tile accumulates across sequential grid steps.
+
+Two entry points:
+
+  * :func:`filter_agg` — the Q6-specialized benchmark kernel (fixed
+    predicate shape, sum(price·discount) + count);
+  * :func:`fused_filter_agg` — the generic kernel behind the engine's
+    dispatch layer (``repro.exec.lower``): predicate and aggregate-input
+    expressions are compiled jnp closures evaluated *inside* the kernel
+    body over the VMEM-resident column tiles, so any matched
+    scan→filter→partial_agg fragment runs as one streaming pass.
+
+In interpret mode (CPU CI) the generic kernel accumulates in float64,
+bit-comparable with the generic jnp operator path; on TPU it runs the
+same program in float32.
 """
 
 from __future__ import annotations
@@ -15,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import NEUTRAL, acc_dtype, pad_block
 
 BLOCK_ROWS = 2048
 
@@ -80,4 +95,74 @@ def filter_agg(shipdate, discount, quantity, extendedprice, *,
     )(as2d(shipdate, jnp.int32), as2d(discount, jnp.float32),
       as2d(quantity, jnp.float32), as2d(extendedprice, jnp.float32),
       jnp.asarray([n], jnp.int32))
+    return out[0]
+
+
+# -- generic fused filter+aggregate (kernel-dispatch target) -----------------
+
+def _fused_filter_agg_kernel(*refs, names, pred, aggs, acc, block: int):
+    *col_refs, mask_ref, o_ref = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        for j, (fn, _) in enumerate(aggs):
+            if NEUTRAL[fn]:
+                o_ref[0, j] = acc(NEUTRAL[fn])
+
+    cols = {n: r[...] for n, r in zip(names, col_refs)}   # (1, block)
+    m = mask_ref[...] != 0
+    if pred is not None:
+        m = m & pred(cols)
+    for j, (fn, argf) in enumerate(aggs):
+        if fn == "count":
+            o_ref[0, j] += jnp.sum(m.astype(acc))
+            continue
+        v = jnp.broadcast_to(jnp.asarray(argf(cols), acc), m.shape)
+        v = v.astype(acc)
+        if fn == "sum":
+            o_ref[0, j] += jnp.sum(jnp.where(m, v, acc(0)))
+        elif fn == "min":
+            o_ref[0, j] = jnp.minimum(
+                o_ref[0, j], jnp.min(jnp.where(m, v, acc(jnp.inf))))
+        elif fn == "max":
+            o_ref[0, j] = jnp.maximum(
+                o_ref[0, j], jnp.max(jnp.where(m, v, acc(-jnp.inf))))
+
+
+def fused_filter_agg(columns: dict, mask, *, pred, aggs,
+                     block: int = BLOCK_ROWS,
+                     interpret: bool = False) -> jnp.ndarray:
+    """One-pass ungrouped filter+aggregate over named column blocks.
+
+    ``columns``: dict of equal-length 1-D arrays; ``mask``: bool (n,)
+    validity; ``pred``: compiled-expression closure over the column dict
+    (or None); ``aggs``: list of ``(fn, argf)`` with fn in
+    {sum, count, min, max} and argf a closure (None for count).
+    Returns the (A,) accumulator vector.
+    """
+    acc = acc_dtype(interpret)
+    names = tuple(columns)
+    n = mask.shape[0]
+    block = min(block, max(n, 8))
+    arrs, m, nb = pad_block([columns[c] for c in names], mask, block)
+    if not interpret:
+        arrs = [a.astype(jnp.float32) if jnp.issubdtype(a.dtype,
+                                                        jnp.floating)
+                else a.astype(jnp.int32) for a in arrs]
+    A = len(aggs)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_filter_agg_kernel, names=names, pred=pred, aggs=aggs,
+            acc=acc, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))
+                  for _ in range(len(names) + 1)],
+        out_specs=pl.BlockSpec((1, A), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, A), acc),
+        interpret=interpret,
+    )(*[a.reshape(nb, block) for a in arrs],
+      m.astype(jnp.int32).reshape(nb, block))
     return out[0]

@@ -6,6 +6,13 @@ group ids against the (block, A) aggregate-input columns runs on the MXU
 and accumulates into a persistent (K, A) VMEM tile — scatter-free
 aggregation, the TPU-native replacement for the hash table a CPU engine
 would use. Grid = row blocks, result accumulated across sequential steps.
+
+:func:`groupby_onehot` is the fixed-layout benchmark kernel;
+:func:`fused_groupby` is the generic kernel behind the engine's dispatch
+layer (``repro.exec.lower``): predicate, group-id, and aggregate-input
+expressions are compiled jnp closures evaluated inside the kernel body,
+so a matched scan→filter→partial_agg(grouped) fragment filters and
+aggregates in one streaming matmul pass.
 """
 
 from __future__ import annotations
@@ -15,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import acc_dtype, pad_block
 
 BLOCK_ROWS = 1024
 
@@ -70,3 +79,72 @@ def groupby_onehot(group_ids, values, *, n_groups: int,
       values.astype(jnp.float32).reshape(nb, block, A),
       jnp.asarray([n], jnp.int32))
     return out
+
+
+# -- generic fused filter+grouped-aggregate (kernel-dispatch target) ----------
+
+def _fused_groupby_kernel(*refs, names, pred, gid_fn, aggs, acc,
+                          n_groups: int, block: int):
+    *col_refs, mask_ref, o_ref = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    cols = {n: r[...][0] for n, r in zip(names, col_refs)}   # (block,)
+    m = mask_ref[...][0] != 0
+    if pred is not None:
+        m = m & pred(cols)
+    # masked rows get gid -1: their one-hot row is all-false, so they
+    # contribute to no group — filter and aggregation fuse into one matmul
+    gid = jnp.where(m, gid_fn(cols).astype(jnp.int32), -1)
+    onehot = (gid[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, n_groups), 1))
+    vals = []
+    for fn, argf in aggs:
+        if fn == "count":
+            vals.append(jnp.ones((block,), acc))
+        else:
+            v = jnp.broadcast_to(jnp.asarray(argf(cols), acc), (block,))
+            vals.append(v.astype(acc))
+    vals.append(jnp.ones((block,), acc))                     # presence
+    V = jnp.stack(vals, axis=1)                              # (block, A+1)
+    o_ref[...] += jax.lax.dot_general(
+        onehot.astype(acc), V, (((0,), (0,)), ((), ())),
+        preferred_element_type=acc)                          # (K, A+1)
+
+
+def fused_groupby(columns: dict, mask, *, pred, gid_fn, aggs,
+                  n_groups: int, block: int = BLOCK_ROWS,
+                  interpret: bool = False) -> jnp.ndarray:
+    """One-pass filtered grouped aggregation over named column blocks.
+
+    ``gid_fn`` maps the column dict to mixed-radix group ids in
+    [0, n_groups); ``aggs`` is a list of ``(fn, argf)`` with fn in
+    {sum, count}. Returns (n_groups, A+1): the A aggregate columns plus
+    a trailing per-group presence count (rows surviving the filter).
+    """
+    acc = acc_dtype(interpret)
+    names = tuple(columns)
+    n = mask.shape[0]
+    block = min(block, max(n, 8))
+    arrs, mask, nb = pad_block([columns[c] for c in names], mask, block)
+    if not interpret:
+        arrs = [a.astype(jnp.float32) if jnp.issubdtype(a.dtype,
+                                                        jnp.floating)
+                else a.astype(jnp.int32) for a in arrs]
+    A = len(aggs)
+
+    return pl.pallas_call(
+        functools.partial(
+            _fused_groupby_kernel, names=names, pred=pred, gid_fn=gid_fn,
+            aggs=aggs, acc=acc, n_groups=n_groups, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))
+                  for _ in range(len(names) + 1)],
+        out_specs=pl.BlockSpec((n_groups, A + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, A + 1), acc),
+        interpret=interpret,
+    )(*[a.reshape(nb, block) for a in arrs],
+      mask.astype(jnp.int32).reshape(nb, block))

@@ -55,3 +55,22 @@ def groupby_onehot(group_ids, values, *, n_groups: int,
                    block: int = _go.BLOCK_ROWS):
     return _go.groupby_onehot(group_ids, values, n_groups=n_groups,
                               block=block, interpret=_interpret())
+
+
+# -- generic fused kernels (engine dispatch targets) --------------------------
+#
+# Not jitted here: the expression closures aren't stable jit keys, and the
+# call sites — the lowered fragment programs built by ``repro.exec.lower``
+# — are already traced inside one jitted program per fragment op tree.
+
+def fused_filter_agg(columns: dict, mask, *, pred, aggs,
+                     block: int = _fa.BLOCK_ROWS):
+    return _fa.fused_filter_agg(columns, mask, pred=pred, aggs=aggs,
+                                block=block, interpret=_interpret())
+
+
+def fused_groupby(columns: dict, mask, *, pred, gid_fn, aggs,
+                  n_groups: int, block: int = _go.BLOCK_ROWS):
+    return _go.fused_groupby(columns, mask, pred=pred, gid_fn=gid_fn,
+                             aggs=aggs, n_groups=n_groups, block=block,
+                             interpret=_interpret())

@@ -79,6 +79,10 @@ class Pipeline:
     final: bool = False
     # estimated input bytes (for elastic worker sizing / cost model)
     input_bytes: int = 0
+    # fused Pallas kernel the fragment hot loop lowers to, or None — the
+    # exec.lower pattern match is decided at plan time so EXPLAIN and
+    # per-pipeline reports can show the dispatch without executing
+    kernel: str | None = None
 
 
 @dataclasses.dataclass
@@ -515,7 +519,18 @@ def compile_query(lqp: LNode, catalog: Catalog,
     planner = PhysicalPlanner(catalog, config)
     plan = planner.compile(lqp)
     _fix_join_segments(plan)
+    _annotate_kernels(plan)
     return plan
+
+
+def _annotate_kernels(plan: PhysicalPlan) -> None:
+    """Record which pipelines the kernel dispatch layer will lower."""
+    from repro.exec.lower import enabled, match_kernel
+    if not enabled():
+        return
+    for p in plan.pipelines.values():
+        op = p.op["child"] if p.op.get("t") == "final" else p.op
+        p.kernel = match_kernel(op)
 
 
 def _fix_join_segments(plan: PhysicalPlan) -> None:

@@ -1,15 +1,19 @@
 """Storage management layer: object store, tiers, PAX format, I/O handlers."""
 
-from repro.storage.io_handlers import InputHandler, IoStats, OutputHandler
+from repro.storage.io_handlers import (FooterCache, InputHandler, IoStats,
+                                       OutputHandler)
 from repro.storage.object_store import (FilesystemBackend, MemoryBackend,
                                         ObjectStore, StoreStats)
 from repro.storage.pax import (ColumnSpec, PaxFooter, ZonePredicate,
-                               parse_footer, surviving_row_groups, write_pax)
+                               coalesce_ranges, parse_footer,
+                               plan_chunk_requests, surviving_row_groups,
+                               write_pax)
 from repro.storage.tiers import TIERS, StorageTier
 
 __all__ = [
-    "ColumnSpec", "FilesystemBackend", "InputHandler", "IoStats",
-    "MemoryBackend", "ObjectStore", "OutputHandler", "PaxFooter",
-    "StorageTier", "StoreStats", "TIERS", "ZonePredicate", "parse_footer",
+    "ColumnSpec", "FilesystemBackend", "FooterCache", "InputHandler",
+    "IoStats", "MemoryBackend", "ObjectStore", "OutputHandler", "PaxFooter",
+    "StorageTier", "StoreStats", "TIERS", "ZonePredicate",
+    "coalesce_ranges", "parse_footer", "plan_chunk_requests",
     "surviving_row_groups", "write_pax",
 ]

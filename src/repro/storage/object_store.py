@@ -61,6 +61,11 @@ class Backend:
     def size(self, key: str) -> int:
         raise NotImplementedError
 
+    def etag(self, key: str) -> str:
+        """Opaque version token; changes whenever the object's bytes may
+        have changed (the S3 ETag analog). Used by metadata caches."""
+        raise NotImplementedError
+
     def exists(self, key: str) -> bool:
         raise NotImplementedError
 
@@ -76,11 +81,13 @@ class MemoryBackend(Backend):
 
     def __init__(self) -> None:
         self._objects: dict[str, bytes] = {}
+        self._versions: dict[str, int] = {}
         self._lock = threading.Lock()
 
     def put(self, key: str, data: bytes) -> None:
         with self._lock:
             self._objects[key] = bytes(data)
+            self._versions[key] = self._versions.get(key, 0) + 1
 
     def get(self, key: str, rng: tuple[int, int] | None) -> bytes:
         with self._lock:
@@ -93,6 +100,12 @@ class MemoryBackend(Backend):
     def size(self, key: str) -> int:
         with self._lock:
             return len(self._objects[key])
+
+    def etag(self, key: str) -> str:
+        with self._lock:
+            if key not in self._objects:
+                raise KeyError(key)
+            return f"v{self._versions[key]}-{len(self._objects[key])}"
 
     def exists(self, key: str) -> bool:
         with self._lock:
@@ -143,6 +156,13 @@ class FilesystemBackend(Backend):
 
     def size(self, key: str) -> int:
         return os.path.getsize(self._path(key))
+
+    def etag(self, key: str) -> str:
+        # the inode distinguishes rapid same-size overwrites that land
+        # within one mtime tick: every put() replaces via a fresh temp
+        # file, so the inode changes even when mtime_ns + size do not
+        st = os.stat(self._path(key))
+        return f"{st.st_ino}-{st.st_mtime_ns}-{st.st_size}"
 
     def exists(self, key: str) -> bool:
         return os.path.isfile(self._path(key))
@@ -224,6 +244,10 @@ class ObjectStore:
 
     def size(self, key: str) -> int:
         return self.backend.size(key)
+
+    def etag(self, key: str) -> str:
+        """Version token for ``key`` (HEAD analog; not a billed request)."""
+        return self.backend.etag(key)
 
     def exists(self, key: str) -> bool:
         return self.backend.exists(key)

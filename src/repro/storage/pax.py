@@ -174,6 +174,53 @@ def decompress_chunk(spec: ColumnSpec, meta_raw_len: int,
     return np.frombuffer(raw, dtype=spec.np_dtype())
 
 
+# -- ranged-read planning ----------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChunkRequest:
+    """One (row group, column) chunk a reader must fetch."""
+
+    group: int
+    column: str
+    off: int
+    length: int
+
+
+def plan_chunk_requests(footer: PaxFooter, names: Sequence[str],
+                        groups: Sequence[int]) -> list[ChunkRequest]:
+    """The chunk fetches for a projection over surviving row groups,
+    ordered by file offset (the write order interleaves columns within a
+    row group, so adjacent chunks of one projection are often adjacent
+    in the file)."""
+    reqs = [ChunkRequest(gi, n, footer.row_groups[gi].chunks[n].off,
+                         footer.row_groups[gi].chunks[n].length)
+            for gi in groups for n in names]
+    reqs.sort(key=lambda r: r.off)
+    return reqs
+
+
+def coalesce_ranges(reqs: Sequence[ChunkRequest],
+                    gap: int) -> list[tuple[int, int, list[ChunkRequest]]]:
+    """Merge offset-sorted chunk requests into ranged GETs.
+
+    Requests whose byte ranges are adjacent or separated by at most
+    ``gap`` wasted bytes share one GET (Lambada-style request batching:
+    per-request cost dominates small reads, so a bounded amount of
+    discarded bytes buys a large request-count reduction). Returns
+    ``(off, length, members)`` triples covering every request.
+    """
+    out: list[tuple[int, int, list[ChunkRequest]]] = []
+    for r in reqs:
+        if out:
+            off, length, members = out[-1]
+            if r.off <= off + length + gap:
+                end = max(off + length, r.off + r.length)
+                out[-1] = (off, end - off, members + [r])
+                continue
+        out.append((r.off, r.length, [r]))
+    return out
+
+
 # -- zone-map predicate pruning ---------------------------------------------
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,156 @@
+"""Kernel dispatch layer: pattern match, kernel/jnp parity, clean fallback."""
+
+import numpy as np
+import pytest
+
+from repro.api import connect
+from repro.core import CoordinatorConfig, FaasPlatform, QueryCoordinator
+from repro.exec import lower
+from repro.exec.batch import from_numpy
+from repro.exec.fragment import _build, fn_cache_stats
+from repro.sql import oracle
+from repro.sql.logical import Binder
+from repro.sql.parser import parse
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.sql.rules import optimize
+
+CFG = CoordinatorConfig(planner=PlannerConfig(
+    bytes_per_worker=250_000, broadcast_threshold_bytes=150_000,
+    exchange_partitions=3), use_result_cache=False)
+
+
+def _plan(store, catalog, sql, cfg=CFG):
+    coord = QueryCoordinator(store, catalog,
+                             platform=FaasPlatform(seed=1), config=cfg)
+    return coord.plan_sql(sql)
+
+
+def _scan_pipeline(plan):
+    return next(p for p in plan.pipelines.values() if p.scan_units)
+
+
+def _oracle(catalog, tables, sql):
+    lqp, _ = Binder(catalog).bind(parse(sql))
+    return oracle.run(optimize(lqp), tables)
+
+
+# -- pattern matching ---------------------------------------------------------
+
+def test_q6_matches_filter_agg(tpch_store):
+    store, catalog = tpch_store
+    p = _scan_pipeline(_plan(store, catalog, QUERIES["q6"]))
+    assert p.kernel == "filter_agg"
+    assert lower.match_kernel(p.op) == "filter_agg"
+
+
+def test_q1_matches_groupby_onehot(tpch_store):
+    store, catalog = tpch_store
+    p = _scan_pipeline(_plan(store, catalog, QUERIES["q1"]))
+    assert p.kernel == "groupby_onehot"
+
+
+def test_join_fragments_do_not_match(tpch_store):
+    store, catalog = tpch_store
+    plan = _plan(store, catalog, QUERIES["q12"])
+    assert all(p.kernel is None for p in plan.pipelines.values())
+
+
+def test_grouped_min_does_not_match(tpch_store):
+    store, catalog = tpch_store
+    sql = ("select l_returnflag, min(l_quantity) as mq from lineitem "
+           "group by l_returnflag")
+    p = _scan_pipeline(_plan(store, catalog, sql))
+    assert p.kernel is None          # one-hot matmul cannot min/max
+    assert lower.lower_fragment(p.op) is None
+
+
+def test_disabled_scope_skips_annotation_and_lowering(tpch_store):
+    store, catalog = tpch_store
+    with lower.disabled():
+        p = _scan_pipeline(_plan(store, catalog, QUERIES["q6"]))
+        assert p.kernel is None
+    assert lower.enabled()
+
+
+# -- block-level parity across capacity buckets -------------------------------
+
+@pytest.mark.parametrize("qname,n_rows", [
+    ("q6", 900), ("q6", 3000), ("q6", 12000),     # caps 1024/4096/16384
+    ("q1", 900), ("q1", 3000), ("q1", 12000),
+])
+def test_lowered_matches_generic_per_capacity(qname, n_rows, tpch_store,
+                                              tpch_tables):
+    store, catalog = tpch_store
+    p = _scan_pipeline(_plan(store, catalog, QUERIES[qname]))
+    lowered = lower.lower_fragment(p.op)
+    assert lowered is not None and lowered.kernel == p.kernel
+    leaves: list = []
+    generic = _build(p.op, leaves)
+    (leaf_id, leaf_op), = lowered.leaves
+    assert leaves[0][1] is leaf_op
+
+    li = tpch_tables["lineitem"]
+    cols = {c: li[c][:n_rows] for c in leaf_op["columns"]}
+    blk = from_numpy(cols)
+    blocks = {leaf_id: (blk.columns, blk.mask)}
+
+    k_cols, k_mask = lowered.fn(blocks)
+    g_cols, g_mask = generic(blocks)
+    assert set(k_cols) == set(g_cols)
+    np.testing.assert_array_equal(np.asarray(k_mask), np.asarray(g_mask))
+    for name in g_cols:
+        np.testing.assert_allclose(
+            np.asarray(k_cols[name], np.float64),
+            np.asarray(g_cols[name], np.float64),
+            rtol=1e-12, atol=1e-12, err_msg=f"{qname}.{name}@{n_rows}")
+
+
+# -- end-to-end engine parity -------------------------------------------------
+
+@pytest.mark.parametrize("qname", ["q1", "q6"])
+def test_engine_kernel_path_matches_jnp_and_oracle(qname, tpch_store,
+                                                   tpch_tables):
+    store, catalog = tpch_store
+    with connect(store, catalog, config=CFG) as session:
+        fused = session.sql(QUERIES[qname])
+        scan = next(p for p in fused.stats.pipelines
+                    if p.kernel)
+        assert scan.kernel_fragments == scan.n_fragments
+        got_fused = fused.fetch(store)
+        with lower.disabled():
+            got_jnp = session.sql(QUERIES[qname]).fetch(store)
+    want = _oracle(catalog, tpch_tables, QUERIES[qname])
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got_fused[k], np.float64),
+            np.asarray(want[k], np.float64), rtol=1e-9, atol=1e-9,
+            err_msg=f"{qname}.{k} (fused vs oracle)")
+        np.testing.assert_allclose(
+            np.asarray(got_fused[k], np.float64),
+            np.asarray(got_jnp[k], np.float64), rtol=1e-12, atol=1e-12,
+            err_msg=f"{qname}.{k} (fused vs jnp)")
+
+
+def test_unmatched_plan_falls_back_cleanly(tpch_store, tpch_tables):
+    store, catalog = tpch_store
+    with connect(store, catalog, config=CFG) as session:
+        res = session.sql(QUERIES["q12"])
+        assert all(p.kernel_fragments == 0 for p in res.stats.pipelines)
+        got = res.fetch(store)
+    want = _oracle(catalog, tpch_tables, QUERIES["q12"])
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k], np.float64),
+                                   np.asarray(want[k], np.float64))
+
+
+def test_compiled_program_cache_shared_across_queries(tpch_store):
+    store, catalog = tpch_store
+    with connect(store, catalog, config=CFG) as session:
+        session.sql(QUERIES["q6"])
+        before = fn_cache_stats()
+        session.sql(QUERIES["q6"])          # same plan → cached programs
+        after = fn_cache_stats()
+    assert after["hits"] > before["hits"]
+    assert after["misses"] == before["misses"]
+    assert after["entries"] == before["entries"]

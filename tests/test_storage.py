@@ -1,11 +1,14 @@
-"""Storage layer: PAX roundtrip, zone-map pruning, tiers, retriggering."""
+"""Storage layer: PAX roundtrip, zone-map pruning, tiers, retriggering,
+range coalescing, and the shared footer cache."""
 
 import numpy as np
 import pytest
 
-from repro.storage import (ColumnSpec, FilesystemBackend, InputHandler,
-                           ObjectStore, OutputHandler, TIERS,
-                           ZonePredicate, write_pax)
+from repro.storage import (ColumnSpec, FilesystemBackend, FooterCache,
+                           InputHandler, ObjectStore, OutputHandler, TIERS,
+                           ZonePredicate, coalesce_ranges,
+                           plan_chunk_requests, write_pax)
+from repro.storage.pax import ChunkRequest
 
 SCHEMA = [
     ColumnSpec("a", "num", "<i8"),
@@ -116,6 +119,86 @@ def test_straggler_retriggering_charges_requests():
     _, _, st = ih.read_table("t.spax", ["a"])
     assert st.retriggers > 0            # tiny timeout → everything lags
     assert st.requests > 3              # duplicates were charged
+    # retriggered duplicates occupy the request pool: the read's makespan
+    # covers them instead of only the winning requests
+    assert st.sim_time_s > 0
+
+
+# -- range coalescing ---------------------------------------------------------
+
+def test_coalesce_ranges_unit():
+    reqs = [ChunkRequest(0, "a", 0, 100), ChunkRequest(0, "b", 100, 50),
+            ChunkRequest(0, "c", 180, 20), ChunkRequest(1, "a", 1000, 10)]
+    merged = coalesce_ranges(reqs, gap=64)
+    assert [(off, length) for off, length, _ in merged] == \
+        [(0, 200), (1000, 10)]          # a+b adjacent, c within gap
+    assert [len(m) for _, _, m in merged] == [3, 1]
+    # gap 0 still merges strictly adjacent ranges
+    merged0 = coalesce_ranges(reqs, gap=0)
+    assert [(off, length) for off, length, _ in merged0] == \
+        [(0, 150), (180, 20), (1000, 10)]
+
+
+def test_coalesced_read_fewer_requests_same_data():
+    store = ObjectStore(tier="local")
+    cols = _columns(30_000)
+    store.put("t.spax", write_pax(cols, SCHEMA, row_group_rows=10_000))
+    fine = InputHandler(store, coalesce_gap=-1,   # negative gap: one GET
+                        footer_cache=FooterCache())  # per chunk (disabled)
+    wide = InputHandler(store, footer_cache=FooterCache())
+    out_f, footer, st_f = fine.read_table("t.spax")
+    out_w, _, st_w = wide.read_table("t.spax")
+    n_chunks = len(plan_chunk_requests(
+        footer, [c.name for c in footer.columns], range(3)))
+    assert n_chunks == 12               # 3 row groups × 4 columns
+    assert st_w.requests < st_f.requests
+    assert st_w.coalesced_chunks > 0
+    for name in cols:                   # byte-identical data either way
+        assert np.array_equal(out_w[name], cols[name]), name
+        assert np.array_equal(out_f[name], cols[name]), name
+
+
+# -- shared footer cache ------------------------------------------------------
+
+def test_footer_cache_shared_across_handlers():
+    store = ObjectStore(tier="local")
+    store.put("t.spax", write_pax(_columns(5000), SCHEMA))
+    cache = FooterCache()
+    a = InputHandler(store, footer_cache=cache)
+    b = InputHandler(store, footer_cache=cache)
+    _, _, st_a = a.read_table("t.spax", ["a"])
+    _, _, st_b = b.read_table("t.spax", ["a"])
+    assert st_a.footer_hits == 0 and st_b.footer_hits == 1
+    assert st_b.requests == st_a.requests - 2   # tail + footer GETs saved
+    assert cache.hits == 1
+
+
+def test_footer_cache_invalidated_by_overwrite():
+    store = ObjectStore(tier="local")
+    ih = InputHandler(store, footer_cache=FooterCache())
+    store.put("t.spax", write_pax(_columns(100, seed=1), SCHEMA))
+    out1, _, _ = ih.read_table("t.spax", ["b"])
+    store.put("t.spax", write_pax(_columns(200, seed=2), SCHEMA))
+    out2, _, st = ih.read_table("t.spax", ["b"])
+    assert st.footer_hits == 0          # etag changed → fresh footer
+    assert len(out2["b"]) == 200
+    assert not np.array_equal(out1["b"][:100], out2["b"][:100])
+
+
+def test_empty_partition_skips_chunk_requests():
+    store = ObjectStore(tier="s3-standard", seed=0)
+    cols = {k: v[:0] for k, v in _columns(4).items()}
+    store.put("e.spax", write_pax(cols, SCHEMA))
+    ih = InputHandler(store)
+    out, footer, st1 = ih.read_table("e.spax")
+    assert footer.n_rows == 0 and len(out["a"]) == 0
+    assert st1.requests == 2            # the two footer GETs, no chunks
+    # footer-only reads are *timed*: before the makespan fix their
+    # latency accumulated as += 0.0
+    assert st1.sim_time_s > 0
+    _, _, st2 = ih.read_table("e.spax")
+    assert st2.requests == 0            # cached footer: free empty-check
+    assert st2.footer_hits == 1
 
 
 def test_output_handler_single_object():
