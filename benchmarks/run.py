@@ -12,6 +12,8 @@ measurements on this host.
   §3.4     → cache          (recurring-query cost)
   sessions → concurrency    (multi-query shared-quota scheduling)
   dispatch → fusion         (fused Pallas path vs generic jnp, parity-checked)
+  barriers → adaptive       (barrier re-optimization vs static plan,
+                             parity- and worker-count-checked)
   kernels  → Pallas kernels (interpret mode on CPU)
 
 ``--json PATH`` additionally writes the rows as a JSON snapshot (the
@@ -37,6 +39,7 @@ SUITES = {
     "cache": suites.bench_result_cache,
     "concurrency": suites.bench_concurrency,
     "fusion": suites.bench_fusion,
+    "adaptive": suites.bench_adaptive,
     "kernels": suites.bench_kernels,
 }
 

@@ -251,6 +251,81 @@ def bench_concurrency(n_queries: int = 4, quota: int = 8, *,
     return rows
 
 
+# -- adaptive re-optimization: barrier re-planning vs the static plan -----------------------
+
+ADAPTIVE_SKEWED_SQL = """
+select o_orderpriority, count(*) as n, sum(l_extendedprice) as rev
+from lineitem, orders
+where l_orderkey = o_orderkey
+    and l_extendedprice * l_discount > 9000
+group by o_orderpriority
+order by o_orderpriority
+"""
+
+
+def bench_adaptive(smoke: bool = False):
+    """Adaptive vs static execution on a skewed-selectivity join.
+
+    The probe-side predicate (``l_extendedprice * l_discount > 9000``,
+    ~0.1% selective) is an expression no zone map can estimate, so the
+    planner falls back to its constant selectivity guess and sizes the
+    repartition-join fleet for ~300× more data than arrives. At the
+    stage barrier the adaptive path re-sizes that fleet cost-optimally
+    from the observed exchange manifests, prunes empty partitions, and
+    downgrades the join to broadcast when the observed build side fits
+    the memory budget.
+
+    Asserts — failing the CI bench-smoke job on regression — that the
+    adaptive path (a) never invokes more workers than the static plan
+    and (b) returns identical rows.
+    """
+    sf, n_parts = (0.01, 4) if smoke else (0.02, 6)
+    store, catalog = _db(sf, n_parts=n_parts)
+    # thresholds sized so the plan repartitions the join even at smoke
+    # scale (the adaptation under test needs an exchange to re-plan)
+    planner = PlannerConfig(bytes_per_worker=40_000,
+                            broadcast_threshold_bytes=50_000)
+    runs = {}
+    for mode, adaptive in (("static", False), ("adaptive", True)):
+        cfg = CoordinatorConfig(
+            planner=planner, use_result_cache=False, adaptive=adaptive,
+            # deterministic invocation counts: no wall-clock-noise
+            # straggler re-triggers in CI
+            straggler_min_timeout_s=100.0)
+        with connect(store, catalog, quota=1000, config=cfg,
+                     seed=9) as session:
+            t0 = time.perf_counter()
+            res = session.sql(ADAPTIVE_SKEWED_SQL)
+            wall = time.perf_counter() - t0
+            runs[mode] = (wall, res, res.fetch(store),
+                          session.platform.invocations)
+    s_wall, s_res, s_cols, s_inv = runs["static"]
+    a_wall, a_res, a_cols, a_inv = runs["adaptive"]
+    for k in s_cols:
+        np.testing.assert_allclose(
+            np.asarray(a_cols[k], np.float64),
+            np.asarray(s_cols[k], np.float64), rtol=1e-9, atol=1e-9,
+            err_msg=f"adaptive-vs-static parity regression: {k}")
+    assert a_inv <= s_inv, \
+        f"adaptive invoked more workers than static: {a_inv} > {s_inv}"
+    a_stats, s_stats = a_res.stats, s_res.stats
+    adaptations = [x for p in a_stats.pipelines for x in p.adaptations]
+    resized = [x for x in adaptations if x["kind"] == "fleet_resize"]
+    return [(
+        "adaptive/skewed_join_static_vs_adaptive", a_wall * 1e6,
+        f"static_us={s_wall * 1e6:.1f};"
+        f"invocations_static={s_inv};invocations_adaptive={a_inv};"
+        f"workers_static={sum(p.n_fragments for p in s_stats.pipelines)};"
+        f"workers_adaptive={sum(p.n_fragments for p in a_stats.pipelines)};"
+        f"adaptations={len(adaptations)};"
+        f"fleet_resizes={[(x['from'], x['to']) for x in resized]};"
+        f"cents_static={s_stats.cost.total_cents:.4f};"
+        f"cents_adaptive={a_stats.cost.total_cents:.4f};"
+        f"requests_static={sum(p.requests for p in s_stats.pipelines)};"
+        f"requests_adaptive={sum(p.requests for p in a_stats.pipelines)};"
+        f"parity=ok")]
+
+
 # -- kernel dispatch: fused Pallas path vs generic jnp path ---------------------------------
 
 def bench_fusion(smoke: bool = False):

@@ -22,7 +22,7 @@ leaves out (section 3.1).
 
 from repro.core.engine import (CoordinatorConfig, QueryAborted,
                                QueryCancelled, QueryResult, QueryStats,
-                               explain_plan)
+                               explain_analyze, explain_plan)
 from repro.core.events import ConsoleObserver, QueryObserver
 from repro.core.platform import FaasPlatform, FaultPlan
 
@@ -33,5 +33,5 @@ __all__ = [
     "ConsoleObserver", "CoordinatorConfig", "FaasPlatform", "FaultPlan",
     "QueryAborted", "QueryCancelled", "QueryHandle", "QueryObserver",
     "QueryResult", "QueryState", "QueryStats", "SkyriseSession",
-    "connect", "explain_plan",
+    "connect", "explain_analyze", "explain_plan",
 ]

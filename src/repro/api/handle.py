@@ -35,9 +35,11 @@ class QueryState(enum.Enum):
 class QueryHandle:
     """Lifecycle, result, and stats of one query in a session."""
 
-    def __init__(self, query_id: str, sql: str, session):
+    def __init__(self, query_id: str, sql: str, session,
+                 priority: int = 0):
         self.query_id = query_id
         self.sql = sql
+        self.priority = priority
         self._session = session
         # RLock: state transitions notify observers while holding the
         # lock, and observers may read handle.state back.
@@ -89,10 +91,20 @@ class QueryHandle:
         return self.result(timeout).stats
 
     def explain(self) -> str:
-        """Physical plan description; plans the query if still queued
-        (planning is pure — no workers are invoked)."""
+        """Compile-time physical plan description; plans the query if
+        still queued (planning is pure — no workers are invoked)."""
         from repro.core.engine import explain_plan
-        return explain_plan(self._session._plan_for(self))
+        return explain_plan(self._session._display_plan(self))
+
+    def explain_analyze(self, timeout: float | None = None) -> str:
+        """EXPLAIN ANALYZE: blocks for the result, then renders the plan
+        annotated with observed execution — est vs actual rows, planned
+        vs invoked fleets, and the barrier adaptations applied."""
+        from repro.core.engine import explain_analyze
+        res = self.result(timeout)
+        with self._lock:
+            plan = self._plan
+        return explain_analyze(plan, res.stats)
 
     def error(self) -> BaseException | None:
         """The failure cause once FAILED (None otherwise)."""

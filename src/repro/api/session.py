@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from collections import deque
 
 from repro.core.cost import CostModel
@@ -125,12 +126,21 @@ class SkyriseSession:
         return catalog
 
     # -- query API -----------------------------------------------------------
-    def submit(self, sql: str) -> QueryHandle:
-        """Enqueue a query; returns its handle immediately."""
+    def submit(self, sql: str, priority: int = 0) -> QueryHandle:
+        """Enqueue a query; returns its handle immediately.
+
+        ``priority`` orders the session scheduler *and* the platform's
+        admission ledger: freed queue positions and worker slots go to
+        the highest-priority waiting query (ties FIFO), with an aging
+        bump per ``aging_interval_s`` waited (see ``AdmissionController``)
+        so low-priority queries are delayed but never starved.
+        """
         if self.catalog is None:
             raise RuntimeError("no catalog attached — call "
                                "attach_catalog() or ensure_tpch() first")
-        handle = QueryHandle(f"s{self._sid}-q{next(self._qid)}", sql, self)
+        handle = QueryHandle(f"s{self._sid}-q{next(self._qid)}", sql, self,
+                             priority=priority)
+        handle._enqueued_at = time.monotonic()
         with self._cv:
             if self._closing:
                 raise RuntimeError("session is closed")
@@ -210,7 +220,18 @@ class SkyriseSession:
             "store_cost_cents": self.store.stats.cost_cents,
             "footer_cache_hits": self.footer_cache.hits,
             "footer_cache_entries": len(self.footer_cache),
+            "adaptations": self._count_adaptations(),
         }
+
+    def _count_adaptations(self) -> int:
+        """Barrier re-optimizations applied across completed queries."""
+        n = 0
+        for h in self._handles:
+            with h._lock:
+                result = h._result
+            if result is not None:
+                n += sum(len(p.adaptations) for p in result.stats.pipelines)
+        return n
 
     def add_observer(self, observer: QueryObserver) -> None:
         self.observers.add(observer)
@@ -222,7 +243,8 @@ class SkyriseSession:
             config=self.config, cost_model=self.cost_model,
             registry=self.registry, handler=self.handler,
             observer=self.observers, query_id=handle.query_id,
-            cancel_check=handle._raise_if_cancelled)
+            cancel_check=handle._raise_if_cancelled,
+            priority=handle.priority)
 
     def _plan_for(self, handle: QueryHandle):
         """Plan (but do not execute) a handle's query, caching the plan
@@ -234,6 +256,17 @@ class SkyriseSession:
             with handle._lock:
                 handle._plan = plan
         return plan
+
+    def _display_plan(self, handle: QueryHandle):
+        """The *compile-time* plan for EXPLAIN. Once execution begins,
+        the engine adapts the cached plan's params in place at stage
+        barriers, so a fresh compile is needed to show the planner's
+        choices (explain_analyze renders planned vs adapted instead)."""
+        with handle._lock:
+            state = handle._state
+        if state is QueryState.QUEUED:
+            return self._plan_for(handle)
+        return self._engine(handle).plan_sql(handle.sql)
 
     def _notify_state(self, handle: QueryHandle, state: QueryState) -> None:
         self.observers.on_query_state(handle.query_id, state.value)
@@ -251,6 +284,23 @@ class SkyriseSession:
             self._threads.append(t)
             t.start()
 
+    def _pop_next_locked(self) -> QueryHandle:
+        """Highest effective priority first (priority + aging bump),
+        ties in submission order — mirrors the admission ledger, whose
+        (configurable) aging interval it shares."""
+        now = time.monotonic()
+        aging_s = self.platform.admission.aging_interval_s
+
+        def eff(h: QueryHandle) -> float:
+            return h.priority + (now - getattr(h, "_enqueued_at", now)) \
+                / aging_s
+
+        best = max(range(len(self._queue)),
+                   key=lambda i: (eff(self._queue[i]), -i))
+        handle = self._queue[best]
+        del self._queue[best]
+        return handle
+
     def _worker_loop(self) -> None:
         while True:
             with self._cv:
@@ -259,7 +309,7 @@ class SkyriseSession:
                     self._cv.wait()
                 if self._closing and not self._queue:
                     return
-                handle = self._queue.popleft()
+                handle = self._pop_next_locked()
                 self._active += 1
             try:
                 self._run(handle)

@@ -8,11 +8,13 @@ The public client entry point is :mod:`repro.api` (``connect()`` →
 ``SkyriseSession``); this package holds the engine underneath it.
 """
 
+from repro.core.adaptive import Reoptimizer
 from repro.core.coordinator import QueryCoordinator
 from repro.core.cost import CostBreakdown, CostModel
 from repro.core.engine import (CoordinatorConfig, PipelineReport,
                                QueryAborted, QueryCancelled, QueryEngine,
-                               QueryResult, QueryStats, explain_plan)
+                               QueryResult, QueryStats, explain_analyze,
+                               explain_plan)
 from repro.core.events import ConsoleObserver, ObserverMux, QueryObserver
 from repro.core.platform import (AdmissionController, FaasPlatform,
                                  FaultPlan)
@@ -23,5 +25,6 @@ __all__ = [
     "CostBreakdown", "CostModel", "FaasPlatform", "FaultPlan",
     "ObserverMux", "PipelineReport", "QueryAborted", "QueryCancelled",
     "QueryCoordinator", "QueryEngine", "QueryObserver", "QueryResult",
-    "QueryStats", "ResultRegistry", "explain_plan",
+    "QueryStats", "Reoptimizer", "ResultRegistry", "explain_analyze",
+    "explain_plan",
 ]

@@ -1,0 +1,248 @@
+"""Runtime re-optimization at pipeline barriers (paper sections 3.2/3.3).
+
+The paper's core claim is that a serverless query processor stays
+competitive only through *adaptive and cost-aware* techniques: compile-time
+estimates decide how a pipeline would run, but every decision downstream of
+a stage barrier can be re-made once upstream pipelines have actually run.
+Workers emit per-partition output statistics (rows, bytes, distinct-key KMV
+sketches) into the exchange manifest (the registry entry published per
+pipeline); before the engine launches a downstream pipeline, the
+:class:`Reoptimizer` replaces the planner's guesses with those observations:
+
+  * **fleet re-sizing** — the fragment count is re-derived by minimizing
+    ``CostModel`` dollars subject to a latency budget
+    (``CostModel.optimal_fleet``) over the *observed* exchange bytes,
+    instead of the static ``-(-est_bytes // bytes_per_worker)``; upstream
+    partitions are re-assigned to the smaller fleet LPT-balanced by bytes;
+  * **empty-partition pruning** — partitions the manifest proves empty are
+    dropped from every fragment's read set (and from the fleet-size cap);
+  * **broadcast-join downgrade** — a repartition join whose *observed*
+    build side fits a worker's memory budget switches the build source to
+    a broadcast (mode=all) read, freeing the fleet size from build-side
+    partition alignment;
+  * **exchange re-tiering** — the pipeline's own output exchange tier is
+    re-picked from the adapted producer count (object-request-rate
+    reasoning of section 3.4).
+
+All re-decisions mutate only ``Pipeline.params`` (the mutable execution
+half of the plan); the logical core — and therefore the semantic hash —
+is untouched, so adapted pipelines still cache and dedup against their
+statically planned twins. Partition re-assignment is only applied when
+every aligned (partition-mode) source shares one hash layout, and
+assigning whole upstream partitions to fragments preserves co-location of
+join keys and group keys, so results stay identical to the static plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cost import CostModel
+from repro.exec.operators import kmv_estimate, kmv_merge  # noqa: F401
+from repro.sql.physical import Pipeline
+
+
+@dataclasses.dataclass
+class _Leaf:
+    op: dict
+    under_build: bool
+
+
+def _collect_leaves(op: dict, under_build: bool = False) -> list[_Leaf]:
+    """All scan_exchange leaves of a fragment op tree, flagged when they
+    sit on the build side of a join (build rows never *drive* output:
+    a partition with zero probe rows produces nothing)."""
+    out: list[_Leaf] = []
+    if op.get("t") == "scan_exchange":
+        out.append(_Leaf(op, under_build))
+        return out
+    for k in ("child", "probe"):
+        if k in op:
+            out.extend(_collect_leaves(op[k], under_build))
+    if "build" in op:
+        out.extend(_collect_leaves(op["build"], True))
+    return out
+
+
+def apply_broadcast(op: dict, sources: list[str]) -> dict:
+    """Copy of ``op`` with the given exchange sources read broadcast
+    (mode=all) instead of partition-aligned — the shuffle→broadcast join
+    downgrade. The original op tree (the immutable logical core) is
+    never mutated."""
+    if not sources:
+        return op
+    out = dict(op)
+    if out.get("t") == "scan_exchange" and out.get("source") in sources \
+            and out.get("mode") == "partition":
+        out["mode"] = "all"
+    for k in ("child", "probe", "build"):
+        if k in out:
+            out[k] = apply_broadcast(out[k], sources)
+    return out
+
+
+def _lpt_assignment(parts: list[int], weights: dict[int, float],
+                    n_fragments: int) -> list[list[int]]:
+    """Assign upstream partitions to fragments, longest-processing-time
+    first (balance observed bytes); each fragment's list stays sorted so
+    read/concat order is deterministic."""
+    buckets: list[list[int]] = [[] for _ in range(n_fragments)]
+    loads = [0.0] * n_fragments
+    for d in sorted(parts, key=lambda d: (-weights.get(d, 0.0), d)):
+        i = loads.index(min(loads))
+        buckets[i].append(d)
+        loads[i] += weights.get(d, 0.0)
+    return [sorted(b) for b in buckets]
+
+
+class Reoptimizer:
+    """Re-derives a pipeline's execution parameters from the observed
+    statistics of its upstream exchange manifests."""
+
+    def __init__(self, cost_model: CostModel, *,
+                 latency_budget_s: float = 2.0,
+                 broadcast_bytes: int = 16 << 20,
+                 hot_shuffle_object_threshold: int = 64,
+                 quota: int = 2500):
+        self.cost_model = cost_model
+        self.latency_budget_s = latency_budget_s
+        self.broadcast_bytes = broadcast_bytes
+        self.hot_shuffle_object_threshold = hot_shuffle_object_threshold
+        self.quota = quota
+
+    # -- entry point --------------------------------------------------------
+    def adapt(self, p: Pipeline, sources: dict[str, dict]) -> list[dict]:
+        """Re-optimize ``p`` in place (mutating ``p.params`` only) before
+        launch; returns the list of adaptation records applied.
+
+        ``sources`` maps source semantic hashes to their registry
+        entries (the exchange manifests). Pipelines that scan base
+        tables directly have no runtime observations to exploit and are
+        left untouched; so is any pipeline whose manifests predate stat
+        emission (graceful fallback to the static plan).
+        """
+        if p.scan_units or not sources:
+            return []
+        adaptations: list[dict] = []
+        leaves = _collect_leaves(p.op)
+
+        self._downgrade_broadcast_joins(p, sources, adaptations)
+        self._prune_empty_partitions(p, sources, leaves, adaptations)
+        self._resize_fleet(p, sources, leaves, adaptations)
+        self._retier_exchange(p, adaptations)
+        return adaptations
+
+    # -- (c) shuffle → broadcast join downgrade ------------------------------
+    def _downgrade_broadcast_joins(self, p: Pipeline, sources: dict,
+                                   adaptations: list[dict]) -> None:
+        def walk(op: dict) -> None:
+            if op.get("t") == "join":
+                build = op.get("build", {})
+                if build.get("t") == "scan_exchange" \
+                        and build.get("mode") == "partition":
+                    sem = build["source"]
+                    st = (sources.get(sem) or {}).get("stats") or {}
+                    nbytes = st.get("bytes_out")
+                    if nbytes is not None \
+                            and nbytes <= self.broadcast_bytes:
+                        p.params.broadcast_sources.append(sem)
+                        adaptations.append({
+                            "kind": "broadcast_downgrade", "source": sem,
+                            "observed_bytes": int(nbytes),
+                            "budget_bytes": int(self.broadcast_bytes)})
+            for k in ("child", "probe", "build"):
+                if k in op:
+                    walk(op[k])
+        walk(p.op)
+
+    # -- (b) empty-partition pruning ----------------------------------------
+    def _prune_empty_partitions(self, p: Pipeline, sources: dict,
+                                leaves: list[_Leaf],
+                                adaptations: list[dict]) -> None:
+        for leaf in leaves:
+            sem = leaf.op["source"]
+            entry = sources.get(sem) or {}
+            part = entry.get("partitioning") or {}
+            rows = (entry.get("stats") or {}).get("partition_rows")
+            if part.get("kind") != "hash" or rows is None \
+                    or sem in p.params.source_partitions:
+                continue
+            nonempty = [d for d, r in enumerate(rows) if r > 0]
+            if len(nonempty) < len(rows):
+                p.params.source_partitions[sem] = nonempty
+                adaptations.append({
+                    "kind": "partition_prune", "source": sem,
+                    "pruned": len(rows) - len(nonempty),
+                    "of": len(rows)})
+
+    # -- (a) cost-optimal fleet re-sizing -------------------------------------
+    def _resize_fleet(self, p: Pipeline, sources: dict,
+                      leaves: list[_Leaf],
+                      adaptations: list[dict]) -> None:
+        aligned = [l for l in leaves
+                   if l.op.get("mode") == "partition"
+                   and l.op["source"] not in p.params.broadcast_sources]
+        if not aligned:
+            return
+        entries = []
+        for leaf in aligned:
+            entry = sources.get(leaf.op["source"])
+            part = (entry or {}).get("partitioning") or {}
+            st = (entry or {}).get("stats") or {}
+            if part.get("kind") != "hash" \
+                    or st.get("partition_rows") is None \
+                    or st.get("partition_bytes") is None:
+                return          # manifest without stats: stay static
+            entries.append((leaf, part, st))
+        n_dests = {part["n_dest"] for _, part, _ in entries}
+        if len(n_dests) != 1:
+            return              # cached foreign layouts cannot align
+        D = n_dests.pop()
+        # a partition drives output when any non-build source has rows
+        driving_rows = [0] * D
+        bytes_per_part: dict[int, float] = {d: 0.0 for d in range(D)}
+        for leaf, part, st in entries:
+            for d in range(D):
+                bytes_per_part[d] += st["partition_bytes"][d]
+                if not leaf.under_build:
+                    driving_rows[d] += st["partition_rows"][d]
+        if not any(not leaf.under_build for leaf, _, _ in entries):
+            driving_rows = [1] * D      # defensive: no driving source
+        nonempty = [d for d in range(D) if driving_rows[d] > 0]
+        total_bytes = int(sum(bytes_per_part[d] for d in nonempty))
+
+        f0 = p.params.n_fragments
+        cap = min(f0, max(len(nonempty), 1), self.quota)
+        w = self.cost_model.optimal_fleet(
+            total_bytes, latency_budget_s=self.latency_budget_s,
+            max_workers=cap)
+        static_map = (w == f0 == D and len(nonempty) == D
+                      and not p.params.broadcast_sources)
+        if static_map:
+            return              # the 1:1 fragment↔partition map stands
+        p.params.partition_assignment = _lpt_assignment(
+            nonempty, bytes_per_part, w)
+        p.params.n_fragments = w
+        if w != f0:
+            adaptations.append({
+                "kind": "fleet_resize", "from": f0, "to": w,
+                "observed_bytes": total_bytes,
+                "est_bytes": int(p.params.est_in_bytes),
+                "cost_cents": self.cost_model.fleet_cost_cents(
+                    w, total_bytes),
+                "latency_budget_s": self.latency_budget_s})
+
+    # -- (b) exchange re-tiering ---------------------------------------------
+    def _retier_exchange(self, p: Pipeline,
+                         adaptations: list[dict]) -> None:
+        part = p.params.partitioning
+        if part.kind != "hash":
+            return
+        objects = p.params.n_fragments * part.n_dest
+        tier = "s3-express" if objects > self.hot_shuffle_object_threshold \
+            else "s3-standard"
+        if tier != part.tier:
+            adaptations.append({"kind": "exchange_retier",
+                                "from": part.tier, "to": tier,
+                                "shuffle_objects": objects})
+            part.tier = tier

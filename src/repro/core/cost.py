@@ -9,6 +9,7 @@ the paper's experiments (Aug 2024 – Jan 2025).
 from __future__ import annotations
 
 import dataclasses
+import math
 
 from repro.storage.tiers import TIERS
 
@@ -84,3 +85,55 @@ class CostModel:
                              * LAMBDA_CENTS_PER_GIB_S)
         out.invoke_cents = LAMBDA_CENTS_PER_REQUEST
         return out
+
+    # -- cost-optimal fleet sizing (adaptive re-optimization) -------------------
+    def fleet_latency_s(self, n_workers: int, nbytes: int, *,
+                        bandwidth_bytes_per_s: float = 90e6,
+                        fixed_s: float = 0.05) -> float:
+        """Projected pipeline latency with ``n_workers`` sharing
+        ``nbytes`` of input: per-worker startup/dispatch overhead plus
+        its byte share over one storage connection."""
+        share = nbytes / max(n_workers, 1)
+        return fixed_s + share / bandwidth_bytes_per_s
+
+    def fleet_cost_cents(self, n_workers: int, nbytes: int, *,
+                         bandwidth_bytes_per_s: float = 90e6,
+                         fixed_s: float = 0.05) -> float:
+        """Projected fleet dollars: per-worker fixed charges (invoke +
+        response messages + startup compute) plus the byte-proportional
+        scan compute, which is invariant in the fleet size. Strictly
+        increasing in ``n_workers`` — parallelism buys latency, never
+        dollars."""
+        per_worker = (LAMBDA_CENTS_PER_REQUEST + 2 * SQS_CENTS_PER_REQUEST
+                      + fixed_s * self.worker_memory_gib
+                      * LAMBDA_CENTS_PER_GIB_S)
+        scan_s = nbytes / bandwidth_bytes_per_s
+        return (n_workers * per_worker
+                + scan_s * self.worker_memory_gib * LAMBDA_CENTS_PER_GIB_S)
+
+    def optimal_fleet(self, nbytes: int, *, latency_budget_s: float,
+                      max_workers: int,
+                      bandwidth_bytes_per_s: float = 90e6,
+                      fixed_s: float = 0.05,
+                      memory_fill_fraction: float = 0.5) -> int:
+        """Dollar-minimal fleet size subject to a latency budget.
+
+        ``fleet_cost_cents`` is strictly increasing and
+        ``fleet_latency_s`` strictly decreasing in the worker count, so
+        the cost-optimal feasible fleet is the *smallest* one whose
+        projected latency fits the budget — computed in closed form —
+        with two floors: every worker's input share must fit the
+        function's memory budget, and the fleet never exceeds
+        ``max_workers`` (quota / partition granularity); if the budget
+        is unreachable even at ``max_workers``, latency wins and the cap
+        is returned.
+        """
+        max_workers = max(1, max_workers)
+        span = latency_budget_s - fixed_s
+        if span <= 0:
+            w = max_workers
+        else:
+            w = math.ceil(nbytes / (span * bandwidth_bytes_per_s))
+        mem_budget = self.worker_memory_gib * 2**30 * memory_fill_fraction
+        w = max(w, math.ceil(nbytes / max(mem_budget, 1)), 1)
+        return min(w, max_workers)

@@ -43,6 +43,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.adaptive import Reoptimizer, apply_broadcast
 from repro.core.cost import CostBreakdown, CostModel
 from repro.core.events import QueryObserver
 from repro.core.platform import (AdmissionController, FaasPlatform,
@@ -50,6 +51,7 @@ from repro.core.platform import (AdmissionController, FaasPlatform,
 from repro.core.registry import ResultRegistry
 from repro.core.worker import make_worker_handler
 from repro.data.catalog import Catalog
+from repro.exec.operators import kmv_estimate, kmv_merge
 from repro.sql.logical import Binder
 from repro.sql.parser import parse
 from repro.sql.physical import (PhysicalPlan, Pipeline, PlannerConfig,
@@ -73,7 +75,7 @@ class QueryCancelled(RuntimeError):
 class PipelineReport:
     pid: int
     sem_hash: str
-    n_fragments: int
+    n_fragments: int               # fragments actually invoked
     cache_hit: bool = False
     deduped: bool = False    # in-flight dedup: shared a peer's execution
     attempts: int = 0
@@ -89,6 +91,14 @@ class PipelineReport:
     kernel: str = ""               # fused kernel the plan lowers to
     kernel_fragments: int = 0      # fragments that ran on the fused path
     footer_cache_hits: int = 0
+    # adaptive re-optimization (core.adaptive): the static plan's fleet,
+    # the planner's row estimate (EXPLAIN ANALYZE est vs actual), the
+    # barrier decisions applied, and the per-partition output manifest
+    # accumulated from worker responses
+    n_planned: int = 0
+    est_rows: int = -1
+    adaptations: list = dataclasses.field(default_factory=list)
+    partition_stats: list | None = None
 
 
 @dataclasses.dataclass
@@ -134,6 +144,14 @@ class CoordinatorConfig:
     two_level_threshold: int = 16
     response_poll_overhead_s: float = 0.01
     use_result_cache: bool = True
+    # Adaptive re-optimization at stage barriers (core.adaptive): re-size
+    # downstream fleets cost-optimally under the latency budget, prune
+    # empty exchange partitions, downgrade shuffle joins to broadcast
+    # when the observed build side fits the memory budget (None → the
+    # planner's broadcast threshold), and re-pick exchange tiers.
+    adaptive: bool = True
+    adaptive_latency_budget_s: float = 2.0
+    broadcast_downgrade_bytes: int | None = None
 
 
 class QueryEngine:
@@ -152,7 +170,8 @@ class QueryEngine:
                  handler=None,
                  observer: QueryObserver | None = None,
                  query_id: str = "query",
-                 cancel_check: Callable[[], None] | None = None):
+                 cancel_check: Callable[[], None] | None = None,
+                 priority: int = 0):
         self.store = store
         self.catalog = catalog
         self.platform = platform or FaasPlatform()
@@ -162,8 +181,19 @@ class QueryEngine:
         self.handler = handler or make_worker_handler(store)
         self.observer = observer or QueryObserver()
         self.query_id = query_id
+        self.priority = priority
         self._cancel_check = cancel_check
         self.admission: AdmissionController = self.platform.admission
+        cfg = self.config
+        self.reoptimizer = Reoptimizer(
+            self.cost_model,
+            latency_budget_s=cfg.adaptive_latency_budget_s,
+            broadcast_bytes=(cfg.broadcast_downgrade_bytes
+                             if cfg.broadcast_downgrade_bytes is not None
+                             else cfg.planner.broadcast_threshold_bytes),
+            hot_shuffle_object_threshold=(
+                cfg.planner.hot_shuffle_object_threshold),
+            quota=self.admission.quota)
         # fragments of one pipeline report concurrently
         self._metrics_lock = threading.Lock()
 
@@ -218,7 +248,9 @@ class QueryEngine:
 
     def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
         report = PipelineReport(p.pid, p.sem_hash, p.n_fragments,
-                                kernel=p.kernel or "")
+                                kernel=p.kernel or "",
+                                n_planned=p.n_fragments,
+                                est_rows=p.params.est_out_rows)
         claimed = False
         if self.config.use_result_cache:
             # claim/publish/await_complete: exactly one of N concurrent
@@ -251,13 +283,32 @@ class QueryEngine:
 
     def _execute_pipeline(self, p: Pipeline, stats: QueryStats,
                           report: PipelineReport) -> PipelineReport:
-        self.observer.on_pipeline_start(self.query_id, p.pid, p.sem_hash,
-                                        p.n_fragments)
-
         prefix = f"results/{p.sem_hash}"
         sources = self._resolve_sources(p.op)
+
+        # Barrier hook: every physical decision downstream of this
+        # barrier is re-evaluated against the observed statistics the
+        # upstream manifests carry (fleet size, partition assignment,
+        # join strategy, exchange tier). Mutates p.params only — the
+        # semantic hash, and thus caching/dedup, is unaffected.
+        if self.config.adaptive:
+            adaptations = self.reoptimizer.adapt(p, sources)
+            if adaptations:
+                report.adaptations = adaptations
+                report.n_fragments = p.n_fragments
+                for a in adaptations:
+                    self.observer.on_adaptation(self.query_id, p.pid, a)
+
+        self.observer.on_pipeline_start(self.query_id, p.pid, p.sem_hash,
+                                        p.n_fragments)
+        # broadcast-downgraded sources rewrite the op tree on one copy
+        # (the pipeline's logical core stays untouched); the resulting
+        # join probe runs on the generic jnp fallback of the kernel
+        # dispatch layer
+        eff_op = apply_broadcast(p.op, p.params.broadcast_sources)
         specs = {
-            f: self._fragment_spec(p, f, p.n_fragments, prefix, sources)
+            f: self._fragment_spec(p, f, p.n_fragments, prefix, sources,
+                                   eff_op)
             for f in range(p.n_fragments)
         }
 
@@ -274,7 +325,7 @@ class QueryEngine:
         # granularity. ``completions`` holds per-fragment *runtimes*.
         results = self.platform.invoke_many(
             self.handler, list(specs.values()), pipeline=p.pid,
-            cancel_check=self._check_cancel,
+            cancel_check=self._check_cancel, priority=self.priority,
             run=lambda spec: self._run_fragment(p, spec, report, stats,
                                                 extra_fragments))
         completions: dict[int, float] = {
@@ -295,7 +346,7 @@ class QueryEngine:
             for f, t in list(completions.items()):
                 if t > threshold:
                     self.observer.on_straggler(self.query_id, p.pid, f)
-                    self.admission.acquire(1)
+                    self.admission.acquire(1, priority=self.priority)
                     try:
                         # the duplicate's rows/bytes repeat the original
                         # worker's output — bill its cost, don't
@@ -318,9 +369,24 @@ class QueryEngine:
         self.registry.publish(
             p.sem_hash, prefix=prefix, n_fragments=n_total,
             partitioning=p.partitioning.to_dict(), schema=p.output_schema,
-            stats={"rows_out": report.rows_out})
+            stats=self._manifest_stats(report))
         self.observer.on_pipeline_complete(self.query_id, report)
         return report
+
+    def _manifest_stats(self, report: PipelineReport) -> dict:
+        """The exchange-manifest statistics published with a pipeline's
+        registry entry: totals plus the per-partition (rows, bytes,
+        distinct-key estimate) observations the adaptive re-optimizer
+        feeds on at the next stage barrier."""
+        stats = {"rows_out": report.rows_out,
+                 "bytes_out": report.bytes_written}
+        ps = report.partition_stats
+        if ps is not None:
+            stats["partition_rows"] = [s["rows"] for s in ps]
+            stats["partition_bytes"] = [s["bytes"] for s in ps]
+            stats["partition_distinct"] = [kmv_estimate(s["kmv"])
+                                           for s in ps]
+        return stats
 
     def _sim_makespan(self, runtimes: list[float]) -> float:
         """Simulated completion of a fleet under per-slot admission:
@@ -423,9 +489,27 @@ class QueryEngine:
                         "footer_cache_hits", 0)
                     if s.get("kernel"):
                         report.kernel_fragments += 1
+                    self._merge_partition_stats(
+                        report, res.payload.get("partition_stats"))
             stats.cost.merge(
                 self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
         return res
+
+    def _merge_partition_stats(self, report: PipelineReport,
+                               ps: list | None) -> None:
+        """Fold one worker's per-destination stats into the pipeline's
+        manifest accumulator (caller holds the metrics lock)."""
+        if not ps:
+            return
+        if report.partition_stats is None:
+            report.partition_stats = [
+                {"rows": 0, "bytes": 0, "kmv": []} for _ in ps]
+        if len(ps) != len(report.partition_stats):  # defensive
+            return
+        for acc, s in zip(report.partition_stats, ps):
+            acc["rows"] += s["rows"]
+            acc["bytes"] += s["bytes"]
+            acc["kmv"] = kmv_merge([acc["kmv"], s["kmv"]])
 
     # -- plumbing -------------------------------------------------------------
     def _resolve_sources(self, op: dict) -> dict:
@@ -446,31 +530,40 @@ class QueryEngine:
         return sources
 
     def _fragment_spec(self, p: Pipeline, f: int, n: int, prefix: str,
-                       sources: dict) -> dict:
-        return {
+                       sources: dict, op: dict | None = None) -> dict:
+        spec = {
             "query_id": p.sem_hash,
             "pipeline": p.pid,
             "fragment": f,
             "n_fragments": n,
-            "op": p.op,
+            "op": op if op is not None else p.op,
             "scan_units": p.scan_units[f::n],
             "output": {"prefix": prefix,
                        "partitioning": p.partitioning.to_dict(),
                        "schema": p.output_schema},
             "sources": sources,
         }
+        if p.params.partition_assignment is not None:
+            spec["read_partitions"] = p.params.partition_assignment[f]
+        if p.params.source_partitions:
+            spec["source_partitions"] = dict(p.params.source_partitions)
+        return spec
+
+
+def _op_kinds(op: dict) -> list[str]:
+    kinds = [op["t"]]
+    for k in ("child", "probe", "build"):
+        if k in op:
+            kinds.extend(_op_kinds(op[k]))
+    return kinds
+
+
+def _rows(n: int) -> str:
+    return "?" if n < 0 else str(n)
 
 
 def explain_plan(plan: PhysicalPlan) -> str:
     """Human-readable physical plan: stages, pipelines, fragment fleets."""
-
-    def op_kinds(op: dict) -> list[str]:
-        kinds = [op["t"]]
-        for k in ("child", "probe", "build"):
-            if k in op:
-                kinds.extend(op_kinds(op[k]))
-        return kinds
-
     lines = [f"physical plan · {len(plan.pipelines)} pipelines · "
              f"output {plan.output_names}"]
     for si, stage in enumerate(plan.stages()):
@@ -485,6 +578,62 @@ def explain_plan(plan: PhysicalPlan) -> str:
             lines.append(
                 f"  pipeline {pid}{role} · sem={p.sem_hash[:10]} · "
                 f"{p.n_fragments} workers · "
-                f"in≈{p.input_bytes / 1e6:.1f}MB · out={dest}{kern}")
-            lines.append("    ops: " + " → ".join(op_kinds(p.op)[::-1]))
+                f"in≈{p.input_bytes / 1e6:.1f}MB · "
+                f"rows≈{_rows(p.params.est_out_rows)} · "
+                f"out={dest}{kern}")
+            lines.append("    ops: " + " → ".join(_op_kinds(p.op)[::-1]))
+    return "\n".join(lines)
+
+
+def _describe_adaptation(a: dict) -> str:
+    kind = a.get("kind", "?")
+    if kind == "fleet_resize":
+        return (f"fleet_resize {a['from']}→{a['to']} workers "
+                f"(observed {a['observed_bytes'] / 1e6:.2f}MB)")
+    if kind == "broadcast_downgrade":
+        return (f"broadcast_downgrade build={a['source'][:10]} "
+                f"({a['observed_bytes'] / 1e6:.2f}MB ≤ "
+                f"{a['budget_bytes'] / 1e6:.2f}MB)")
+    if kind == "partition_prune":
+        return (f"partition_prune {a['pruned']}/{a['of']} empty "
+                f"(source {a['source'][:10]})")
+    if kind == "exchange_retier":
+        return f"exchange_retier {a['from']}→{a['to']}"
+    return str(a)
+
+
+def explain_analyze(plan: PhysicalPlan, stats: QueryStats) -> str:
+    """EXPLAIN ANALYZE: the physical plan annotated with observed
+    execution — est vs actual rows per pipeline, planned vs invoked
+    fleets, and every barrier adaptation applied."""
+    reports = {r.pid: r for r in stats.pipelines}
+    lines = [f"explain analyze · {len(plan.pipelines)} pipelines · "
+             f"sim {stats.sim_latency_s:.3f}s · "
+             f"cost {stats.cost.total_cents:.4f}¢"]
+    for si, stage in enumerate(plan.stages()):
+        lines.append(f"stage {si}:")
+        for pid in stage:
+            p = plan.pipelines[pid]
+            r = reports.get(pid)
+            role = " (root)" if pid == plan.root_pid else ""
+            if r is None:
+                lines.append(f"  pipeline {pid}{role} · not executed")
+                continue
+            if r.cache_hit:
+                tag = "dedup (shared in-flight execution)" if r.deduped \
+                    else "cache hit"
+                lines.append(
+                    f"  pipeline {pid}{role} · {tag} · "
+                    f"rows est≈{_rows(r.est_rows)}")
+                continue
+            workers = (f"{r.n_planned}→{r.n_fragments}"
+                       if r.n_fragments != r.n_planned
+                       else f"{r.n_fragments}")
+            lines.append(
+                f"  pipeline {pid}{role} · workers {workers} · "
+                f"rows est≈{_rows(r.est_rows)} actual={r.rows_out} · "
+                f"{r.requests} reqs · sim {r.sim_s:.3f}s")
+            lines.append("    ops: " + " → ".join(_op_kinds(p.op)[::-1]))
+            for a in r.adaptations:
+                lines.append("    adapted: " + _describe_adaptation(a))
     return "\n".join(lines)

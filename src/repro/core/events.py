@@ -36,6 +36,12 @@ class QueryObserver:
                  attempt: int) -> None:
         """A failed fragment is being retried (transient failure)."""
 
+    def on_adaptation(self, query_id: str, pid: int,
+                      adaptation: dict) -> None:
+        """A barrier re-optimization was applied to a pipeline before
+        launch (fleet_resize / partition_prune / broadcast_downgrade /
+        exchange_retier — see ``repro.core.adaptive``)."""
+
 
 class ObserverMux(QueryObserver):
     """Fans events out to many observers; isolates their failures."""
@@ -68,6 +74,9 @@ class ObserverMux(QueryObserver):
 
     def on_retry(self, query_id, pid, fragment, attempt):
         self._emit("on_retry", query_id, pid, fragment, attempt)
+
+    def on_adaptation(self, query_id, pid, adaptation):
+        self._emit("on_adaptation", query_id, pid, adaptation)
 
 
 class ConsoleObserver(QueryObserver):
@@ -103,3 +112,7 @@ class ConsoleObserver(QueryObserver):
     def on_retry(self, query_id, pid, fragment, attempt):
         self._p(f"[{query_id}] retry: pipeline {pid} fragment {fragment} "
                 f"attempt {attempt}")
+
+    def on_adaptation(self, query_id, pid, adaptation):
+        self._p(f"[{query_id}] adapt: pipeline {pid} "
+                f"{adaptation.get('kind')} {adaptation}")

@@ -24,14 +24,31 @@ path over the quota (list-scheduling makespan, see
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable
 
 import numpy as np
 
 from repro.core.cost import LAMBDA_COLD_START, LAMBDA_WARM_START
+
+# Starvation-avoidance aging: a waiter's effective priority gains one
+# level per interval spent waiting, so a steady stream of high-priority
+# work can delay low-priority queries but never starve them.
+AGING_INTERVAL_S = 5.0
+
+
+@dataclasses.dataclass
+class _Waiter:
+    priority: int
+    enqueued: float
+    seq: int
+
+    def effective(self, now: float, aging_s: float) -> float:
+        return self.priority + (now - self.enqueued) / max(aging_s, 1e-9)
 
 
 class AdmissionController:
@@ -43,16 +60,26 @@ class AdmissionController:
     section 2.1). ``acquire`` blocks until at least one slot is free and
     grants up to ``want`` slots; callers release after the wave returns.
 
+    Freed slots go to the *highest-priority* waiter rather than FIFO:
+    waiters carry the owning query's ``priority``, aged upward by
+    ``aging_interval_s`` spent waiting (starvation avoidance); ties
+    break in arrival order, so equal-priority traffic — the default —
+    keeps the original FIFO behavior.
+
     ``max_in_flight`` is the observed high-water mark (test/ops signal
     that the quota was never exceeded).
     """
 
-    def __init__(self, quota: int):
+    def __init__(self, quota: int, *,
+                 aging_interval_s: float = AGING_INTERVAL_S):
         if quota < 1:
             raise ValueError(f"concurrency quota must be >= 1, got {quota}")
         self.quota = quota
+        self.aging_interval_s = aging_interval_s
         self._cv = threading.Condition()
         self._in_flight = 0
+        self._waiters: list[_Waiter] = []
+        self._seq = itertools.count()
         self.max_in_flight = 0
 
     @property
@@ -60,16 +87,40 @@ class AdmissionController:
         with self._cv:
             return self._in_flight
 
-    def acquire(self, want: int) -> int:
-        """Block until slots are free; grant ``min(want, available)``."""
+    def _is_best(self, w: _Waiter, now: float) -> bool:
+        we = w.effective(now, self.aging_interval_s)
+        for o in self._waiters:
+            if o is w:
+                continue
+            oe = o.effective(now, self.aging_interval_s)
+            if oe > we or (oe == we and o.seq < w.seq):
+                return False
+        return True
+
+    def acquire(self, want: int, priority: int = 0) -> int:
+        """Block until slots are free *and* this caller is the
+        best-priority waiter; grant ``min(want, available)``."""
         if want <= 0:
             return 0
         with self._cv:
-            while self.quota - self._in_flight <= 0:
-                self._cv.wait()
+            w = _Waiter(priority, time.monotonic(), next(self._seq))
+            self._waiters.append(w)
+            try:
+                while True:
+                    now = time.monotonic()
+                    if self.quota - self._in_flight > 0 \
+                            and self._is_best(w, now):
+                        break
+                    # bounded wait: aging can promote a waiter past its
+                    # peers even without a release notification
+                    self._cv.wait(timeout=self.aging_interval_s / 2)
+            finally:
+                self._waiters.remove(w)
             grant = min(want, self.quota - self._in_flight)
             self._in_flight += grant
             self.max_in_flight = max(self.max_in_flight, self._in_flight)
+            # remaining capacity may serve the next-best waiter
+            self._cv.notify_all()
             return grant
 
     def release(self, n: int) -> None:
@@ -226,6 +277,7 @@ class FaasPlatform:
                     specs: list[dict], *, pipeline: int, attempt: int = 0,
                     cancel_check: Callable[[], None] | None = None,
                     run: Callable[[dict], InvocationResult] | None = None,
+                    priority: int = 0,
                     ) -> list[InvocationResult]:
         """Run a fleet of fragments concurrently in wall-clock.
 
@@ -252,7 +304,7 @@ class FaasPlatform:
             for spec in specs:
                 if cancel_check is not None:
                     cancel_check()
-                self.admission.acquire(1)
+                self.admission.acquire(1, priority=priority)
                 try:
                     fut = self.executor.submit(self._run_slot, run, spec)
                 except BaseException:

@@ -27,6 +27,10 @@ def make_worker_handler(store: ObjectStore,
         response = {
             "fragment": payload["fragment"],
             "output_keys": result.output_keys,
+            # per-destination (rows, bytes, distinct-key sketch) — the
+            # exchange-manifest statistics the adaptive re-optimizer
+            # consumes at the next stage barrier
+            "partition_stats": result.partition_stats,
             "stats": {
                 "rows_in": stats.rows_in,
                 "rows_out": stats.rows_out,

@@ -24,6 +24,12 @@ class TableMeta:
     files: list[str]
     rows: int
     total_bytes: int
+    # Per-column (min, max) zone-map hints for num/dict columns, rolled up
+    # from the partition-file zone maps at generation time. Optional: the
+    # planner's selectivity estimator falls back to its constant guess for
+    # columns (or whole catalogs) without hints.
+    column_stats: dict[str, tuple[float, float]] = \
+        dataclasses.field(default_factory=dict)
 
     def spec(self, column: str) -> ColumnSpec:
         for c in self.schema:
@@ -33,6 +39,11 @@ class TableMeta:
 
     def has_column(self, column: str) -> bool:
         return any(c.name == column for c in self.schema)
+
+    def column_range(self, column: str) -> tuple[float, float] | None:
+        """(min, max) hint for a column, or None when unknown."""
+        r = self.column_stats.get(column)
+        return (r[0], r[1]) if r is not None else None
 
 
 @dataclasses.dataclass
@@ -69,6 +80,8 @@ class Catalog:
                     "files": t.files,
                     "rows": t.rows,
                     "total_bytes": t.total_bytes,
+                    "column_stats": {c: [v[0], v[1]]
+                                     for c, v in t.column_stats.items()},
                 } for name, t in self.tables.items()
             }
         })
@@ -82,7 +95,9 @@ class Catalog:
                                  tuple(c["dict"]) if c["dict"] else None)
                       for c in t["schema"]]
             cat.add(TableMeta(name, schema, list(t["files"]), t["rows"],
-                              t["total_bytes"]))
+                              t["total_bytes"],
+                              {c: (v[0], v[1]) for c, v in
+                               (t.get("column_stats") or {}).items()}))
         return cat
 
     def save(self, store: ObjectStore, key: str) -> None:

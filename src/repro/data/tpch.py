@@ -312,12 +312,27 @@ def generate_tpch(store: ObjectStore, sf: float = 0.01, *,
         n_parts = max(1, int(np.ceil(_orders_count(sf) / 250_000)))
 
     catalog = Catalog()
+    col_stats: dict[str, dict[str, tuple[float, float]]] = {}
+
+    def _roll_stats(table: str, columns: dict[str, np.ndarray]) -> None:
+        # per-column (min, max) zone-map hints for the planner's
+        # selectivity estimator (num/dict columns only)
+        stats = col_stats.setdefault(table, {})
+        for c in SCHEMAS[table]:
+            if c.kind not in ("num", "dict") or not len(columns[c.name]):
+                continue
+            lo = columns[c.name].min().item()
+            hi = columns[c.name].max().item()
+            if c.name in stats:
+                lo, hi = min(lo, stats[c.name][0]), max(hi, stats[c.name][1])
+            stats[c.name] = (lo, hi)
 
     def _write(table: str, columns: dict[str, np.ndarray],
                part: int) -> tuple[str, int, int]:
         key = f"{prefix}/{table}/part-{part:05d}.spax"
         data = write_pax(columns, SCHEMAS[table], row_group_rows)
         store.put(key, data)
+        _roll_stats(table, columns)
         return key, len(next(iter(columns.values()))), len(data)
 
     acc: dict[str, tuple[list[str], int, int]] = {
@@ -331,7 +346,8 @@ def generate_tpch(store: ObjectStore, sf: float = 0.01, *,
             acc[table] = (files, r + rows, b + nbytes)
     for table in ("orders", "lineitem"):
         files, rows, nbytes = acc[table]
-        catalog.add(TableMeta(table, SCHEMAS[table], files, rows, nbytes))
+        catalog.add(TableMeta(table, SCHEMAS[table], files, rows, nbytes,
+                              col_stats.get(table, {})))
 
     singles = {
         "customer": gen_customer(sf, seed), "part": gen_part(sf, seed),
@@ -341,7 +357,8 @@ def generate_tpch(store: ObjectStore, sf: float = 0.01, *,
     }
     for table, columns in singles.items():
         key, rows, nbytes = _write(table, columns, 0)
-        catalog.add(TableMeta(table, SCHEMAS[table], [key], rows, nbytes))
+        catalog.add(TableMeta(table, SCHEMAS[table], [key], rows, nbytes,
+                              col_stats.get(table, {})))
 
     catalog.save(store, f"{prefix}/catalog")
     return catalog

@@ -63,6 +63,10 @@ class FragmentStats:
 class FragmentResult:
     output_keys: list[str]
     stats: FragmentStats
+    # Per-destination output statistics (rows, bytes, distinct-key KMV
+    # sketch) — the worker's contribution to the exchange manifest that
+    # the adaptive re-optimizer consumes at the next stage barrier.
+    partition_stats: list[dict] = dataclasses.field(default_factory=list)
 
 
 # -- jit program construction ---------------------------------------------------
@@ -188,11 +192,10 @@ def _load_scan_table(handler: InputHandler, spec: dict, leaf_op: dict,
                      stats: FragmentStats) -> dict[str, np.ndarray]:
     preds = [pax.ZonePredicate(c, o, tuple(v) if isinstance(v, list) else v)
              for c, o, v in leaf_op["zone_preds"]]
-    parts = []
-    for key in spec["scan_units"]:
-        cols, _, st = handler.read_table(key, leaf_op["columns"], preds)
-        stats.account("table", st, write=False)
-        parts.append(cols)
+    # one batched read: all scan units share the worker's request pool
+    parts, st = handler.read_tables(spec["scan_units"],
+                                    leaf_op["columns"], preds)
+    stats.account("table", st, write=False)
     if not parts:
         return {c: np.empty((0,), np.int64) for c in leaf_op["columns"]}
     return {c: np.concatenate([p[c] for p in parts])
@@ -206,10 +209,22 @@ def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
     tier = part.get("tier", "s3-standard")
     handler = handler_for(tier)
     me, F = spec["fragment"], spec["n_fragments"]
+    # Adaptive re-optimization hooks (core.adaptive): ``read_partitions``
+    # is this fragment's explicit upstream-partition assignment (fleet
+    # re-sizing coarsens the 1:1 fragment↔partition map); per-source
+    # ``source_partitions`` lists the provably non-empty partitions, so
+    # empty ones are pruned from the read set entirely.
+    assigned = spec.get("read_partitions")
+    nonempty = (spec.get("source_partitions") or {}).get(leaf_op["source"])
     keys: list[str] = []
     local_filter = False
     if leaf_op["mode"] == "partition" and part["kind"] == "hash":
-        if part["n_dest"] == F:
+        if assigned is not None:
+            ds = [d for d in assigned
+                  if nonempty is None or d in nonempty]
+            keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
+                    for g in range(src["n_fragments"]) for d in ds]
+        elif part["n_dest"] == F:
             keys = [f"{src['prefix']}/f{g:04d}/d{me:04d}.spax"
                     for g in range(src["n_fragments"])]
         else:
@@ -221,22 +236,22 @@ def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
                     for d in range(part["n_dest"])]
     else:  # mode == all
         if part["kind"] == "hash":
+            ds = [d for d in range(part["n_dest"])
+                  if nonempty is None or d in nonempty]
             keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
-                    for g in range(src["n_fragments"])
-                    for d in range(part["n_dest"])]
+                    for g in range(src["n_fragments"]) for d in ds]
         else:
             keys = [f"{src['prefix']}/f{g:04d}/out.spax"
                     for g in range(src["n_fragments"])]
     names = [c["name"] for c in src["schema"]]
-    parts = []
-    for key in keys:
-        # read_table consults the shared footer cache and skips every
-        # chunk request when the footer says the partition is empty — a
-        # wide exchange's (source fragment × dest) grid of mostly-empty
-        # objects costs one footer parse per object, not F re-reads
-        cols, _, st = handler.read_table(key, names)
-        stats.account(tier, st, write=False)
-        parts.append(cols)
+    # One batched read over the whole producer × partition grid: the
+    # shared footer cache still skips every chunk request of provably
+    # empty partitions, and all objects' requests share one request-pool
+    # makespan — a small (cost-optimally shrunk) fleet fetches many
+    # partitions concurrently instead of paying per-object first-byte
+    # latency serially.
+    parts, st = handler.read_tables(keys, names)
+    stats.account(tier, st, write=False)
     out = {c: np.concatenate([p[c] for p in parts]) if parts
            else np.empty((0,), np.dtype(s["dtype"]))
            for c, s in zip(names, src["schema"])}
@@ -315,12 +330,14 @@ def execute_fragment(store: ObjectStore, spec: dict,
     prefix = spec["output"]["prefix"]
     me = spec["fragment"]
     out_keys = []
+    part_stats: list[dict] = []
     n_out = len(next(iter(result.values()))) if result else 0
     stats.rows_out = n_out
     if part["kind"] == "hash":
         tier = part.get("tier", "s3-standard")
         out = OutputHandler(store.with_tier(tier))
-        dest = ops.np_hash_dest(result, list(part["keys"]), part["n_dest"])
+        h = ops.np_key_hash(result, list(part["keys"]))
+        dest = (h % np.uint64(part["n_dest"])).astype(np.int32)
         for d in range(part["n_dest"]):
             sel = dest == d
             out.append({c: v[sel] for c, v in result.items()})
@@ -328,6 +345,8 @@ def execute_fragment(store: ObjectStore, spec: dict,
             st = out.finish(key, schema)
             stats.account(tier, st, write=True)
             out_keys.append(key)
+            part_stats.append({"rows": int(sel.sum()), "bytes": st.bytes,
+                               "kmv": ops.kmv_sketch(h[sel])})
     else:
         out = OutputHandler(store)
         out.append(result)
@@ -335,4 +354,5 @@ def execute_fragment(store: ObjectStore, spec: dict,
         st = out.finish(key, schema)
         stats.account("table", st, write=True)
         out_keys.append(key)
-    return FragmentResult(out_keys, stats)
+        part_stats.append({"rows": n_out, "bytes": st.bytes, "kmv": []})
+    return FragmentResult(out_keys, stats, part_stats)

@@ -266,7 +266,49 @@ def make_hash_partitioner(key_cols: list[str], n_dest: int):
     return op
 
 
+def np_key_hash(columns: dict[str, np.ndarray],
+                key_cols: list[str]) -> np.ndarray:
+    """Combined uint64 key hash — shared by destination routing and the
+    per-partition distinct-key sketches workers emit for the adaptive
+    re-optimizer."""
+    return combine_hash_np([columns[c] for c in key_cols])
+
+
 def np_hash_dest(columns: dict[str, np.ndarray], key_cols: list[str],
                  n_dest: int) -> np.ndarray:
-    h = combine_hash_np([columns[c] for c in key_cols])
+    h = np_key_hash(columns, key_cols)
     return (h % np.uint64(n_dest)).astype(np.int32)
+
+
+# -- distinct-key sketches (KMV) -------------------------------------------------
+
+KMV_K = 32
+
+
+def kmv_sketch(hashes: np.ndarray, k: int = KMV_K) -> list[int]:
+    """K-minimum-values sketch of a uint64 hash column: the ``k``
+    smallest *distinct* hash values. Tiny, mergeable, and order-free —
+    workers attach one per output partition so the coordinator can
+    estimate distinct join/group keys without a second pass."""
+    if hashes.size == 0:
+        return []
+    u = np.unique(hashes)
+    return [int(x) for x in u[:k]]
+
+
+def kmv_merge(sketches: list[list[int]], k: int = KMV_K) -> list[int]:
+    """Union of per-worker sketches (min-k of the combined value set)."""
+    all_vals = [v for s in sketches for v in s]
+    if not all_vals:
+        return []
+    u = np.unique(np.array(all_vals, dtype=np.uint64))
+    return [int(x) for x in u[:k]]
+
+
+def kmv_estimate(sketch: list[int], k: int = KMV_K) -> int:
+    """Distinct-count estimate: exact below ``k`` values, else the
+    classic (k-1) / kth-minimum fraction of the uint64 hash space."""
+    if len(sketch) < k:
+        return len(sketch)
+    kth = max(sketch[k - 1], 1)
+    return int((k - 1) * (2.0 ** 64) / kth)

@@ -8,6 +8,7 @@ concurrently against that shared infrastructure.
   PYTHONPATH=src python -m repro.launch.sql --sf 0.05 --query q12
   PYTHONPATH=src python -m repro.launch.sql --query q1,q6,q12   # concurrent
   PYTHONPATH=src python -m repro.launch.sql --query q3 --explain
+  PYTHONPATH=src python -m repro.launch.sql --query q12 --analyze
   PYTHONPATH=src python -m repro.launch.sql --sf 0.01 \
       --sql "select count(*) as n from lineitem where l_quantity < 10"
 """
@@ -23,11 +24,13 @@ from repro.sql.physical import PlannerConfig
 from repro.sql.queries import QUERIES
 
 
-def _print_result(session, handle) -> None:
+def _print_result(session, handle, analyze: bool = False) -> None:
     res = handle.result()
     cols = res.fetch(session.store)
     s = res.stats
 
+    if analyze:
+        print(f"\n[{handle.query_id}] {handle.explain_analyze()}")
     print(f"\n[{handle.query_id}] result @ {res.locations}")
     names = [n for n in res.output_names if n in cols]
     print(" | ".join(f"{n:>16s}" for n in names))
@@ -38,10 +41,12 @@ def _print_result(session, handle) -> None:
                          else f"{cols[n][i]:>16}" for n in names))
     if n_rows > 20:
         print(f"… {n_rows - 20} more rows")
+    n_adapt = sum(len(p.adaptations) for p in s.pipelines)
     print(f"[{handle.query_id}] sim latency {s.sim_latency_s:.2f}s · wall "
           f"{s.wall_s:.2f}s · cost {s.cost.total_cents:.4f}¢ · "
           f"workers {sum(p.n_fragments for p in s.pipelines)} · "
-          f"cache hits {s.cache_hits}/{len(s.pipelines)}")
+          f"cache hits {s.cache_hits}/{len(s.pipelines)} · "
+          f"adaptations {n_adapt}")
 
 
 def main() -> None:
@@ -59,13 +64,20 @@ def main() -> None:
                     help="shared function-concurrency quota")
     ap.add_argument("--explain", action="store_true",
                     help="print physical plans without executing")
+    ap.add_argument("--analyze", action="store_true",
+                    help="EXPLAIN ANALYZE: execute, then print est vs "
+                         "actual rows and barrier adaptations")
+    ap.add_argument("--static", action="store_true",
+                    help="disable adaptive re-optimization at stage "
+                         "barriers (compile-time plan runs as-is)")
     ap.add_argument("--verbose", action="store_true",
                     help="trace pipeline/straggler/retry events")
     args = ap.parse_args()
 
     cfg = CoordinatorConfig(
         planner=PlannerConfig(bytes_per_worker=512 << 10),
-        use_result_cache=not args.no_cache)
+        use_result_cache=not args.no_cache,
+        adaptive=not args.static)
     if args.sql:
         statements = [args.sql]
     else:
@@ -94,7 +106,7 @@ def main() -> None:
     with session:
         handles = [session.submit(stmt) for stmt in statements]
         for handle in handles:
-            _print_result(session, handle)
+            _print_result(session, handle, analyze=args.analyze)
         if len(handles) > 1:
             st = session.stats()
             print(f"\n[sql] session: {st['queries_submitted']} queries · "

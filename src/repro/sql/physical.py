@@ -26,6 +26,8 @@ import dataclasses
 import hashlib
 from typing import Any
 
+import numpy as np
+
 from repro.data.catalog import Catalog
 from repro.exec.expr import expr_from_dict, expr_to_dict
 from repro.sql import ast
@@ -67,22 +69,72 @@ class Partitioning:
 
 
 @dataclasses.dataclass
+class ExecutionParams:
+    """Mutable physical execution properties of one pipeline.
+
+    Everything here may be re-decided *after* planning: the planner
+    writes its compile-time choices and estimates, and the runtime
+    re-optimizer (``repro.core.adaptive``) overwrites them at the stage
+    barrier once upstream pipelines have published observed statistics.
+    The logical content of the owning :class:`Pipeline` (op tree,
+    semantic hash, dependencies, schema) is never touched at runtime —
+    semantic hashing guarantees a re-parameterized pipeline still caches
+    and dedups against its statically planned twin (section 3.4).
+    """
+
+    n_fragments: int
+    partitioning: Partitioning
+    # planner estimates (est vs actual shown by EXPLAIN ANALYZE)
+    est_in_bytes: int = 0
+    est_out_rows: int = -1              # -1 = no basis for an estimate
+    est_out_bytes: int = -1
+    # runtime adaptation state (set by core.adaptive at the barrier):
+    # exchange sources to read broadcast (mode=all) instead of aligned
+    # partitions — the shuffle→broadcast join downgrade
+    broadcast_sources: list[str] = dataclasses.field(default_factory=list)
+    # per-fragment upstream partition ids (shared by every aligned
+    # partition-mode source); None = the static 1:1 fragment↔partition map
+    partition_assignment: list[list[int]] | None = None
+    # per-source surviving (non-empty) partition ids for pruning reads
+    source_partitions: dict[str, list[int]] = \
+        dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
 class Pipeline:
+    """One pipeline: an immutable logical core plus mutable
+    :class:`ExecutionParams`.
+
+    After ``compile_query`` returns, the logical fields (``op``,
+    ``sem_hash``, ``deps``, ``output_schema``, ``scan_units``) are
+    frozen by contract; all runtime adaptation goes through ``params``.
+    """
+
     pid: int
     sem_hash: str
     op: dict                       # serializable operator tree
-    n_fragments: int
     deps: list[int]
-    partitioning: Partitioning
+    params: ExecutionParams
     output_schema: list[dict]      # ColumnSpec dicts
     scan_units: list[str]          # table files (scan pipelines only)
     final: bool = False
-    # estimated input bytes (for elastic worker sizing / cost model)
-    input_bytes: int = 0
     # fused Pallas kernel the fragment hot loop lowers to, or None — the
     # exec.lower pattern match is decided at plan time so EXPLAIN and
     # per-pipeline reports can show the dispatch without executing
     kernel: str | None = None
+
+    # -- convenience views over the mutable params ------------------------
+    @property
+    def n_fragments(self) -> int:
+        return self.params.n_fragments
+
+    @property
+    def partitioning(self) -> Partitioning:
+        return self.params.partitioning
+
+    @property
+    def input_bytes(self) -> int:
+        return self.params.est_in_bytes
 
 
 @dataclasses.dataclass
@@ -132,19 +184,144 @@ class PhysicalPlanner:
         return _h([(t, tuple(self.catalog.table(t).files))
                    for t in tables])
 
-    def _subtree_bytes(self, node: LNode) -> int:
-        """Crude input-size estimate: scanned bytes scaled per filter."""
+    def _est(self, node: LNode) -> tuple[float, float]:
+        """(rows, bytes) output estimate of a logical subtree.
+
+        Replaces the old ``_subtree_bytes`` guess, which ignored
+        ``LJoin.right`` entirely and charged one constant selectivity
+        per filter node: joins now account for both sides (FK→PK match
+        fraction from the build side's own selectivity), and filter
+        selectivity is estimated per conjunct from catalog zone-map
+        hints (numeric min/max ranges, dictionary cardinalities) when
+        available, falling back to ``filter_selectivity_guess``.
+        """
         if isinstance(node, LScan):
             meta = self.catalog.table(node.table)
             frac = len(node.schema_cols) / max(len(meta.schema), 1)
-            return int(meta.total_bytes * frac)
+            return float(meta.rows), meta.total_bytes * frac
         if isinstance(node, LFilter):
-            return int(self._subtree_bytes(node.child)
-                       * self.config.filter_selectivity_guess)
+            r, b = self._est(node.child)
+            sel = self._selectivity(node.pred, node.child)
+            return r * sel, b * sel
+        if isinstance(node, LProject):
+            r, b = self._est(node.child)
+            width = len(node.exprs) / max(
+                len(_columns_of_logical(node.child)), 1)
+            return r, b * min(1.0, width)
         if isinstance(node, LJoin):
-            return self._subtree_bytes(node.left)
-        return sum(self._subtree_bytes(c) for c in node.children()) \
-            if node.children() else 0
+            lr, lb = self._est(node.left)
+            rr, rb = self._est(node.right)
+            base = self._base_rows(node.right)
+            match = min(1.0, rr / base) if base > 0 else 1.0
+            jr = lr * match
+            width = (lb / lr if lr > 0 else 0.0) + \
+                (rb / rr if rr > 0 else 0.0)
+            return jr, jr * width
+        if isinstance(node, LAggregate):
+            r, _ = self._est(node.child)
+            _, sizes = self._agg_strategy(node)
+            if not node.group_cols:
+                k = 1.0
+            elif sizes:
+                k = float(np.prod(sizes))
+            else:
+                k = float(DIRECT_AGG_MAX_GROUPS)
+            rows = min(r, k)
+            width = 8.0 * (len(node.group_cols) + len(node.aggs))
+            return rows, rows * width
+        if isinstance(node, LLimit):
+            r, b = self._est(node.child)
+            per_row = b / r if r > 0 else 0.0
+            rows = min(r, float(node.n))
+            return rows, rows * per_row
+        kids = node.children()
+        if not kids:
+            return 0.0, 0.0
+        ests = [self._est(c) for c in kids]
+        return sum(r for r, _ in ests), sum(b for _, b in ests)
+
+    def _base_rows(self, node: LNode) -> float:
+        """Unfiltered row count of the dominant base relation under
+        ``node`` (the FK→PK match-fraction denominator)."""
+        rows = [self.catalog.table(n.table).rows for n in _walk(node)
+                if isinstance(n, LScan)]
+        return float(max(rows)) if rows else 0.0
+
+    # -- selectivity estimation ------------------------------------------------
+    def _selectivity(self, pred: ast.Expr, child: LNode) -> float:
+        sel = 1.0
+        for c in ast.conjuncts(pred):
+            sel *= self._conjunct_selectivity(c, child)
+        return min(1.0, max(sel, 1e-4))
+
+    def _conjunct_selectivity(self, c: ast.Expr, child: LNode) -> float:
+        guess = self.config.filter_selectivity_guess
+        if isinstance(c, ast.InList) and isinstance(c.term, ast.Col):
+            ct = _column_type(child, c.term.name, self.catalog)
+            if ct is not None and ct[0] == "dict" and ct[2]:
+                return min(1.0, len(c.values) / max(len(ct[2]), 1))
+            return guess
+        if not isinstance(c, ast.Cmp):
+            return guess
+        if isinstance(c.left, ast.Col) and isinstance(c.right, ast.Lit):
+            col, op, v = c.left.name, c.op, c.right.value
+        elif isinstance(c.right, ast.Col) and isinstance(c.left, ast.Lit):
+            flip = {"<": ">", "<=": ">=", ">": "<", ">=": "<=",
+                    "=": "=", "<>": "<>"}
+            col, op, v = c.right.name, flip[c.op], c.left.value
+        else:
+            return guess            # column-column / expression compare
+        if not isinstance(v, (int, float)):
+            return guess
+        hint = self._column_hint(child, col)
+        if hint is None:
+            return guess
+        lo, hi = hint
+        span = float(hi) - float(lo)
+        if span <= 0:               # constant column: predicate is 0/1
+            ops = {"<": v > lo, "<=": v >= lo, ">": v < lo, ">=": v <= lo,
+                   "=": v == lo, "<>": v != lo}
+            return 1.0 if ops[op] else 1e-4
+        eq = 1.0 / (span + 1.0)     # uniform over an integer-ish domain
+        frac = {
+            "<": (v - lo) / span,
+            "<=": (v - lo) / span + eq,
+            ">": (hi - v) / span,
+            ">=": (hi - v) / span + eq,
+            "=": eq,
+            "<>": 1.0 - eq,
+        }[op]
+        return min(1.0, max(frac, 1e-4))
+
+    def _column_hint(self, node: LNode,
+                     col: str) -> tuple[float, float] | None:
+        """(min, max) range hint for a column produced by a subtree:
+        catalog zone-map roll-ups for base columns, dictionary domains
+        for dict columns, None for derived expressions."""
+        if isinstance(node, LScan):
+            meta = self.catalog.table(node.table)
+            if not meta.has_column(col):
+                return None
+            r = meta.column_range(col)
+            if r is not None:
+                return r
+            spec = meta.spec(col)
+            if spec.kind == "dict" and spec.dictionary:
+                return (0.0, float(len(spec.dictionary) - 1))
+            return None
+        if isinstance(node, (LFilter, LSort, LLimit, LAggregate)):
+            return self._column_hint(node.child, col)
+        if isinstance(node, LProject):
+            for n, e in node.exprs:
+                if n == col:
+                    if isinstance(e, ast.Col):
+                        return self._column_hint(node.child, e.name)
+                    return None
+            return None
+        if isinstance(node, LJoin):
+            return self._column_hint(node.left, col) or \
+                self._column_hint(node.right, col)
+        return None
 
     def _workers_for_bytes(self, nbytes: int) -> int:
         c = self.config
@@ -197,12 +374,16 @@ class PhysicalPlanner:
         sem = _h(("stream", sub.key(), self._tables_version(sub)))
         n_frag = min(self._workers_for_bytes(in_bytes),
                      max(len(units), 1)) if units else 1
+        er, eb = self._est(node)
         schema = _output_schema_of(node, self.catalog)
         needs_final = bool(sort_keys) or limit is not None
         pid = self._new_pid()
         self.pipelines[pid] = Pipeline(
-            pid, sem, op, n_frag, deps, Partitioning("none"),
-            schema, units, final=not needs_final, input_bytes=in_bytes)
+            pid, sem, op, deps,
+            ExecutionParams(n_frag, Partitioning("none"),
+                            est_in_bytes=in_bytes, est_out_rows=int(er),
+                            est_out_bytes=int(eb)),
+            schema, units, final=not needs_final)
         if not needs_final:
             return pid
         fsem = _h(("final", sub.key(), sort_keys, limit,
@@ -214,9 +395,12 @@ class PhysicalPlanner:
                "sort_keys": [[k, d] for k, d in sort_keys],
                "limit": limit}
         fpid = self._new_pid()
+        fr = min(er, limit) if limit is not None else er
         self.pipelines[fpid] = Pipeline(
-            fpid, fsem, fop, 1, [pid], Partitioning("none"), schema, [],
-            final=True)
+            fpid, fsem, fop, [pid],
+            ExecutionParams(1, Partitioning("none"),
+                            est_in_bytes=int(eb), est_out_rows=int(fr)),
+            schema, [], final=True)
         return fpid
 
     # -- aggregation queries ----------------------------------------------------
@@ -246,10 +430,17 @@ class PhysicalPlanner:
             "hash", tuple(agg.group_cols), n_dest,
             self._exchange_tier(n_frag, n_dest)) if n_dest > 1 else \
             Partitioning("none")
+        er_child, eb_child = self._est(agg.child)
+        ar, ab = self._est(agg)
+        partial_rows = min(er_child, ar * n_frag)
+        partial_bytes = min(eb_child, ab * n_frag)
         ppid = self._new_pid()
         self.pipelines[ppid] = Pipeline(
-            ppid, partial_sem, partial_op, n_frag, deps, part,
-            partial_schema, units, input_bytes=in_bytes)
+            ppid, partial_sem, partial_op, deps,
+            ExecutionParams(n_frag, part, est_in_bytes=in_bytes,
+                            est_out_rows=int(partial_rows),
+                            est_out_bytes=int(partial_bytes)),
+            partial_schema, units)
 
         merge_aggs = [[name, {"sum": "sum", "count": "sum", "min": "min",
                               "max": "max"}[fn],
@@ -288,9 +479,13 @@ class PhysicalPlanner:
                         "sort_keys": [[k, d] for k, d in sort_keys],
                         "limit": limit}
         mpid = self._new_pid()
+        mr = min(ar, limit) if fold_final and limit is not None else ar
         self.pipelines[mpid] = Pipeline(
-            mpid, merge_sem, merge_op, merge_frags, [ppid],
-            Partitioning("none"), out_schema, [], final=fold_final)
+            mpid, merge_sem, merge_op, [ppid],
+            ExecutionParams(merge_frags, Partitioning("none"),
+                            est_in_bytes=int(partial_bytes),
+                            est_out_rows=int(mr), est_out_bytes=int(ab)),
+            out_schema, [], final=fold_final)
         if fold_final:
             return mpid
 
@@ -304,9 +499,12 @@ class PhysicalPlanner:
                "sort_keys": [[k, d] for k, d in sort_keys],
                "limit": limit}
         fpid = self._new_pid()
+        fr = min(ar, limit) if limit is not None else ar
         self.pipelines[fpid] = Pipeline(
-            fpid, fsem, fop, 1, [mpid], Partitioning("none"), out_schema,
-            [], final=True)
+            fpid, fsem, fop, [mpid],
+            ExecutionParams(1, Partitioning("none"),
+                            est_in_bytes=int(ab), est_out_rows=int(fr)),
+            out_schema, [], final=True)
         return fpid
 
     def _agg_strategy(self, agg: LAggregate):
@@ -353,7 +551,8 @@ class PhysicalPlanner:
 
     def _stream_join(self, node: LJoin):
         probe_op, probe_deps, units, in_bytes, _ = self._stream(node.left)
-        build_bytes = self._subtree_bytes(node.right)
+        prr, prb = self._est(node.left)      # probe exchange payload est
+        brr, brb = self._est(node.right)     # build exchange payload est
         payload = sorted(_columns_of_logical(node.right))
         tv_b = self._tables_version(node.right)
         build_sem = _h(("build", node.right.key(), tv_b))
@@ -363,14 +562,17 @@ class PhysicalPlanner:
         bfrags = min(self._workers_for_bytes(bbytes),
                      max(len(bunits), 1)) if bunits else 1
 
-        if build_bytes <= self.config.broadcast_threshold_bytes:
+        if brb <= self.config.broadcast_threshold_bytes:
             # Broadcast join: build side materializes unpartitioned; every
             # probe fragment reads all of it.
             bpid = self._new_pid()
             self.pipelines[bpid] = Pipeline(
-                bpid, build_sem, bop, bfrags, bdeps,
-                Partitioning("none"), build_schema, bunits,
-                input_bytes=bbytes)
+                bpid, build_sem, bop, bdeps,
+                ExecutionParams(bfrags, Partitioning("none"),
+                                est_in_bytes=bbytes,
+                                est_out_rows=int(brr),
+                                est_out_bytes=int(brb)),
+                build_schema, bunits)
             join_op = {"t": "join",
                        "probe": probe_op,
                        "build": {"t": "scan_exchange", "source": build_sem,
@@ -381,9 +583,11 @@ class PhysicalPlanner:
             return join_op, probe_deps + [bpid], units, in_bytes, node
 
         # Repartition join: both sides exchange on the join key; the join
-        # runs in a new pipeline with one fragment per hash bucket.
+        # runs in a new pipeline with one fragment per hash bucket. The
+        # fan-out is sized from the estimated *exchange payload* (filtered
+        # output), not the scanned input.
         n_dest = self.config.exchange_partitions or \
-            max(1, min(self._workers_for_bytes(in_bytes), 16))
+            max(1, min(self._workers_for_bytes(int(max(prb, brb))), 16))
         probe_sem = _h(("exchange", node.left.key(), node.left_key,
                         self._tables_version(node.left)))
         probe_schema = _output_schema_of(node.left, self.catalog)
@@ -391,16 +595,24 @@ class PhysicalPlanner:
                      max(len(units), 1)) if units else 1
         ppid = self._new_pid()
         self.pipelines[ppid] = Pipeline(
-            ppid, probe_sem, probe_op, pfrags, probe_deps,
-            Partitioning("hash", (node.left_key,), n_dest,
-                         self._exchange_tier(pfrags, n_dest)),
-            probe_schema, units, input_bytes=in_bytes)
+            ppid, probe_sem, probe_op, probe_deps,
+            ExecutionParams(
+                pfrags,
+                Partitioning("hash", (node.left_key,), n_dest,
+                             self._exchange_tier(pfrags, n_dest)),
+                est_in_bytes=in_bytes, est_out_rows=int(prr),
+                est_out_bytes=int(prb)),
+            probe_schema, units)
         bpid = self._new_pid()
         self.pipelines[bpid] = Pipeline(
-            bpid, build_sem, bop, bfrags, bdeps,
-            Partitioning("hash", (node.right_key,), n_dest,
-                         self._exchange_tier(bfrags, n_dest)),
-            build_schema, bunits, input_bytes=bbytes)
+            bpid, build_sem, bop, bdeps,
+            ExecutionParams(
+                bfrags,
+                Partitioning("hash", (node.right_key,), n_dest,
+                             self._exchange_tier(bfrags, n_dest)),
+                est_in_bytes=bbytes, est_out_rows=int(brr),
+                est_out_bytes=int(brb)),
+            build_schema, bunits)
         join_op = {"t": "join",
                    "probe": {"t": "scan_exchange", "source": probe_sem,
                              "mode": "partition"},
@@ -541,5 +753,5 @@ def _fix_join_segments(plan: PhysicalPlan) -> None:
         markers = [d for d in p.deps if isinstance(d, tuple)]
         if markers:
             p.deps = [d for d in p.deps if not isinstance(d, tuple)]
-            p.n_fragments = markers[0][1]
+            p.params.n_fragments = markers[0][1]
             p.scan_units = []

@@ -192,18 +192,48 @@ class InputHandler:
         """
         stats = IoStats()
         lat = _LatencyLog()
+        cols, footer = self._read_object(key, columns, predicates, stats,
+                                         lat)
+        stats.sim_time_s += _pool_makespan(lat, self.pool_size)
+        return cols, footer, stats
+
+    def read_tables(self, keys: Sequence[str],
+                    columns: Sequence[str] | None = None,
+                    predicates: Sequence[pax.ZonePredicate] = (),
+                    ) -> tuple[list[dict[str, np.ndarray]], IoStats]:
+        """Read many PAX objects as *one parallel batch*.
+
+        A worker scanning several scan units — or the full producer ×
+        partition grid of an exchange — issues the requests of all
+        objects through its one bounded request pool, so the batch's
+        simulated time is a single pool makespan over every request
+        rather than a sum of per-object reads. This is what keeps a
+        deliberately small (cost-optimal) adaptive fleet from paying
+        object-count × first-byte-latency serially.
+        """
+        stats = IoStats()
+        lat = _LatencyLog()
+        out = [self._read_object(k, columns, predicates, stats, lat)[0]
+               for k in keys]
+        stats.sim_time_s += _pool_makespan(lat, self.pool_size)
+        return out, stats
+
+    def _read_object(self, key: str, columns, predicates, stats: IoStats,
+                     lat: _LatencyLog,
+                     ) -> tuple[dict[str, np.ndarray], pax.PaxFooter]:
+        """One object's footer + chunk reads, accounted into a shared
+        latency log (the caller turns the log into a pool makespan)."""
         footer = self.read_footer(key, stats, lat)
         names = list(columns) if columns is not None else [
             c.name for c in footer.columns]
         if footer.n_rows == 0:
             # the footer alone proves the partition is empty: skip every
             # chunk request
-            stats.sim_time_s += _pool_makespan(lat, self.pool_size)
             return ({n: np.empty((0,), dtype=footer.spec(n).np_dtype())
-                     for n in names}, footer, stats)
+                     for n in names}, footer)
         keep = pax.surviving_row_groups(footer, predicates)
-        stats.row_groups_read = len(keep)
-        stats.row_groups_pruned = len(footer.row_groups) - len(keep)
+        stats.row_groups_read += len(keep)
+        stats.row_groups_pruned += len(footer.row_groups) - len(keep)
 
         reqs = pax.plan_chunk_requests(footer, names, keep)
         chunks: dict[tuple[int, str], np.ndarray] = {}
@@ -218,7 +248,6 @@ class InputHandler:
                     spec, meta.raw_len,
                     data[m.off - off:m.off - off + m.length],
                     footer.codec)
-        stats.sim_time_s += _pool_makespan(lat, self.pool_size)
 
         out = {}
         for n in names:
@@ -228,7 +257,7 @@ class InputHandler:
                 out[n] = np.concatenate(parts)
             else:
                 out[n] = np.empty((0,), dtype=spec.np_dtype())
-        return out, footer, stats
+        return out, footer
 
 
 class OutputHandler:

@@ -1,0 +1,379 @@
+"""Adaptive re-optimization at pipeline barriers (repro.core.adaptive):
+
+* tentpole invariant — adaptive and static execution produce identical
+  rows for every TPC-H query in the suite, while the adaptive path never
+  invokes more workers;
+* the cost-optimal fleet sizer (monotone in bytes, respects quota,
+  latency budget, and the worker memory floor);
+* empty-partition pruning, broadcast-join downgrade, skewed-selectivity
+  fleet shrink, and EXPLAIN ANALYZE est-vs-actual reporting;
+* priority admission: highest-priority waiter first, with aging.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import CoordinatorConfig, connect
+from repro.core.cost import CostModel
+from repro.core.platform import AdmissionController
+from repro.exec.operators import kmv_estimate, kmv_merge, kmv_sketch
+from repro.sql.physical import PlannerConfig
+from repro.sql.queries import QUERIES
+from repro.storage import ColumnSpec, ObjectStore, write_pax
+from repro.data.catalog import Catalog, TableMeta
+
+PLANNER = PlannerConfig(bytes_per_worker=250_000,
+                        broadcast_threshold_bytes=150_000,
+                        exchange_partitions=3)
+
+
+def _run(store, catalog, sql, *, adaptive, planner=PLANNER, quota=1000):
+    cfg = CoordinatorConfig(planner=planner, use_result_cache=False,
+                            adaptive=adaptive)
+    with connect(store, catalog, config=cfg, quota=quota) as session:
+        handle = session.submit(sql)
+        res = handle.result(timeout=300)
+        cols = res.fetch(store)
+        invocations = session.platform.invocations
+    return cols, res.stats, invocations
+
+
+def _sorted_rows(cols):
+    keys = sorted(cols)
+    arrs = [np.asarray(cols[k], np.float64) for k in keys]
+    order = np.lexsort(arrs)
+    return {k: a[order] for k, a in zip(keys, arrs)}
+
+
+def _assert_same_rows(a, b, ctx=""):
+    sa, sb = _sorted_rows(a), _sorted_rows(b)
+    assert sorted(sa) == sorted(sb), ctx
+    for k in sa:
+        np.testing.assert_allclose(sa[k], sb[k], rtol=1e-9, atol=1e-9,
+                                   err_msg=f"{ctx} :: {k}")
+
+
+# -- tentpole: adaptive execution is row-identical on every TPC-H query -------
+
+@pytest.mark.parametrize("qname", sorted(QUERIES))
+def test_adaptive_matches_static_rows_tpch(tpch_store, qname):
+    store, catalog = tpch_store
+    static_cols, static_stats, _ = _run(store, catalog, QUERIES[qname],
+                                        adaptive=False)
+    adapt_cols, adapt_stats, _ = _run(store, catalog, QUERIES[qname],
+                                      adaptive=True)
+    _assert_same_rows(static_cols, adapt_cols, qname)
+    static_workers = sum(p.n_fragments for p in static_stats.pipelines)
+    adapt_workers = sum(p.n_fragments for p in adapt_stats.pipelines)
+    assert adapt_workers <= static_workers, qname
+
+
+# -- cost-optimal fleet sizer --------------------------------------------------
+
+def test_optimal_fleet_monotone_in_bytes():
+    cm = CostModel()
+    sizes = [cm.optimal_fleet(nbytes, latency_budget_s=1.0,
+                              max_workers=500)
+             for nbytes in (0, 10**6, 10**8, 10**9, 10**10, 10**11)]
+    assert sizes == sorted(sizes)
+    assert sizes[0] == 1
+    assert sizes[-1] > 1
+
+
+def test_optimal_fleet_respects_latency_budget():
+    cm = CostModel()
+    nbytes = 10**10
+    for budget in (0.5, 2.0, 10.0):
+        w = cm.optimal_fleet(nbytes, latency_budget_s=budget,
+                             max_workers=10_000)
+        assert cm.fleet_latency_s(w, nbytes) <= budget
+        # cost-minimal: one worker fewer would blow the budget
+        if w > 1:
+            assert cm.fleet_latency_s(w - 1, nbytes) > budget
+
+
+def test_optimal_fleet_respects_quota_cap():
+    cm = CostModel()
+    assert cm.optimal_fleet(10**12, latency_budget_s=0.1,
+                            max_workers=7) == 7
+    assert cm.optimal_fleet(0, latency_budget_s=1.0, max_workers=7) == 1
+
+
+def test_optimal_fleet_memory_floor():
+    cm = CostModel(worker_memory_gib=2.0)
+    # generous budget would allow 1 worker, but 100 GiB cannot fit one
+    w = cm.optimal_fleet(100 << 30, latency_budget_s=10**9,
+                         max_workers=10_000)
+    assert w >= (100 << 30) // (2 << 30)
+
+
+def test_fleet_cost_monotone_in_workers():
+    cm = CostModel()
+    costs = [cm.fleet_cost_cents(w, 10**9) for w in (1, 2, 8, 64, 512)]
+    assert costs == sorted(costs)
+    assert costs[0] < costs[-1]
+
+
+# -- KMV distinct sketches -----------------------------------------------------
+
+def test_kmv_sketch_estimates_distincts():
+    from repro.exec.operators import np_key_hash
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1000, 100_000).astype(np.int64)
+    h = np_key_hash({"k": vals}, ["k"])
+    est = kmv_estimate(kmv_sketch(h))
+    assert 500 <= est <= 2000          # ~1000 distinct, coarse sketch
+    # small sets are exact
+    h3 = np_key_hash({"k": np.array([1, 2, 3, 2, 1])}, ["k"])
+    assert kmv_estimate(kmv_sketch(h3)) == 3
+
+
+def test_kmv_merge_unions_sketches():
+    a = np.arange(0, 50, dtype=np.int64)
+    b = np.arange(25, 75, dtype=np.int64)
+    from repro.exec.operators import np_key_hash
+    sa = kmv_sketch(np_key_hash({"k": a}, ["k"]))
+    sb = kmv_sketch(np_key_hash({"k": b}, ["k"]))
+    merged = kmv_merge([sa, sb])
+    assert merged == sorted(merged)
+    assert len(merged) == 32
+
+
+# -- synthetic fact/dim database for targeted adaptation tests ----------------
+
+FACT_SCHEMA = [
+    ColumnSpec("f_key", "num", "<i8"),
+    ColumnSpec("f_grp", "num", "<i8"),
+    ColumnSpec("f_val", "num", "<f8"),
+]
+DIM_SCHEMA = [
+    ColumnSpec("d_key", "num", "<i8"),
+    ColumnSpec("d_x", "num", "<i8"),
+]
+
+import repro.sql.logical as _logical
+_logical.PRIMARY_KEYS.setdefault("adim", "d_key")
+
+
+def _make_db(rows=4000, dim_rows=50, n_parts=4, distinct_groups=2,
+             seed=0):
+    rng = np.random.default_rng(seed)
+    fact = {
+        "f_key": rng.integers(0, dim_rows, rows).astype(np.int64),
+        "f_grp": rng.integers(0, distinct_groups, rows).astype(np.int64),
+        "f_val": np.round(rng.normal(0, 10, rows), 3),
+    }
+    dim = {
+        "d_key": np.arange(dim_rows, dtype=np.int64),
+        "d_x": rng.integers(0, 5, dim_rows).astype(np.int64),
+    }
+    store = ObjectStore(tier="local", seed=seed)
+    catalog = Catalog()
+    files = []
+    for p in range(n_parts):
+        sel = slice(p * rows // n_parts, (p + 1) * rows // n_parts)
+        key = f"db/afact/part-{p:05d}.spax"
+        store.put(key, write_pax({k: v[sel] for k, v in fact.items()},
+                                 FACT_SCHEMA))
+        files.append(key)
+    catalog.add(TableMeta("afact", FACT_SCHEMA, files, rows, 400_000))
+    store.put("db/adim/part-00000.spax", write_pax(dim, DIM_SCHEMA))
+    catalog.add(TableMeta("adim", DIM_SCHEMA, ["db/adim/part-00000.spax"],
+                          dim_rows, 300_000))
+    return store, catalog
+
+
+def _adaptations(stats, kind=None):
+    out = [a for p in stats.pipelines for a in p.adaptations]
+    return [a for a in out if kind is None or a["kind"] == kind]
+
+
+def test_empty_partition_pruning_and_resize():
+    """A grouped exchange with only 2 distinct keys over 8 hash
+    partitions: ≥6 partitions are provably empty; the adaptor prunes
+    them and shrinks the merge fleet, with identical rows."""
+    store, catalog = _make_db(distinct_groups=2)
+    planner = PlannerConfig(bytes_per_worker=80_000,
+                            broadcast_threshold_bytes=1,
+                            exchange_partitions=8)
+    sql = ("select f_grp, sum(f_val) as s, count(*) as n from afact "
+           "group by f_grp order by f_grp")
+    static_cols, static_stats, static_inv = _run(
+        store, catalog, sql, adaptive=False, planner=planner)
+    adapt_cols, adapt_stats, adapt_inv = _run(
+        store, catalog, sql, adaptive=True, planner=planner)
+    _assert_same_rows(static_cols, adapt_cols, "pruning")
+    prunes = _adaptations(adapt_stats, "partition_prune")
+    assert prunes and prunes[0]["pruned"] >= 6
+    resizes = _adaptations(adapt_stats, "fleet_resize")
+    assert resizes and resizes[0]["to"] < resizes[0]["from"] == 8
+    assert adapt_inv < static_inv
+
+
+def test_broadcast_join_downgrade():
+    """A repartition join whose observed build side fits the worker
+    memory budget is downgraded to a broadcast read at the barrier,
+    with identical rows."""
+    store, catalog = _make_db()
+    # tiny plan-time estimates threshold → static plan repartitions; the
+    # runtime downgrade budget is set explicitly above the observed size
+    planner = PlannerConfig(bytes_per_worker=80_000,
+                            broadcast_threshold_bytes=1,
+                            exchange_partitions=4)
+    sql = ("select d_x, count(*) as n from afact, adim "
+           "where f_key = d_key group by d_x order by d_x")
+    cfg = CoordinatorConfig(planner=planner, use_result_cache=False,
+                            adaptive=True,
+                            broadcast_downgrade_bytes=1 << 20)
+    static_cols, _, _ = _run(store, catalog, sql, adaptive=False,
+                             planner=planner)
+    with connect(store, catalog, config=cfg) as session:
+        res = session.submit(sql).result(timeout=300)
+        adapt_cols = res.fetch(store)
+    downs = _adaptations(res.stats, "broadcast_downgrade")
+    assert downs, "expected a broadcast downgrade"
+    _assert_same_rows(static_cols, adapt_cols, "broadcast downgrade")
+
+
+def test_skewed_selectivity_shrinks_fleet_and_cost():
+    """A filter far more selective than the planner's guess (an
+    expression predicate no zone map can estimate): the adaptive path
+    re-sizes the join fleet down, invokes fewer workers, and spends
+    deterministically fewer invocation cents — with identical rows."""
+    store, catalog = _make_db(rows=8000)
+    planner = PlannerConfig(bytes_per_worker=40_000,
+                            broadcast_threshold_bytes=1,
+                            exchange_partitions=6)
+    # f_val + f_key < -30 is ~0.1% selective; the planner guesses 30%
+    sql = ("select d_x, count(*) as n, sum(f_val) as s from afact, adim "
+           "where f_key = d_key and f_val + f_key < -30 "
+           "group by d_x order by d_x")
+    static_cols, static_stats, static_inv = _run(
+        store, catalog, sql, adaptive=False, planner=planner)
+    adapt_cols, adapt_stats, adapt_inv = _run(
+        store, catalog, sql, adaptive=True, planner=planner)
+    _assert_same_rows(static_cols, adapt_cols, "skewed")
+    resizes = _adaptations(adapt_stats, "fleet_resize")
+    assert resizes and resizes[0]["to"] < resizes[0]["from"]
+    assert adapt_inv < static_inv
+    assert adapt_stats.cost.invoke_cents < static_stats.cost.invoke_cents
+
+
+def test_explain_analyze_shows_est_vs_actual_and_adaptations():
+    store, catalog = _make_db()
+    planner = PlannerConfig(bytes_per_worker=80_000,
+                            broadcast_threshold_bytes=1,
+                            exchange_partitions=8)
+    cfg = CoordinatorConfig(planner=planner, use_result_cache=False)
+    sql = ("select f_grp, sum(f_val) as s from afact "
+           "group by f_grp order by f_grp")
+    with connect(store, catalog, config=cfg) as session:
+        handle = session.submit(sql)
+        text = handle.explain_analyze(timeout=300)
+    assert "est≈" in text and "actual=" in text
+    assert "adapted:" in text
+    assert "→" in text                     # workers planned→invoked
+    # plain EXPLAIN still shows the estimates
+    with connect(store, catalog, config=cfg) as session:
+        assert "rows≈" in session.explain(sql)
+
+
+def test_adapted_pipeline_publishes_adapted_layout():
+    """Downstream readers resolve the adapted fragment count from the
+    registry entry, and the session counts adaptations."""
+    store, catalog = _make_db(distinct_groups=2)
+    planner = PlannerConfig(bytes_per_worker=80_000,
+                            broadcast_threshold_bytes=1,
+                            exchange_partitions=8)
+    cfg = CoordinatorConfig(planner=planner, use_result_cache=False)
+    sql = ("select f_grp, sum(f_val) as s from afact "
+           "group by f_grp order by f_grp")
+    with connect(store, catalog, config=cfg) as session:
+        res = session.submit(sql).result(timeout=300)
+        st = session.stats()
+    adapted = [p for p in res.stats.pipelines if p.adaptations]
+    assert adapted
+    for p in adapted:
+        assert p.n_fragments <= p.n_planned
+    assert st["adaptations"] == sum(len(p.adaptations)
+                                    for p in res.stats.pipelines)
+
+
+# -- priority admission --------------------------------------------------------
+
+def test_admission_grants_highest_priority_waiter_first():
+    adm = AdmissionController(1, aging_interval_s=3600.0)
+    adm.acquire(1)                     # occupy the only slot
+    order = []
+
+    def waiter(prio, tag):
+        adm.acquire(1, priority=prio)
+        order.append(tag)
+        adm.release(1)
+
+    t_low = threading.Thread(target=waiter, args=(0, "low"))
+    t_low.start()
+    while len(adm._waiters) < 1:
+        time.sleep(0.005)
+    t_high = threading.Thread(target=waiter, args=(5, "high"))
+    t_high.start()
+    while len(adm._waiters) < 2:
+        time.sleep(0.005)
+    adm.release(1)                     # freed slot → the p5 waiter
+    t_low.join(timeout=30)
+    t_high.join(timeout=30)
+    assert order == ["high", "low"]
+    assert adm.in_flight == 0
+
+
+def test_admission_aging_prevents_starvation():
+    """A long-waiting low-priority waiter overtakes a fresh
+    high-priority one once its aging bump exceeds the gap."""
+    adm = AdmissionController(1, aging_interval_s=0.05)
+    adm.acquire(1)
+    order = []
+
+    def waiter(prio, tag):
+        adm.acquire(1, priority=prio)
+        order.append(tag)
+        adm.release(1)
+
+    t_low = threading.Thread(target=waiter, args=(0, "aged-low"))
+    t_low.start()
+    while len(adm._waiters) < 1:
+        time.sleep(0.005)
+    time.sleep(0.6)                    # aging bump ≈ 12 levels
+    t_high = threading.Thread(target=waiter, args=(10, "fresh-high"))
+    t_high.start()
+    while len(adm._waiters) < 2:
+        time.sleep(0.005)
+    adm.release(1)
+    t_low.join(timeout=30)
+    t_high.join(timeout=30)
+    assert order == ["aged-low", "fresh-high"]
+
+
+def test_session_runs_high_priority_query_first(tpch_store):
+    store, catalog = tpch_store
+    cfg = CoordinatorConfig(planner=PLANNER, use_result_cache=False)
+    started = []
+
+    from repro.api import QueryObserver
+
+    class Track(QueryObserver):
+        def on_query_state(self, query_id, state):
+            if state == "RUNNING":
+                started.append(query_id)
+
+    with connect(store, catalog, config=cfg, max_concurrent_queries=1,
+                 observers=(Track(),)) as session:
+        session.pause()
+        h_low = session.submit(QUERIES["q6"], priority=0)
+        h_high = session.submit(QUERIES["q1"], priority=5)
+        session.resume()
+        h_low.result(timeout=300)
+        h_high.result(timeout=300)
+    assert started.index(h_high.query_id) < started.index(h_low.query_id)
