@@ -14,6 +14,9 @@ measurements on this host.
   dispatch → fusion         (fused Pallas path vs generic jnp, parity-checked)
   barriers → adaptive       (barrier re-optimization vs static plan,
                              parity- and worker-count-checked)
+  exchange → shuffle        (wide-fanout shuffle strategies: direct vs
+                             combining vs multilevel, parity- and
+                             request-count-checked)
   kernels  → Pallas kernels (interpret mode on CPU)
 
 ``--json PATH`` additionally writes the rows as a JSON snapshot (the
@@ -40,6 +43,7 @@ SUITES = {
     "concurrency": suites.bench_concurrency,
     "fusion": suites.bench_fusion,
     "adaptive": suites.bench_adaptive,
+    "shuffle": suites.bench_shuffle,
     "kernels": suites.bench_kernels,
 }
 

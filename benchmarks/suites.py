@@ -326,6 +326,79 @@ def bench_adaptive(smoke: bool = False):
         f"parity=ok")]
 
 
+# -- exchange subsystem: shuffle strategies at wide fan-out ---------------------------------
+
+SHUFFLE_SQL = """
+select o_orderpriority, count(*) as n, sum(l_extendedprice) as rev
+from lineitem, orders
+where l_orderkey = o_orderkey
+group by o_orderpriority
+order by o_orderpriority
+"""
+
+
+def bench_shuffle(smoke: bool = False):
+    """Wide-fanout repartition join under each shuffle strategy.
+
+    16 producers × 16 hash partitions per exchange side — the regime
+    where the direct producer×partition grid issues O(n·m) storage
+    requests. Reports storage requests, exchange objects, cents, and
+    wall per strategy, asserting — failing the CI bench-smoke job on
+    regression — that (a) all three strategies return identical rows
+    and (b) the multi-level exchange issues strictly fewer storage
+    requests and lower cost than the direct grid.
+    """
+    import dataclasses as _dc
+
+    sf = 0.02 if smoke else 0.05
+    base = PlannerConfig(bytes_per_worker=1, broadcast_threshold_bytes=1,
+                         exchange_partitions=16, max_workers=16)
+    rows, runs = [], {}
+    for strategy in ("direct", "combining", "multilevel"):
+        store, catalog = _db(sf, n_parts=16)
+        cfg = CoordinatorConfig(
+            planner=_dc.replace(base, exchange_strategy=strategy),
+            use_result_cache=False, adaptive=False,
+            # deterministic request counts: no wall-clock-noise
+            # straggler re-triggers in CI
+            straggler_min_timeout_s=100.0)
+        with connect(store, catalog, quota=1000, config=cfg,
+                     seed=11) as session:
+            t0 = time.perf_counter()
+            res = session.sql(SHUFFLE_SQL)
+            wall = time.perf_counter() - t0
+        s = res.stats
+        reqs = store.stats.get_requests + store.stats.put_requests
+        runs[strategy] = (res.fetch(store), s, reqs)
+        x_reqs = sum(p.exchange_requests for p in s.pipelines)
+        # exchange objects only (grid/combined/l0) — result objects
+        # (f*/out.spax) are not part of any exchange and excluded so the
+        # count is comparable to the strategies' written_objects() math
+        x_objects = len([k for k in store.list("results/")
+                         if k.endswith(".spax")
+                         and not k.endswith("/out.spax")])
+        merge = sum(p.merge_fragments for p in s.pipelines)
+        rows.append((
+            f"shuffle/16x16_{strategy}", wall * 1e6,
+            f"requests={reqs};exchange_requests={x_reqs};"
+            f"exchange_objects={x_objects};merge_workers={merge};"
+            f"cost_cents={s.cost.total_cents:.4f};"
+            f"sim_latency_s={s.sim_latency_s:.2f}"))
+    d_cols, d_stats, d_reqs = runs["direct"]
+    for strategy in ("combining", "multilevel"):
+        cols, stats_, reqs_ = runs[strategy]
+        for k in d_cols:
+            np.testing.assert_allclose(
+                np.asarray(cols[k], np.float64),
+                np.asarray(d_cols[k], np.float64), rtol=1e-9, atol=1e-9,
+                err_msg=f"shuffle parity regression: {strategy}.{k}")
+        assert reqs_ < d_reqs, \
+            f"{strategy} issued {reqs_} requests ≥ direct's {d_reqs}"
+    assert runs["multilevel"][1].cost.total_cents \
+        < d_stats.cost.total_cents, "multilevel cents regression"
+    return rows
+
+
 # -- kernel dispatch: fused Pallas path vs generic jnp path ---------------------------------
 
 def bench_fusion(smoke: bool = False):

@@ -221,6 +221,8 @@ class SkyriseSession:
             "footer_cache_hits": self.footer_cache.hits,
             "footer_cache_entries": len(self.footer_cache),
             "adaptations": self._count_adaptations(),
+            "exchange_strategies": self._count_exchange_strategies(),
+            "calibrated_predicates": len(self.store.list("calibration/")),
         }
 
     def _count_adaptations(self) -> int:
@@ -232,6 +234,20 @@ class SkyriseSession:
             if result is not None:
                 n += sum(len(p.adaptations) for p in result.stats.pipelines)
         return n
+
+    def _count_exchange_strategies(self) -> dict[str, int]:
+        """Executed hash exchanges per shuffle strategy (exec.exchange)."""
+        out: dict[str, int] = {}
+        for h in self._handles:
+            with h._lock:
+                result = h._result
+            if result is None:
+                continue
+            for p in result.stats.pipelines:
+                if p.exchange_strategy and not p.cache_hit:
+                    out[p.exchange_strategy] = \
+                        out.get(p.exchange_strategy, 0) + 1
+        return out
 
     def add_observer(self, observer: QueryObserver) -> None:
         self.observers.add(observer)

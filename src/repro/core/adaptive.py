@@ -84,8 +84,8 @@ def apply_broadcast(op: dict, sources: list[str]) -> dict:
 def _lpt_assignment(parts: list[int], weights: dict[int, float],
                     n_fragments: int) -> list[list[int]]:
     """Assign upstream partitions to fragments, longest-processing-time
-    first (balance observed bytes); each fragment's list stays sorted so
-    read/concat order is deterministic."""
+    first (balance observed weights); each fragment's list stays sorted
+    so read/concat order is deterministic."""
     buckets: list[list[int]] = [[] for _ in range(n_fragments)]
     loads = [0.0] * n_fragments
     for d in sorted(parts, key=lambda d: (-weights.get(d, 0.0), d)):
@@ -93,6 +93,33 @@ def _lpt_assignment(parts: list[int], weights: dict[int, float],
         buckets[i].append(d)
         loads[i] += weights.get(d, 0.0)
     return [sorted(b) for b in buckets]
+
+
+def straggler_skew_weights(bytes_per_part: dict[int, float],
+                           write_s_per_part: dict[int, float],
+                           cap: float = 4.0) -> dict[int, float]:
+    """LPT weights inflated by observed runtime skew.
+
+    The manifest carries each partition's observed write latency; a
+    partition that took disproportionately long *per byte* sits on slow
+    storage (hot key, throttled prefix) and will likely read slowly too.
+    Its weight is inflated by the latency-per-byte ratio against the
+    fleet median (clipped to ``cap``), so the LPT assignment gives slow
+    partitions dedicated workers instead of byte-balanced bundles.
+    """
+    rates = {d: write_s_per_part.get(d, 0.0) / max(b, 1.0)
+             for d, b in bytes_per_part.items() if b > 0}
+    positive = sorted(r for r in rates.values() if r > 0)
+    if not positive:
+        return dict(bytes_per_part)
+    med = positive[len(positive) // 2]
+    if med <= 0:
+        return dict(bytes_per_part)
+    out = {}
+    for d, b in bytes_per_part.items():
+        skew = min(max(rates.get(d, 0.0) / med, 1.0), cap)
+        out[d] = b * skew
+    return out
 
 
 class Reoptimizer:
@@ -103,12 +130,17 @@ class Reoptimizer:
                  latency_budget_s: float = 2.0,
                  broadcast_bytes: int = 16 << 20,
                  hot_shuffle_object_threshold: int = 64,
-                 quota: int = 2500):
+                 quota: int = 2500,
+                 forced_strategy: str | None = None,
+                 straggler_skew_cap: float = 4.0):
         self.cost_model = cost_model
         self.latency_budget_s = latency_budget_s
         self.broadcast_bytes = broadcast_bytes
         self.hot_shuffle_object_threshold = hot_shuffle_object_threshold
         self.quota = quota
+        # a planner-forced exchange strategy is never re-picked
+        self.forced_strategy = forced_strategy
+        self.straggler_skew_cap = straggler_skew_cap
 
     # -- entry point --------------------------------------------------------
     def adapt(self, p: Pipeline, sources: dict[str, dict]) -> list[dict]:
@@ -129,7 +161,7 @@ class Reoptimizer:
         self._downgrade_broadcast_joins(p, sources, adaptations)
         self._prune_empty_partitions(p, sources, leaves, adaptations)
         self._resize_fleet(p, sources, leaves, adaptations)
-        self._retier_exchange(p, adaptations)
+        self._replan_exchange(p, sources, adaptations)
         return adaptations
 
     # -- (c) shuffle → broadcast join downgrade ------------------------------
@@ -201,9 +233,12 @@ class Reoptimizer:
         # a partition drives output when any non-build source has rows
         driving_rows = [0] * D
         bytes_per_part: dict[int, float] = {d: 0.0 for d in range(D)}
+        write_s_per_part: dict[int, float] = {d: 0.0 for d in range(D)}
         for leaf, part, st in entries:
+            write_s = st.get("partition_write_s") or [0.0] * D
             for d in range(D):
                 bytes_per_part[d] += st["partition_bytes"][d]
+                write_s_per_part[d] += write_s[d]
                 if not leaf.under_build:
                     driving_rows[d] += st["partition_rows"][d]
         if not any(not leaf.under_build for leaf, _, _ in entries):
@@ -220,8 +255,13 @@ class Reoptimizer:
                       and not p.params.broadcast_sources)
         if static_map:
             return              # the 1:1 fragment↔partition map stands
+        # straggler-aware assignment: inflate LPT weights of partitions
+        # whose observed write latency per byte is far above the median,
+        # so slow storage partitions get dedicated workers
+        weights = straggler_skew_weights(bytes_per_part, write_s_per_part,
+                                         cap=self.straggler_skew_cap)
         p.params.partition_assignment = _lpt_assignment(
-            nonempty, bytes_per_part, w)
+            nonempty, weights, w)
         p.params.n_fragments = w
         if w != f0:
             adaptations.append({
@@ -232,17 +272,77 @@ class Reoptimizer:
                     w, total_bytes),
                 "latency_budget_s": self.latency_budget_s})
 
-    # -- (b) exchange re-tiering ---------------------------------------------
-    def _retier_exchange(self, p: Pipeline,
+    # -- (d) exchange re-plan: strategy + tier --------------------------------
+    def _observed_out_bytes(self, p: Pipeline, sources: dict) -> float:
+        """Best runtime estimate of this pipeline's own exchange payload:
+        the planner's figure, rescaled by how far the observed input
+        bytes diverged from the estimated input bytes."""
+        est = float(max(p.params.est_out_bytes, 0))
+        est_in = float(p.params.est_in_bytes)
+        obs_in = sum(float((e.get("stats") or {}).get("bytes_out", 0))
+                     for e in sources.values())
+        if est_in > 0 and obs_in > 0:
+            # rescale downward only: growing the figure could talk the
+            # re-pick into a costlier strategy on a noisy observation
+            est = min(est, est * obs_in / est_in)
+        return est
+
+    def _replan_exchange(self, p: Pipeline, sources: dict,
                          adaptations: list[dict]) -> None:
+        """Re-pick this pipeline's output shuffle strategy and tier from
+        the adapted producer count and recalibrated payload estimate —
+        including injecting (or cancelling) the multi-level merge wave
+        the engine schedules after the producer fleet."""
+        from repro.exec.exchange import get_strategy
         part = p.params.partitioning
         if part.kind != "hash":
             return
-        objects = p.params.n_fragments * part.n_dest
-        tier = "s3-express" if objects > self.hot_shuffle_object_threshold \
-            else "s3-standard"
+        producers = p.params.n_fragments
+        if self.forced_strategy is None:
+            nbytes = self._observed_out_bytes(p, sources)
+            cost, costs = self.cost_model.choose_exchange_strategy(
+                producers, part.n_dest, nbytes,
+                tier_for=self._tier_for_objects,
+                latency_budget_s=self.latency_budget_s,
+            )
+            cur = costs.get(part.strategy)
+            switch = cost.strategy != part.strategy
+            if switch and cur is not None \
+                    and cur.makespan_s <= self.latency_budget_s:
+                # hysteresis against churn: keep the planner's strategy
+                # unless the re-pick saves real money (or the current
+                # one blows the latency budget)
+                from repro.core.cost import (EXCHANGE_HYSTERESIS,
+                                             EXCHANGE_MIN_SAVING_CENTS)
+                saving = cur.cents - cost.cents
+                if saving < max(EXCHANGE_MIN_SAVING_CENTS,
+                                EXCHANGE_HYSTERESIS * cur.cents):
+                    switch = False
+            if switch:
+                old = part.strategy
+                old_est = p.params.est_exchange_requests
+                part.strategy = cost.strategy
+                adaptations.append({
+                    "kind": "exchange_restrategy",
+                    "from": old, "to": cost.strategy,
+                    "est_requests_from": old_est,
+                    "est_requests_to": get_strategy(
+                        cost.strategy).producer_requests(producers,
+                                                         part.n_dest),
+                    "cents_from": cur.cents if cur else -1.0,
+                    "cents_to": cost.cents})
+        strat = get_strategy(part.strategy)
+        # refresh the request estimate for the (possibly resized) fleet
+        p.params.est_exchange_requests = strat.producer_requests(
+            producers, part.n_dest)
+        objects = strat.written_objects(producers, part.n_dest)
+        tier = self._tier_for_objects(objects)
         if tier != part.tier:
             adaptations.append({"kind": "exchange_retier",
                                 "from": part.tier, "to": tier,
                                 "shuffle_objects": objects})
             part.tier = tier
+
+    def _tier_for_objects(self, objects: int) -> str:
+        return "s3-express" if objects > self.hot_shuffle_object_threshold \
+            else "s3-standard"

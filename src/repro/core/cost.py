@@ -23,6 +23,12 @@ SQS_CENTS_PER_REQUEST = 0.4 / 10_000.0          # $0.40 per 1M requests
 # EC2 (C6g) for comparison benchmarks: 1.7 ¢/GiB-h.
 EC2_CENTS_PER_GIB_S = 1.7 / 3600.0
 
+# Exchange-strategy switch hysteresis, shared by the planner's pick and
+# the Reoptimizer's barrier re-pick: a non-default strategy must save at
+# least this many cents AND this fraction of the baseline's cents.
+EXCHANGE_MIN_SAVING_CENTS = 0.002
+EXCHANGE_HYSTERESIS = 0.15
+
 # -- Table 2: startup latency [seconds] -------------------------------------------
 
 LAMBDA_COLD_START = {"min": 0.122, "max": 0.451, "avg": 0.185}
@@ -51,6 +57,29 @@ class CostBreakdown:
         self.messaging_cents += other.messaging_cents
         self.storage_request_cents += other.storage_request_cents
         self.storage_transfer_cents += other.storage_transfer_cents
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeCost:
+    """Projected cost/latency of one hash exchange under a strategy."""
+
+    strategy: str
+    tier: str
+    puts: int                 # objects written (exchange + merge wave)
+    gets: int                 # data + footer reads to consume it once
+    merge_workers: int        # extra wave injected by the strategy
+    request_cents: float
+    transfer_cents: float
+    worker_cents: float       # merge invocations + fleets' wait GiB-s
+    makespan_s: float         # request-pool makespan across the barrier
+
+    @property
+    def cents(self) -> float:
+        return self.request_cents + self.transfer_cents + self.worker_cents
+
+    @property
+    def requests(self) -> int:
+        return self.puts + self.gets
 
 
 class CostModel:
@@ -85,6 +114,95 @@ class CostModel:
                              * LAMBDA_CENTS_PER_GIB_S)
         out.invoke_cents = LAMBDA_CENTS_PER_REQUEST
         return out
+
+    # -- exchange strategy costing (exec.exchange) -----------------------------
+    def exchange_cost(self, producers: int, n_dest: int, nbytes: float, *,
+                      strategy: str = "direct",
+                      tier: str = "s3-standard",
+                      pool_size: int = 16) -> "ExchangeCost":
+        """Projected cost of materializing + reading one hash exchange
+        under a shuffle strategy: per-request and transfer cents, the
+        merge wave's worker charges, the GiB-seconds every fleet spends
+        waiting on the exchange's request-pool makespans, and that
+        makespan itself (the latency the strategy adds to the query).
+        """
+        from repro.exec.exchange import get_strategy
+        strat = get_strategy(strategy)
+        t = TIERS.get(tier, TIERS["s3-standard"])
+        P, D = max(producers, 1), max(n_dest, 1)
+        G = strat.merge_workers(P)
+        puts = strat.written_objects(P, D)
+        # each object's footer is fetched once (2 requests) through the
+        # shared cache; every object is read in full exactly once
+        data_gets = strat.consumer_requests(P, D) + (P if G else 0)
+        gets = data_gets + 2 * puts
+        request_cents = (puts * t.write_request_cents_per_1m / 1e6
+                         + gets * t.read_request_cents_per_1m / 1e6)
+        hops = 2 if G else 1          # multi-level moves the bytes twice
+        transfer_cents = hops * nbytes / 2**30 * (
+            t.read_transfer_cents_per_gib + t.write_transfer_cents_per_gib)
+
+        def wave(reqs_per_worker: float, latency_s: float,
+                 bytes_per_worker: float) -> float:
+            if reqs_per_worker <= 0:
+                return 0.0
+            return (math.ceil(reqs_per_worker / pool_size) * latency_s
+                    + bytes_per_worker / t.bandwidth_bytes_per_s)
+
+        write_wave = wave(strat.producer_puts(D), t.write_median_s,
+                          nbytes / P)
+        merge_wave = 0.0
+        if G:
+            merge_wave = (wave(3 * math.ceil(P / G), t.read_median_s,
+                               nbytes / G)
+                          + wave(D, t.write_median_s, nbytes / G))
+        read_wave = wave(data_gets / D, t.read_median_s, nbytes / D)
+        makespan_s = write_wave + merge_wave + read_wave
+        wait_s = P * write_wave + G * merge_wave + D * read_wave
+        worker_cents = (G * (LAMBDA_CENTS_PER_REQUEST
+                             + 2 * SQS_CENTS_PER_REQUEST)
+                        + wait_s * self.worker_memory_gib
+                        * LAMBDA_CENTS_PER_GIB_S)
+        return ExchangeCost(strategy, tier, puts, gets, G, request_cents,
+                            transfer_cents, worker_cents, makespan_s)
+
+    def choose_exchange_strategy(
+            self, producers: int, n_dest: int, nbytes: float, *,
+            tier_for, latency_budget_s: float | None = None,
+            allowed: tuple[str, ...] | None = None,
+            min_saving_cents: float = EXCHANGE_MIN_SAVING_CENTS,
+            hysteresis: float = EXCHANGE_HYSTERESIS,
+    ) -> tuple["ExchangeCost", dict[str, "ExchangeCost"]]:
+        """Pick the dollar-minimal strategy whose request-pool makespan
+        fits the latency budget (no budget → cents only). ``tier_for``
+        maps a written-object count to a storage tier (the planner's
+        hot-shuffle rule) or is a fixed tier name. The bit-compatible
+        ``direct`` grid keeps ties: another strategy must save at least
+        ``min_saving_cents`` *and* ``hysteresis`` of direct's cents.
+        """
+        from repro.exec.exchange import get_strategy
+        names = allowed or ("direct", "combining", "multilevel")
+        costs: dict[str, ExchangeCost] = {}
+        for name in names:
+            strat = get_strategy(name)
+            g = strat.merge_workers(producers)
+            if g and g >= max(producers, 1):
+                continue              # degenerate merge wave (√P ≥ P)
+            tier = tier_for(strat.written_objects(producers, n_dest)) \
+                if callable(tier_for) else tier_for
+            costs[name] = self.exchange_cost(
+                producers, n_dest, nbytes, strategy=name, tier=tier)
+        pool = [c for c in costs.values()
+                if latency_budget_s is None
+                or c.makespan_s <= latency_budget_s] or list(costs.values())
+        best = min(pool, key=lambda c: (c.cents, c.makespan_s))
+        direct = costs.get("direct")
+        if best.strategy != "direct" and direct is not None \
+                and direct in pool:
+            saving = direct.cents - best.cents
+            if saving < max(min_saving_cents, hysteresis * direct.cents):
+                best = direct
+        return best, costs
 
     # -- cost-optimal fleet sizing (adaptive re-optimization) -------------------
     def fleet_latency_s(self, n_workers: int, nbytes: int, *,

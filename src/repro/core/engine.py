@@ -51,7 +51,10 @@ from repro.core.platform import (AdmissionController, FaasPlatform,
 from repro.core.registry import ResultRegistry
 from repro.core.worker import make_worker_handler
 from repro.data.catalog import Catalog
+from repro.exec import exchange
 from repro.exec.operators import kmv_estimate, kmv_merge
+from repro.sql.calibration import (SelectivityCalibration,
+                                   scan_filter_signature)
 from repro.sql.logical import Binder
 from repro.sql.parser import parse
 from repro.sql.physical import (PhysicalPlan, Pipeline, PlannerConfig,
@@ -99,6 +102,13 @@ class PipelineReport:
     est_rows: int = -1
     adaptations: list = dataclasses.field(default_factory=list)
     partition_stats: list | None = None
+    # exchange subsystem (exec.exchange): the shuffle strategy this
+    # pipeline's output exchange ran under, its estimated vs observed
+    # producer-side storage requests, and the injected merge-wave width
+    exchange_strategy: str = ""
+    est_exchange_requests: int = 0
+    exchange_requests: int = 0
+    merge_fragments: int = 0
 
 
 @dataclasses.dataclass
@@ -152,6 +162,10 @@ class CoordinatorConfig:
     adaptive: bool = True
     adaptive_latency_budget_s: float = 2.0
     broadcast_downgrade_bytes: int | None = None
+    # Persist observed per-(table, predicate) selectivities in the KV
+    # tier and seed the planner's estimates with them (downward-only),
+    # so recurring predicates converge without waiting for a barrier.
+    calibrate_selectivity: bool = True
 
 
 class QueryEngine:
@@ -185,6 +199,8 @@ class QueryEngine:
         self._cancel_check = cancel_check
         self.admission: AdmissionController = self.platform.admission
         cfg = self.config
+        self.calibration = SelectivityCalibration(store) \
+            if cfg.calibrate_selectivity else None
         self.reoptimizer = Reoptimizer(
             self.cost_model,
             latency_budget_s=cfg.adaptive_latency_budget_s,
@@ -193,7 +209,8 @@ class QueryEngine:
                              else cfg.planner.broadcast_threshold_bytes),
             hot_shuffle_object_threshold=(
                 cfg.planner.hot_shuffle_object_threshold),
-            quota=self.admission.quota)
+            quota=self.admission.quota,
+            forced_strategy=cfg.planner.exchange_strategy)
         # fragments of one pipeline report concurrently
         self._metrics_lock = threading.Lock()
 
@@ -202,7 +219,9 @@ class QueryEngine:
         stmt = parse(sql)
         lqp, _ = Binder(self.catalog).bind(stmt)
         lqp = optimize(lqp)
-        return compile_query(lqp, self.catalog, self.config.planner)
+        return compile_query(lqp, self.catalog, self.config.planner,
+                             cost_model=self.cost_model,
+                             calibration=self.calibration)
 
     def execute_sql(self, sql: str) -> QueryResult:
         return self.execute_plan(self.plan_sql(sql))
@@ -299,6 +318,10 @@ class QueryEngine:
                 for a in adaptations:
                     self.observer.on_adaptation(self.query_id, p.pid, a)
 
+        if p.partitioning.kind == "hash":
+            report.exchange_strategy = p.partitioning.strategy
+            report.est_exchange_requests = \
+                p.params.est_exchange_requests
         self.observer.on_pipeline_start(self.query_id, p.pid, p.sem_hash,
                                         p.n_fragments)
         # broadcast-downgraded sources rewrite the op tree on one copy
@@ -366,12 +389,114 @@ class QueryEngine:
                         + cfg.response_poll_overhead_s)
 
         n_total = p.n_fragments + len(extra_fragments)
+        publish_n = n_total
+        part_dict = p.partitioning.to_dict()
+        if p.partitioning.kind == "hash":
+            strat = exchange.get_strategy(p.partitioning.strategy)
+            # consumers dispatch on the *materialized* layout
+            part_dict["layout"] = strat.layout
+            if strat.merge_workers(n_total):
+                # multi-level: inject the merge wave as an extra stage of
+                # this pipeline's schedule; the published exchange is the
+                # wave's G×m grid, so downstream readers see G producers
+                publish_n = self._run_merge_wave(p, n_total, prefix,
+                                                 report, stats)
+        self._record_calibration(p, report)
         self.registry.publish(
-            p.sem_hash, prefix=prefix, n_fragments=n_total,
-            partitioning=p.partitioning.to_dict(), schema=p.output_schema,
+            p.sem_hash, prefix=prefix, n_fragments=publish_n,
+            partitioning=part_dict, schema=p.output_schema,
             stats=self._manifest_stats(report))
         self.observer.on_pipeline_complete(self.query_id, report)
         return report
+
+    # -- multi-level exchange: injected merge wave ----------------------------
+    COMBINE_GATE_FRACTION = 0.9
+
+    def _combine_gate(self, report: PipelineReport) -> bool:
+        """Per-worker partial aggregation in the merge wave pays off only
+        when keys repeat: gate on the KMV sketches' estimated group/key
+        cardinality vs the observed row count."""
+        ps = report.partition_stats
+        if not ps:
+            return False
+        rows = sum(s["rows"] for s in ps)
+        if rows <= 0:
+            return False
+        distinct = kmv_estimate(kmv_merge([s["kmv"] for s in ps]))
+        return distinct <= self.COMBINE_GATE_FRACTION * rows
+
+    def _run_merge_wave(self, p: Pipeline, producers: int, prefix: str,
+                        report: PipelineReport, stats: QueryStats) -> int:
+        """Run the multi-level exchange's merge wave: G = ⌈√producers⌉
+        workers re-partition the producers' combined l0 intermediates
+        into the final G×n_dest grid, re-combining mergeable
+        partial-aggregate states when the KMV gate passes. Returns G
+        (the published producer count)."""
+        cfg = self.config
+        G = exchange.merge_group_count(producers)
+        op = p.op["child"] if p.op.get("t") == "final" else p.op
+        combine = exchange.combine_spec(op)
+        if combine is not None and not self._combine_gate(report):
+            combine = None
+        part = p.partitioning
+        grid = {"kind": "hash", "keys": list(part.keys),
+                "n_dest": part.n_dest, "tier": part.tier,
+                "strategy": "direct"}
+        specs = [{
+            "query_id": p.sem_hash, "pipeline": p.pid, "fragment": j,
+            "n_fragments": G,
+            "op": {"t": "merge_exchange", "l0_prefix": f"{prefix}/l0",
+                   "producers": producers, "group": j, "n_groups": G,
+                   "keys": list(part.keys), "n_dest": part.n_dest,
+                   "combine": combine, "schema": p.output_schema,
+                   "tier": part.tier},
+            "scan_units": [],
+            "output": {"prefix": prefix, "partitioning": grid,
+                       "schema": p.output_schema},
+            "sources": {},
+        } for j in range(G)]
+        mreport = PipelineReport(p.pid, p.sem_hash, G)
+        dispatch = self.platform.dispatch_time_s(
+            G, two_level=G >= cfg.two_level_threshold)
+        extra: list[dict] = []
+        results = self.platform.invoke_many(
+            self.handler, specs, pipeline=p.pid,
+            cancel_check=self._check_cancel, priority=self.priority,
+            run=lambda spec: self._run_fragment(p, spec, mreport, stats,
+                                                extra))
+        report.sim_s += (dispatch
+                         + self._sim_makespan([r.sim_runtime_s
+                                               for r in results])
+                         + cfg.response_poll_overhead_s)
+        report.merge_fragments = G
+        report.attempts += mreport.attempts
+        report.transient_failures += mreport.transient_failures
+        report.requests += mreport.requests
+        report.bytes_read += mreport.bytes_read
+        report.bytes_written += mreport.bytes_written
+        report.exchange_requests += mreport.exchange_requests
+        report.footer_cache_hits += mreport.footer_cache_hits
+        # the wave's grid is what consumers read: its observations
+        # supersede the producers' l0 intermediates in the manifest
+        report.rows_out = mreport.rows_out
+        report.partition_stats = mreport.partition_stats
+        return G
+
+    def _record_calibration(self, p: Pipeline,
+                            report: PipelineReport) -> None:
+        """Persist the observed selectivity of a pure scan→filter chain
+        (cross-query calibration; see repro.sql.calibration)."""
+        if self.calibration is None or not p.scan_units:
+            return
+        sig = scan_filter_signature(
+            p.op["child"] if p.op.get("t") == "final" else p.op)
+        if sig is None:
+            return
+        table, pred_key = sig
+        base = self.catalog.table(table).rows
+        if base > 0:
+            self.calibration.record(table, pred_key,
+                                    report.rows_out / base)
 
     def _manifest_stats(self, report: PipelineReport) -> dict:
         """The exchange-manifest statistics published with a pipeline's
@@ -386,6 +511,13 @@ class QueryEngine:
             stats["partition_bytes"] = [s["bytes"] for s in ps]
             stats["partition_distinct"] = [kmv_estimate(s["kmv"])
                                            for s in ps]
+            # observed per-partition write latencies: the straggler-aware
+            # LPT weights (slow storage partitions get dedicated workers)
+            stats["partition_write_s"] = [float(s.get("write_s", 0.0))
+                                          for s in ps]
+            # bytes_out is what a consumer reads — the materialized
+            # partitions, not (for multi-level) l0 intermediates too
+            stats["bytes_out"] = int(sum(s["bytes"] for s in ps))
         return stats
 
     def _sim_makespan(self, runtimes: list[float]) -> float:
@@ -485,6 +617,8 @@ class QueryEngine:
                     report.bytes_read += s["bytes_read"]
                     report.bytes_written += s["bytes_written"]
                     report.requests += s["requests"]
+                    report.exchange_requests += _exchange_requests(
+                        spec, tier_ops)
                     report.footer_cache_hits += s.get(
                         "footer_cache_hits", 0)
                     if s.get("kernel"):
@@ -503,13 +637,15 @@ class QueryEngine:
             return
         if report.partition_stats is None:
             report.partition_stats = [
-                {"rows": 0, "bytes": 0, "kmv": []} for _ in ps]
+                {"rows": 0, "bytes": 0, "kmv": [], "write_s": 0.0}
+                for _ in ps]
         if len(ps) != len(report.partition_stats):  # defensive
             return
         for acc, s in zip(report.partition_stats, ps):
             acc["rows"] += s["rows"]
             acc["bytes"] += s["bytes"]
             acc["kmv"] = kmv_merge([acc["kmv"], s["kmv"]])
+            acc["write_s"] += float(s.get("write_s", 0.0))
 
     # -- plumbing -------------------------------------------------------------
     def _resolve_sources(self, op: dict) -> dict:
@@ -550,6 +686,21 @@ class QueryEngine:
         return spec
 
 
+def _exchange_requests(spec: dict, tier_ops: dict) -> int:
+    """Observed producer-side exchange requests of one worker response:
+    PUTs on the exchange tier, plus (merge-wave fragments) the l0 reads
+    — the figure EXPLAIN ANALYZE compares against the strategy's
+    estimate."""
+    part = spec["output"]["partitioning"]
+    if part.get("kind") != "hash":
+        return 0
+    ops_ = tier_ops.get(part.get("tier", "s3-standard")) or {}
+    n = ops_.get("put", 0)
+    if spec["op"].get("t") == "merge_exchange":
+        n += ops_.get("get", 0)
+    return n
+
+
 def _op_kinds(op: dict) -> list[str]:
     kinds = [op["t"]]
     for k in ("child", "probe", "build"):
@@ -573,7 +724,8 @@ def explain_plan(plan: PhysicalPlan) -> str:
             role = " (root)" if pid == plan.root_pid else ""
             part = p.partitioning
             dest = (f"hash[{','.join(part.keys)}]×{part.n_dest} "
-                    f"@{part.tier}" if part.kind == "hash" else "single")
+                    f"@{part.tier} ·{part.strategy}"
+                    if part.kind == "hash" else "single")
             kern = f" · kernel={p.kernel}" if p.kernel else ""
             lines.append(
                 f"  pipeline {pid}{role} · sem={p.sem_hash[:10]} · "
@@ -599,6 +751,10 @@ def _describe_adaptation(a: dict) -> str:
                 f"(source {a['source'][:10]})")
     if kind == "exchange_retier":
         return f"exchange_retier {a['from']}→{a['to']}"
+    if kind == "exchange_restrategy":
+        return (f"exchange_restrategy {a['from']}→{a['to']} "
+                f"(est {a['est_requests_from']}→{a['est_requests_to']} "
+                f"reqs, {a['cents_from']:.4f}→{a['cents_to']:.4f}¢)")
     return str(a)
 
 
@@ -633,6 +789,13 @@ def explain_analyze(plan: PhysicalPlan, stats: QueryStats) -> str:
                 f"  pipeline {pid}{role} · workers {workers} · "
                 f"rows est≈{_rows(r.est_rows)} actual={r.rows_out} · "
                 f"{r.requests} reqs · sim {r.sim_s:.3f}s")
+            if r.exchange_strategy:
+                wave = (f" · merge wave ×{r.merge_fragments}"
+                        if r.merge_fragments else "")
+                lines.append(
+                    f"    exchange: {r.exchange_strategy} · reqs "
+                    f"est≈{r.est_exchange_requests} "
+                    f"actual={r.exchange_requests}{wave}")
             lines.append("    ops: " + " → ".join(_op_kinds(p.op)[::-1]))
             for a in r.adaptations:
                 lines.append("    adapted: " + _describe_adaptation(a))

@@ -1,0 +1,343 @@
+"""First-class exchange subsystem: pluggable shuffle strategies.
+
+Skyrise shuffles run entirely through serverless storage, so exchange
+cost is dominated by *request counts*: the naive layout writes one
+object per producer × partition pair and reads the whole grid — O(n·m)
+requests that explode at wide fan-out (the pattern Lambada's multi-level
+exchange collapses). This module owns how a pipeline's hash-partitioned
+output is materialized and read back; everything else (planner, cost
+model, adaptive layer, engine) only names a strategy.
+
+Strategies (registry below, ``register_strategy`` to add one):
+
+  * ``direct`` — the producer × partition grid
+    (``f{g}/d{d}.spax``): bit-compatible with the historical layout.
+    Requests: n·m PUTs, n·m GETs.
+  * ``combining`` — each producer *combines* its whole destination grid
+    into ONE object (``f{g}/all.spax``) whose rows are sorted by a
+    stored ``__dest`` column and whose row groups split at partition
+    boundaries, so consumers prune to their partition via zone maps and
+    fetch it with one coalesced ranged GET per producer. Requests:
+    n PUTs, ≤ n·m (smaller, ranged) GETs.
+  * ``multilevel`` — Lambada-style two-phase tree shuffle: producers
+    write combined intermediates (under ``l0/``), a merge wave of
+    G = ⌈√n⌉ workers re-partitions them — re-combining mergeable
+    partial-aggregate states when the KMV sketches say the key
+    cardinality is well below the row count — and writes a G×m grid;
+    consumers read O(√n·m) objects instead of O(n·m).
+
+The *materialized* layout is recorded in the registry entry
+(``partitioning["layout"]``: "grid" | "combined"), which is what
+consumers dispatch on — so cached results produced under any strategy
+stay readable by any plan, and the semantic hash (caching/dedup) is
+untouched by strategy choice.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.exec import operators as ops
+from repro.storage import pax
+from repro.storage.io_handlers import InputHandler, OutputHandler
+from repro.storage.pax import ColumnSpec, ZonePredicate
+
+# Stored destination-partition column of combined exchange objects.
+DEST_COL = "__dest"
+_DEST_SPEC = ColumnSpec(DEST_COL, "num", "<i4")
+
+
+def merge_group_count(producers: int) -> int:
+    """Merge-wave width of the multi-level exchange: ⌈√producers⌉."""
+    return max(1, math.isqrt(max(producers - 1, 0)) + 1)
+
+
+# -- strategy objects -----------------------------------------------------------
+
+class ExchangeStrategy:
+    """How one hash exchange is partitioned, materialized, and read."""
+
+    name = ""
+    layout = "grid"          # materialized layout consumers dispatch on
+
+    # -- request-count math (the cost model's per-strategy estimates) ----
+    def written_objects(self, producers: int, n_dest: int) -> int:
+        raise NotImplementedError
+
+    def merge_workers(self, producers: int) -> int:
+        return 0
+
+    def producer_puts(self, n_dest: int) -> int:
+        """Exchange PUTs issued by one producer fragment."""
+        return 1
+
+    def producer_requests(self, producers: int, n_dest: int) -> int:
+        """Estimated storage requests on the producer side of the
+        barrier: exchange PUTs plus, for multi-level, the merge wave's
+        reads (footers included) and writes. This is the figure EXPLAIN
+        ANALYZE compares against the observed count."""
+        raise NotImplementedError
+
+    def consumer_requests(self, producers: int, n_dest: int) -> int:
+        """Estimated data GETs for all consumers to read the exchange
+        once (footer fetches excluded: the shared cache pays them once
+        per object)."""
+        raise NotImplementedError
+
+    # -- producer write path ---------------------------------------------
+    def write(self, store, result: dict[str, np.ndarray],
+              schema: Sequence[ColumnSpec], part: dict, prefix: str,
+              me: int, stats) -> tuple[list[str], list[dict]]:
+        """Materialize one producer fragment's hash-partitioned output;
+        returns (object keys, per-destination stats for the exchange
+        manifest). ``stats`` is the fragment's ``FragmentStats``."""
+        raise NotImplementedError
+
+
+class DirectStrategy(ExchangeStrategy):
+    name = "direct"
+    layout = "grid"
+
+    def written_objects(self, producers, n_dest):
+        return producers * n_dest
+
+    def producer_puts(self, n_dest):
+        return n_dest
+
+    def producer_requests(self, producers, n_dest):
+        return producers * n_dest
+
+    def consumer_requests(self, producers, n_dest):
+        return producers * n_dest
+
+    def write(self, store, result, schema, part, prefix, me, stats):
+        tier = part.get("tier", "s3-standard")
+        out = OutputHandler(store.with_tier(tier))
+        h = ops.np_key_hash(result, list(part["keys"]))
+        dest = (h % np.uint64(part["n_dest"])).astype(np.int32)
+        out_keys, part_stats = [], []
+        for d in range(part["n_dest"]):
+            sel = dest == d
+            out.append({c: v[sel] for c, v in result.items()})
+            key = f"{prefix}/f{me:04d}/d{d:04d}.spax"
+            st = out.finish(key, schema)
+            stats.account(tier, st, write=True)
+            out_keys.append(key)
+            part_stats.append({"rows": int(sel.sum()), "bytes": st.bytes,
+                               "kmv": ops.kmv_sketch(h[sel]),
+                               "write_s": st.sim_time_s})
+        return out_keys, part_stats
+
+
+def _write_combined(store, result, schema, part, prefix, me, stats,
+                    subdir: str = ""):
+    """One combined object per producer: rows stably sorted by
+    destination, row groups split at partition boundaries, ``__dest``
+    stored so both zone maps and the merge wave can route by it."""
+    tier = part.get("tier", "s3-standard")
+    n_dest = part["n_dest"]
+    h = ops.np_key_hash(result, list(part["keys"]))
+    dest = (h % np.uint64(n_dest)).astype(np.int32)
+    # stable: rows keep their original order within each destination, so
+    # per-partition row sequences are identical to the direct grid's
+    order = np.argsort(dest, kind="stable")
+    counts = np.bincount(dest, minlength=n_dest)
+    splits = [int(s) for s in np.cumsum(counts)[:-1]]
+    combined = {c: v[order] for c, v in result.items()}
+    combined[DEST_COL] = dest[order]
+    out = OutputHandler(store.with_tier(tier))
+    out.append(combined)
+    key = f"{prefix}/{subdir}f{me:04d}/all.spax"
+    st = out.finish(key, list(schema) + [_DEST_SPEC], splits=splits)
+    stats.account(tier, st, write=True)
+    n = max(int(counts.sum()), 1)
+    part_stats = [{"rows": int(counts[d]),
+                   "bytes": int(st.bytes * counts[d] / n),
+                   "kmv": ops.kmv_sketch(h[dest == d]),
+                   "write_s": st.sim_time_s * counts[d] / n}
+                  for d in range(n_dest)]
+    return [key], part_stats
+
+
+class CombiningStrategy(ExchangeStrategy):
+    name = "combining"
+    layout = "combined"
+
+    def written_objects(self, producers, n_dest):
+        return producers
+
+    def producer_requests(self, producers, n_dest):
+        return producers
+
+    def consumer_requests(self, producers, n_dest):
+        return producers * n_dest
+
+    def write(self, store, result, schema, part, prefix, me, stats):
+        return _write_combined(store, result, schema, part, prefix, me,
+                               stats)
+
+
+class MultiLevelStrategy(ExchangeStrategy):
+    name = "multilevel"
+    layout = "grid"          # the merge wave materializes a G×m grid
+
+    def written_objects(self, producers, n_dest):
+        return producers + merge_group_count(producers) * n_dest
+
+    def merge_workers(self, producers):
+        return merge_group_count(producers)
+
+    def producer_requests(self, producers, n_dest):
+        # l0 PUTs + merge reads (1 data + 2 footer GETs per l0 object)
+        # + merge-wave grid PUTs
+        g = merge_group_count(producers)
+        return producers + 3 * producers + g * n_dest
+
+    def consumer_requests(self, producers, n_dest):
+        return merge_group_count(producers) * n_dest
+
+    def write(self, store, result, schema, part, prefix, me, stats):
+        return _write_combined(store, result, schema, part, prefix, me,
+                               stats, subdir="l0/")
+
+
+STRATEGIES: dict[str, ExchangeStrategy] = {}
+
+
+def register_strategy(strategy: ExchangeStrategy) -> None:
+    STRATEGIES[strategy.name] = strategy
+
+
+for _s in (DirectStrategy(), CombiningStrategy(), MultiLevelStrategy()):
+    register_strategy(_s)
+
+
+def get_strategy(name: str) -> ExchangeStrategy:
+    return STRATEGIES[name or "direct"]
+
+
+# -- consumer read planning -----------------------------------------------------
+
+def plan_exchange_read(part: dict, prefix: str, n_producers: int,
+                       mode: str, me: int, n_fragments: int,
+                       assigned: list[int] | None,
+                       nonempty: list[int] | None,
+                       ) -> tuple[list[str], list[ZonePredicate], bool]:
+    """Object keys (+ zone predicates, + local-repartition flag) one
+    consumer fragment must read, for any materialized layout.
+
+    ``part`` is the *registry entry's* partitioning dict — the layout of
+    what was actually written, which may differ from the reader's plan
+    (cached results, adapted strategies). ``assigned`` is the adaptive
+    partition assignment, ``nonempty`` the provably non-empty partition
+    ids of this source.
+    """
+    if part["kind"] != "hash":
+        return ([f"{prefix}/f{g:04d}/out.spax"
+                 for g in range(n_producers)], [], False)
+    layout = part.get("layout", "grid")
+    ds: list[int] | None
+    local_filter = False
+    if mode == "partition":
+        if assigned is not None:
+            ds = [d for d in assigned
+                  if nonempty is None or d in nonempty]
+        elif part["n_dest"] == n_fragments:
+            ds = [me]
+        else:
+            # Cached result with a different fan-out: read everything
+            # and re-partition locally (correct under any layout).
+            local_filter = True
+            ds = None
+    else:  # mode == all
+        ds = [d for d in range(part["n_dest"])
+              if nonempty is None or d in nonempty]
+    if layout == "combined":
+        if ds is not None and not ds:
+            return [], [], False
+        keys = [f"{prefix}/f{g:04d}/all.spax" for g in range(n_producers)]
+        preds = [] if ds is None or len(ds) == part["n_dest"] else \
+            [ZonePredicate(DEST_COL, "in", tuple(ds))]
+        return keys, preds, local_filter
+    if ds is None:
+        ds = list(range(part["n_dest"]))
+    keys = [f"{prefix}/f{g:04d}/d{d:04d}.spax"
+            for g in range(n_producers) for d in ds]
+    return keys, [], local_filter
+
+
+# -- multi-level merge wave -----------------------------------------------------
+
+def combine_spec(op: dict) -> dict | None:
+    """Merge-wave combine spec when the exchanged payload is mergeable
+    partial-aggregate state (the pipeline ends in ``partial_agg``), else
+    None (join exchanges re-bucket raw rows untouched)."""
+    if op.get("t") != "partial_agg":
+        return None
+    return {"group_cols": list(op["group_cols"]),
+            "aggs": [[name, ops.MERGE_FN[fn]]
+                     for name, fn, _ in op["aggs"]]}
+
+
+def execute_merge(store, spec: dict, footer_cache=None):
+    """Run one merge-wave fragment of a multi-level exchange.
+
+    Reads its producer group's combined l0 intermediates, optionally
+    re-combines partial-aggregate states (per-worker partial aggregation
+    before the final exchange write), and writes its slice of the final
+    G×m grid — the layout consumers read as a plain direct grid.
+    """
+    from repro.exec.fragment import FragmentResult, FragmentStats
+    op = spec["op"]
+    tier = op.get("tier", "s3-standard")
+    stats = FragmentStats()
+    view = store.with_tier(tier)
+    handler = InputHandler(view, footer_cache=footer_cache)
+    gids = [g for g in range(op["producers"])
+            if g % op["n_groups"] == op["group"]]
+    keys = [f"{op['l0_prefix']}/f{g:04d}/all.spax" for g in gids]
+    schema = [ColumnSpec(s["name"], s["kind"], s["dtype"])
+              for s in op["schema"]]
+    names = [c.name for c in schema] + [DEST_COL]
+    parts, st = handler.read_tables(keys, names)
+    stats.account(tier, st, write=False)
+    cols = {c.name: np.concatenate([p[c.name] for p in parts]) if parts
+            else np.empty((0,), np.dtype(c.dtype)) for c in schema}
+    dest = np.concatenate([p[DEST_COL] for p in parts]) if parts \
+        else np.empty((0,), np.int32)
+    stats.rows_in = int(dest.shape[0])
+
+    t0 = time.perf_counter()
+    combine = op.get("combine")
+    out = OutputHandler(view)
+    prefix = spec["output"]["prefix"]
+    out_keys, part_stats = [], []
+    rows_out = 0
+    for d in range(op["n_dest"]):
+        sel = dest == d
+        dcols = {c: v[sel] for c, v in cols.items()}
+        if combine is not None and sel.any():
+            dcols = ops.np_combine_partials(
+                dcols, list(combine["group_cols"]),
+                [(name, fn) for name, fn in combine["aggs"]])
+        dcols = {c.name: dcols[c.name].astype(np.dtype(c.dtype))
+                 for c in schema}
+        n_rows = len(next(iter(dcols.values()))) if dcols else 0
+        rows_out += n_rows
+        out.append(dcols)
+        key = f"{prefix}/f{op['group']:04d}/d{d:04d}.spax"
+        wst = out.finish(key, schema)
+        stats.account(tier, wst, write=True)
+        out_keys.append(key)
+        h = ops.np_key_hash(dcols, list(op["keys"])) if n_rows else \
+            np.empty((0,), np.uint64)
+        part_stats.append({"rows": n_rows, "bytes": wst.bytes,
+                           "kmv": ops.kmv_sketch(h),
+                           "write_s": wst.sim_time_s})
+    stats.rows_out = rows_out
+    stats.compute_s += time.perf_counter() - t0
+    return FragmentResult(out_keys, stats, part_stats)

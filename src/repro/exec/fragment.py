@@ -17,6 +17,7 @@ import time
 import jax
 import numpy as np
 
+from repro.exec import exchange
 from repro.exec import lower
 from repro.exec import operators as ops
 from repro.exec.batch import bucket_capacity, from_numpy, to_numpy
@@ -213,36 +214,15 @@ def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
     # is this fragment's explicit upstream-partition assignment (fleet
     # re-sizing coarsens the 1:1 fragment↔partition map); per-source
     # ``source_partitions`` lists the provably non-empty partitions, so
-    # empty ones are pruned from the read set entirely.
+    # empty ones are pruned from the read set entirely. The exchange
+    # subsystem (repro.exec.exchange) resolves the object keys for the
+    # *materialized* layout the registry entry records — a direct grid
+    # or per-producer combined objects pruned via __dest zone maps.
     assigned = spec.get("read_partitions")
     nonempty = (spec.get("source_partitions") or {}).get(leaf_op["source"])
-    keys: list[str] = []
-    local_filter = False
-    if leaf_op["mode"] == "partition" and part["kind"] == "hash":
-        if assigned is not None:
-            ds = [d for d in assigned
-                  if nonempty is None or d in nonempty]
-            keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
-                    for g in range(src["n_fragments"]) for d in ds]
-        elif part["n_dest"] == F:
-            keys = [f"{src['prefix']}/f{g:04d}/d{me:04d}.spax"
-                    for g in range(src["n_fragments"])]
-        else:
-            # Cached result with a different fan-out: read everything and
-            # re-partition locally (correct under any cached layout).
-            local_filter = True
-            keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
-                    for g in range(src["n_fragments"])
-                    for d in range(part["n_dest"])]
-    else:  # mode == all
-        if part["kind"] == "hash":
-            ds = [d for d in range(part["n_dest"])
-                  if nonempty is None or d in nonempty]
-            keys = [f"{src['prefix']}/f{g:04d}/d{d:04d}.spax"
-                    for g in range(src["n_fragments"]) for d in ds]
-        else:
-            keys = [f"{src['prefix']}/f{g:04d}/out.spax"
-                    for g in range(src["n_fragments"])]
+    keys, preds, local_filter = exchange.plan_exchange_read(
+        part, src["prefix"], src["n_fragments"], leaf_op["mode"], me, F,
+        assigned, nonempty)
     names = [c["name"] for c in src["schema"]]
     # One batched read over the whole producer × partition grid: the
     # shared footer cache still skips every chunk request of provably
@@ -250,7 +230,7 @@ def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
     # makespan — a small (cost-optimally shrunk) fleet fetches many
     # partitions concurrently instead of paying per-object first-byte
     # latency serially.
-    parts, st = handler.read_tables(keys, names)
+    parts, st = handler.read_tables(keys, names, preds)
     stats.account(tier, st, write=False)
     out = {c: np.concatenate([p[c] for p in parts]) if parts
            else np.empty((0,), np.dtype(s["dtype"]))
@@ -267,11 +247,15 @@ def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
 def execute_fragment(store: ObjectStore, spec: dict,
                      footer_cache: FooterCache | None = None,
                      ) -> FragmentResult:
+    cache = footer_cache if footer_cache is not None else FooterCache()
+    # Merge-wave fragments of a multi-level exchange are pure host-side
+    # re-bucketing (plus partial-state combining): no XLA program.
+    if spec["op"]["t"] == "merge_exchange":
+        return exchange.execute_merge(store, spec, footer_cache=cache)
     stats = FragmentStats()
     # One input handler per storage tier, all sharing the (session-scoped)
     # footer cache — every leaf of this fragment reuses them instead of
     # constructing fresh handlers per source.
-    cache = footer_cache if footer_cache is not None else FooterCache()
     handlers: dict[str | None, InputHandler] = {}
 
     def handler_for(tier: str | None) -> InputHandler:
@@ -334,19 +318,13 @@ def execute_fragment(store: ObjectStore, spec: dict,
     n_out = len(next(iter(result.values()))) if result else 0
     stats.rows_out = n_out
     if part["kind"] == "hash":
-        tier = part.get("tier", "s3-standard")
-        out = OutputHandler(store.with_tier(tier))
-        h = ops.np_key_hash(result, list(part["keys"]))
-        dest = (h % np.uint64(part["n_dest"])).astype(np.int32)
-        for d in range(part["n_dest"]):
-            sel = dest == d
-            out.append({c: v[sel] for c, v in result.items()})
-            key = f"{prefix}/f{me:04d}/d{d:04d}.spax"
-            st = out.finish(key, schema)
-            stats.account(tier, st, write=True)
-            out_keys.append(key)
-            part_stats.append({"rows": int(sel.sum()), "bytes": st.bytes,
-                               "kmv": ops.kmv_sketch(h[sel])})
+        # the exchange strategy owns the materialized layout: a direct
+        # producer×partition grid, or one combined per-producer object
+        # (combining / multi-level level 0)
+        strat = exchange.get_strategy(part.get("strategy", "direct"))
+        keys, part_stats = strat.write(store, result, schema, part,
+                                       prefix, me, stats)
+        out_keys.extend(keys)
     else:
         out = OutputHandler(store)
         out.append(result)
@@ -354,5 +332,6 @@ def execute_fragment(store: ObjectStore, spec: dict,
         st = out.finish(key, schema)
         stats.account("table", st, write=True)
         out_keys.append(key)
-        part_stats.append({"rows": n_out, "bytes": st.bytes, "kmv": []})
+        part_stats.append({"rows": n_out, "bytes": st.bytes, "kmv": [],
+                           "write_s": st.sim_time_s})
     return FragmentResult(out_keys, stats, part_stats)

@@ -280,6 +280,39 @@ def np_hash_dest(columns: dict[str, np.ndarray], key_cols: list[str],
     return (h % np.uint64(n_dest)).astype(np.int32)
 
 
+_NP_MERGE = {"sum": np.add, "min": np.minimum, "max": np.maximum}
+
+
+def np_combine_partials(cols: dict[str, np.ndarray], group_cols: list[str],
+                        aggs: list[tuple[str, str]]) -> dict[str, np.ndarray]:
+    """Re-combine mergeable partial-aggregate states on the host.
+
+    The multi-level exchange's merge wave collapses the partial states of
+    its producer group before re-partitioning: rows sharing a group key
+    are folded with the merge function of each aggregate column (sums
+    add, counts were already decomposed to sums, min/max reduce). Order-
+    independent up to float rounding, like the downstream merge_agg.
+    """
+    n = len(next(iter(cols.values()))) if cols else 0
+    if n == 0:
+        return cols
+    if not group_cols:
+        return {name: _NP_MERGE[fn].reduce(cols[name], keepdims=True)
+                for name, fn in aggs}
+    keys = [cols[c] for c in group_cols]
+    order = np.lexsort(keys[::-1])
+    skeys = [k[order] for k in keys]
+    diff = np.zeros(n, bool)
+    for k in skeys:
+        diff[1:] |= k[1:] != k[:-1]
+    diff[0] = True
+    starts = np.flatnonzero(diff)
+    out = {c: k[starts] for c, k in zip(group_cols, skeys)}
+    for name, fn in aggs:
+        out[name] = _NP_MERGE[fn].reduceat(cols[name][order], starts)
+    return out
+
+
 # -- distinct-key sketches (KMV) -------------------------------------------------
 
 KMV_K = 32

@@ -50,6 +50,10 @@ class PlannerConfig:
     # Above this many shuffle objects, tier the exchange to hot storage.
     hot_shuffle_object_threshold: int = 64
     filter_selectivity_guess: float = 0.3
+    # Force one shuffle strategy for every hash exchange
+    # ("direct" | "combining" | "multilevel"); None → the cost model
+    # picks per exchange via ``CostModel.exchange_cost``.
+    exchange_strategy: str | None = None
 
 
 @dataclasses.dataclass
@@ -58,14 +62,20 @@ class Partitioning:
     keys: tuple[str, ...] = ()
     n_dest: int = 1
     tier: str = "s3-standard"
+    # Shuffle strategy (repro.exec.exchange registry). The *intent*; the
+    # materialized layout consumers dispatch on is recorded in the
+    # registry entry at publish time ("layout": grid | combined).
+    strategy: str = "direct"
 
     def to_dict(self):
         return {"kind": self.kind, "keys": list(self.keys),
-                "n_dest": self.n_dest, "tier": self.tier}
+                "n_dest": self.n_dest, "tier": self.tier,
+                "strategy": self.strategy}
 
     @classmethod
     def from_dict(cls, d):
-        return cls(d["kind"], tuple(d["keys"]), d["n_dest"], d["tier"])
+        return cls(d["kind"], tuple(d["keys"]), d["n_dest"], d["tier"],
+                   d.get("strategy", "direct"))
 
 
 @dataclasses.dataclass
@@ -98,6 +108,9 @@ class ExecutionParams:
     # per-source surviving (non-empty) partition ids for pruning reads
     source_partitions: dict[str, list[int]] = \
         dataclasses.field(default_factory=dict)
+    # estimated producer-side storage requests of this pipeline's output
+    # exchange under the chosen strategy (EXPLAIN ANALYZE est vs actual)
+    est_exchange_requests: int = 0
 
 
 @dataclasses.dataclass
@@ -171,9 +184,17 @@ def _schema_dicts(names_types) -> list[dict]:
 
 class PhysicalPlanner:
     def __init__(self, catalog: Catalog,
-                 config: PlannerConfig | None = None):
+                 config: PlannerConfig | None = None,
+                 cost_model=None, calibration=None):
+        # cost_model: repro.core.cost.CostModel (built lazily when absent)
+        # calibration: repro.sql.calibration.SelectivityCalibration | None
         self.catalog = catalog
         self.config = config or PlannerConfig()
+        if cost_model is None:
+            from repro.core.cost import CostModel
+            cost_model = CostModel()
+        self.cost_model = cost_model
+        self.calibration = calibration
         self.pipelines: dict[int, Pipeline] = {}
         self._next_pid = 0
 
@@ -202,6 +223,12 @@ class PhysicalPlanner:
         if isinstance(node, LFilter):
             r, b = self._est(node.child)
             sel = self._selectivity(node.pred, node.child)
+            cal = self._calibrated_est(node)
+            if cal is not None:
+                # downward-only: calibration tightens over-estimates;
+                # under-estimates keep the conservative static figure so
+                # adaptive fleets never exceed their static twin's size
+                return min(r * sel, cal[0]), min(b * sel, cal[1])
             return r * sel, b * sel
         if isinstance(node, LProject):
             r, b = self._est(node.child)
@@ -323,15 +350,58 @@ class PhysicalPlanner:
                 self._column_hint(node.right, col)
         return None
 
+    def _calibrated_est(self, node: LFilter) -> tuple[float, float] | None:
+        """(rows, bytes) from a persisted cross-query selectivity
+        observation of this exact filter chain over a base scan."""
+        if self.calibration is None:
+            return None
+        from repro.sql.calibration import predicate_key
+        preds: list = []
+        cur: LNode = node
+        while isinstance(cur, LFilter):
+            preds.append(cur.pred)
+            cur = cur.child
+        if not isinstance(cur, LScan):
+            return None
+        sel = self.calibration.lookup(
+            cur.table, predicate_key([expr_to_dict(p) for p in preds]))
+        if sel is None:
+            return None
+        meta = self.catalog.table(cur.table)
+        frac = len(cur.schema_cols) / max(len(meta.schema), 1)
+        return meta.rows * sel, meta.total_bytes * frac * sel
+
     def _workers_for_bytes(self, nbytes: int) -> int:
         c = self.config
         return max(1, min(c.max_workers,
                           -(-nbytes // c.bytes_per_worker)))
 
-    def _exchange_tier(self, producers: int, n_dest: int) -> str:
-        if producers * n_dest > self.config.hot_shuffle_object_threshold:
+    def _tier_for_objects(self, objects: int) -> str:
+        if objects > self.config.hot_shuffle_object_threshold:
             return "s3-express"
         return "s3-standard"
+
+    def _pick_exchange(self, producers: int, keys, n_dest: int,
+                       est_bytes: float) -> tuple[Partitioning, int]:
+        """Choose the shuffle strategy (and tier) of one hash exchange
+        via ``CostModel.exchange_cost``; returns the partitioning plus
+        the estimated producer-side request count for EXPLAIN."""
+        from repro.exec.exchange import get_strategy
+        forced = self.config.exchange_strategy
+        nbytes = max(float(est_bytes), 0.0)
+        if forced:
+            strat = get_strategy(forced)
+            tier = self._tier_for_objects(
+                strat.written_objects(producers, n_dest))
+            cost = self.cost_model.exchange_cost(
+                producers, n_dest, nbytes, strategy=forced, tier=tier)
+        else:
+            cost, _ = self.cost_model.choose_exchange_strategy(
+                producers, n_dest, nbytes, tier_for=self._tier_for_objects)
+        strat = get_strategy(cost.strategy)
+        part = Partitioning("hash", tuple(keys), n_dest, cost.tier,
+                            cost.strategy)
+        return part, strat.producer_requests(producers, n_dest)
 
     def _new_pid(self) -> int:
         pid = self._next_pid
@@ -426,20 +496,22 @@ class PhysicalPlanner:
             n_dest = self.config.exchange_partitions or \
                 max(1, min(n_frag, 16))
             merge_frags = n_dest
-        part = Partitioning(
-            "hash", tuple(agg.group_cols), n_dest,
-            self._exchange_tier(n_frag, n_dest)) if n_dest > 1 else \
-            Partitioning("none")
         er_child, eb_child = self._est(agg.child)
         ar, ab = self._est(agg)
         partial_rows = min(er_child, ar * n_frag)
         partial_bytes = min(eb_child, ab * n_frag)
+        if n_dest > 1:
+            part, est_xreq = self._pick_exchange(
+                n_frag, agg.group_cols, n_dest, partial_bytes)
+        else:
+            part, est_xreq = Partitioning("none"), 0
         ppid = self._new_pid()
         self.pipelines[ppid] = Pipeline(
             ppid, partial_sem, partial_op, deps,
             ExecutionParams(n_frag, part, est_in_bytes=in_bytes,
                             est_out_rows=int(partial_rows),
-                            est_out_bytes=int(partial_bytes)),
+                            est_out_bytes=int(partial_bytes),
+                            est_exchange_requests=est_xreq),
             partial_schema, units)
 
         merge_aggs = [[name, {"sum": "sum", "count": "sum", "min": "min",
@@ -593,25 +665,25 @@ class PhysicalPlanner:
         probe_schema = _output_schema_of(node.left, self.catalog)
         pfrags = min(self._workers_for_bytes(in_bytes),
                      max(len(units), 1)) if units else 1
+        ppart, pxreq = self._pick_exchange(pfrags, (node.left_key,),
+                                           n_dest, prb)
         ppid = self._new_pid()
         self.pipelines[ppid] = Pipeline(
             ppid, probe_sem, probe_op, probe_deps,
             ExecutionParams(
-                pfrags,
-                Partitioning("hash", (node.left_key,), n_dest,
-                             self._exchange_tier(pfrags, n_dest)),
+                pfrags, ppart,
                 est_in_bytes=in_bytes, est_out_rows=int(prr),
-                est_out_bytes=int(prb)),
+                est_out_bytes=int(prb), est_exchange_requests=pxreq),
             probe_schema, units)
+        bpart, bxreq = self._pick_exchange(bfrags, (node.right_key,),
+                                           n_dest, brb)
         bpid = self._new_pid()
         self.pipelines[bpid] = Pipeline(
             bpid, build_sem, bop, bdeps,
             ExecutionParams(
-                bfrags,
-                Partitioning("hash", (node.right_key,), n_dest,
-                             self._exchange_tier(bfrags, n_dest)),
+                bfrags, bpart,
                 est_in_bytes=bbytes, est_out_rows=int(brr),
-                est_out_bytes=int(brb)),
+                est_out_bytes=int(brb), est_exchange_requests=bxreq),
             build_schema, bunits)
         join_op = {"t": "join",
                    "probe": {"t": "scan_exchange", "source": probe_sem,
@@ -727,10 +799,12 @@ def _zone_preds(pred: ast.Expr) -> list[list]:
 
 
 def compile_query(lqp: LNode, catalog: Catalog,
-                  config: PlannerConfig | None = None) -> PhysicalPlan:
-    planner = PhysicalPlanner(catalog, config)
+                  config: PlannerConfig | None = None,
+                  cost_model=None, calibration=None) -> PhysicalPlan:
+    planner = PhysicalPlanner(catalog, config, cost_model=cost_model,
+                              calibration=calibration)
     plan = planner.compile(lqp)
-    _fix_join_segments(plan)
+    _fix_join_segments(plan, planner)
     _annotate_kernels(plan)
     return plan
 
@@ -745,13 +819,21 @@ def _annotate_kernels(plan: PhysicalPlan) -> None:
         p.kernel = match_kernel(op)
 
 
-def _fix_join_segments(plan: PhysicalPlan) -> None:
+def _fix_join_segments(plan: PhysicalPlan,
+                       planner: PhysicalPlanner) -> None:
     """Resolve the ('_n_frag', D) markers emitted for repartition joins:
     the pipeline embedding such a join must have D fragments and no scan
-    units."""
+    units — and its own output exchange, if any, is re-picked for the
+    corrected producer count."""
     for p in plan.pipelines.values():
         markers = [d for d in p.deps if isinstance(d, tuple)]
         if markers:
             p.deps = [d for d in p.deps if not isinstance(d, tuple)]
             p.params.n_fragments = markers[0][1]
             p.scan_units = []
+            part = p.params.partitioning
+            if part.kind == "hash":
+                p.params.partitioning, p.params.est_exchange_requests = \
+                    planner._pick_exchange(p.params.n_fragments,
+                                           part.keys, part.n_dest,
+                                           p.params.est_out_bytes)

@@ -272,8 +272,11 @@ class OutputHandler:
     def append(self, batch: dict[str, np.ndarray]) -> None:
         self._batches.append(batch)
 
-    def finish(self, key: str,
-               schema: Sequence[pax.ColumnSpec]) -> IoStats:
+    def finish(self, key: str, schema: Sequence[pax.ColumnSpec],
+               splits: Sequence[int] | None = None) -> IoStats:
+        """Write the buffered batches as one object. ``splits`` forces
+        row-group boundaries at the given row indices (exchange writers
+        align groups to partition boundaries for exact zone pruning)."""
         stats = IoStats()
         if self._batches:
             columns = {
@@ -282,7 +285,8 @@ class OutputHandler:
         else:
             columns = {c.name: np.empty((0,), dtype=c.np_dtype())
                        for c in schema}
-        data = pax.write_pax(columns, schema, self.row_group_rows)
+        data = pax.write_pax(columns, schema, self.row_group_rows,
+                             splits=splits)
         res = self.store.put(key, data)
         stats.requests += 1
         stats.bytes += res.nbytes

@@ -79,14 +79,34 @@ def _stats(spec: ColumnSpec, arr: np.ndarray):
     return None, None
 
 
+def _group_bounds(n_rows: int, row_group_rows: int,
+                  splits: Sequence[int] | None) -> list[tuple[int, int]]:
+    """(start, stop) row-group bounds: fixed-size groups by default;
+    ``splits`` forces group boundaries at the given row indices (an
+    exchange writer splits at partition boundaries so zone maps on the
+    destination column prune exactly), with oversized segments still
+    chunked to ``row_group_rows``."""
+    if not splits:
+        return [(s, min(s + row_group_rows, n_rows))
+                for s in range(0, max(n_rows, 1), row_group_rows)]
+    edges = sorted({0, n_rows, *(s for s in splits if 0 < s < n_rows)})
+    out = []
+    for lo, hi in zip(edges, edges[1:]):
+        for s in range(lo, hi, row_group_rows):
+            out.append((s, min(s + row_group_rows, hi)))
+    return out or [(0, 0)]
+
+
 def write_pax(columns: dict[str, np.ndarray],
               schema: Sequence[ColumnSpec],
               row_group_rows: int = 65536,
-              codec: str | None = None) -> bytes:
+              codec: str | None = None,
+              splits: Sequence[int] | None = None) -> bytes:
     """Serialize columns (all equal length) to SPAX bytes.
 
     ``codec`` defaults to zstd when available, else zlib; the choice is
-    recorded in the footer so readers dispatch per file.
+    recorded in the footer so readers dispatch per file. ``splits``
+    forces row-group boundaries at the given row indices.
     """
     codec = codec or compression.DEFAULT_CODEC
     names = [c.name for c in schema]
@@ -100,8 +120,7 @@ def write_pax(columns: dict[str, np.ndarray],
     buf = io.BytesIO()
     buf.write(MAGIC)
     row_groups: list[RowGroupMeta] = []
-    for start in range(0, max(n_rows, 1), row_group_rows):
-        stop = min(start + row_group_rows, n_rows)
+    for start, stop in _group_bounds(n_rows, row_group_rows, splits):
         if stop <= start and row_groups:
             break
         chunks: dict[str, ChunkMeta] = {}

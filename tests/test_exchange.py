@@ -1,0 +1,437 @@
+"""Exchange subsystem (repro.exec.exchange):
+
+* tentpole invariant — every TPC-H query returns identical rows under
+  all three shuffle strategies (direct / combining / multilevel), with
+  every join forced to repartition so the exchanges really run;
+* strategy selection on ``CostModel.exchange_cost`` (request math,
+  direct hysteresis at trivial scale, combining in the middle,
+  multilevel at wide fan-out and under latency budgets);
+* regression — at 16 producers × 16 partitions the multi-level exchange
+  issues strictly fewer storage requests and lower cents than direct;
+* straggler-aware LPT weights, the merge wave's partial-state combine,
+  the Reoptimizer's barrier re-pick, and cross-query selectivity
+  calibration through the KV tier.
+"""
+
+import numpy as np
+import pytest
+
+import repro.exec  # noqa: F401  (x64)
+from repro.api import CoordinatorConfig, connect
+from repro.core.adaptive import (Reoptimizer, _lpt_assignment,
+                                 straggler_skew_weights)
+from repro.core.cost import CostModel
+from repro.data import generate_tpch
+from repro.data.catalog import Catalog, TableMeta
+from repro.exec import exchange
+from repro.exec.operators import np_combine_partials
+from repro.sql.calibration import (SelectivityCalibration, predicate_key,
+                                   scan_filter_signature)
+from repro.sql.physical import (ExecutionParams, Partitioning, Pipeline,
+                                PlannerConfig)
+from repro.sql.queries import QUERIES
+from repro.storage import ColumnSpec, ObjectStore, write_pax
+
+STRATEGIES = ("direct", "combining", "multilevel")
+
+
+def _planner(strategy=None, **kw):
+    base = dict(bytes_per_worker=100_000, broadcast_threshold_bytes=1,
+                exchange_partitions=4, exchange_strategy=strategy)
+    base.update(kw)
+    return PlannerConfig(**base)
+
+
+def _run(store, catalog, sql, *, planner, adaptive=False, quota=1000):
+    cfg = CoordinatorConfig(planner=planner, use_result_cache=False,
+                            adaptive=adaptive,
+                            straggler_min_timeout_s=100.0)
+    with connect(store, catalog, config=cfg, quota=quota) as session:
+        res = session.submit(sql).result(timeout=300)
+        cols = res.fetch(store)
+    return cols, res.stats
+
+
+def _sorted_rows(cols):
+    keys = sorted(cols)
+    arrs = [np.asarray(cols[k], np.float64) for k in keys]
+    order = np.lexsort(arrs)
+    return {k: a[order] for k, a in zip(keys, arrs)}
+
+
+def _assert_same_rows(a, b, ctx=""):
+    sa, sb = _sorted_rows(a), _sorted_rows(b)
+    assert sorted(sa) == sorted(sb), ctx
+    for k in sa:
+        np.testing.assert_allclose(sa[k], sb[k], rtol=1e-9, atol=1e-9,
+                                   err_msg=f"{ctx} :: {k}")
+
+
+# -- tentpole: row parity across all strategies on every TPC-H query -----------
+
+@pytest.mark.parametrize("qname", sorted(QUERIES))
+def test_strategy_parity_tpch(tpch_store, qname):
+    store, catalog = tpch_store
+    runs = {s: _run(store, catalog, QUERIES[qname],
+                    planner=_planner(s))[0] for s in STRATEGIES}
+    for s in ("combining", "multilevel"):
+        _assert_same_rows(runs["direct"], runs[s], f"{qname} · {s}")
+
+
+def test_adaptive_runs_keep_parity_under_forced_strategy(tpch_store):
+    """The Reoptimizer never re-picks a forced strategy, and adaptive
+    execution stays row-identical under each."""
+    store, catalog = tpch_store
+    base, _ = _run(store, catalog, QUERIES["q3"], planner=_planner())
+    for s in STRATEGIES:
+        cols, stats = _run(store, catalog, QUERIES["q3"],
+                           planner=_planner(s), adaptive=True)
+        _assert_same_rows(base, cols, f"adaptive · {s}")
+        ran = [p.exchange_strategy for p in stats.pipelines
+               if p.exchange_strategy]
+        assert ran and all(x == s for x in ran), (s, ran)
+
+
+# -- request math + strategy selection -----------------------------------------
+
+def test_strategy_request_math():
+    d = exchange.get_strategy("direct")
+    c = exchange.get_strategy("combining")
+    m = exchange.get_strategy("multilevel")
+    assert d.written_objects(16, 16) == 256
+    assert c.written_objects(16, 16) == 16
+    assert exchange.merge_group_count(16) == 4
+    assert m.written_objects(16, 16) == 16 + 4 * 16
+    assert m.merge_workers(16) == 4
+    # producer-side request estimates (what EXPLAIN ANALYZE compares)
+    assert d.producer_requests(16, 16) == 256
+    assert c.producer_requests(16, 16) == 16
+    assert m.producer_requests(16, 16) == 16 + 3 * 16 + 4 * 16
+    # consumers read O(√n·m) objects instead of O(n·m)
+    assert m.consumer_requests(16, 16) < d.consumer_requests(16, 16)
+
+
+def test_choose_exchange_strategy_regimes():
+    cm = CostModel()
+    tier = "s3-standard"
+    tiny, _ = cm.choose_exchange_strategy(2, 2, 1e5, tier_for=tier)
+    assert tiny.strategy == "direct"          # hysteresis keeps default
+    mid, _ = cm.choose_exchange_strategy(16, 16, 5e6, tier_for=tier)
+    assert mid.strategy == "combining"
+    wide, costs = cm.choose_exchange_strategy(256, 16, 1e7, tier_for=tier)
+    assert wide.strategy == "multilevel"
+    assert costs["multilevel"].cents < costs["direct"].cents
+    assert costs["multilevel"].requests < costs["direct"].requests
+
+
+def test_choose_exchange_strategy_latency_budget():
+    cm = CostModel()
+    free, _ = cm.choose_exchange_strategy(1024, 32, 1e7,
+                                          tier_for="s3-standard")
+    budget, _ = cm.choose_exchange_strategy(1024, 32, 1e7,
+                                            tier_for="s3-standard",
+                                            latency_budget_s=1.0)
+    assert budget.strategy == "multilevel"
+    assert budget.makespan_s <= 1.0
+    assert free.cents <= budget.cents + 1e-12
+
+
+def test_exchange_cost_monotone_in_bytes():
+    cm = CostModel()
+    costs = [cm.exchange_cost(16, 16, b, strategy="combining").cents
+             for b in (0, 1e6, 1e8, 1e9)]
+    assert costs == sorted(costs)
+
+
+# -- 16×16 wide-fanout regression ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def wide_runs():
+    runs = {}
+    for strategy in STRATEGIES:
+        store = ObjectStore(tier="local", seed=0)
+        catalog = generate_tpch(store, sf=0.02, n_parts=16, seed=0)
+        planner = _planner(strategy, bytes_per_worker=1,
+                           exchange_partitions=16, max_workers=16)
+        sql = ("select o_orderpriority, count(*) as n, "
+               "sum(l_extendedprice) as rev from lineitem, orders "
+               "where l_orderkey = o_orderkey group by o_orderpriority "
+               "order by o_orderpriority")
+        cols, stats = _run(store, catalog, sql, planner=planner)
+        runs[strategy] = (cols, stats, store.stats.get_requests
+                         + store.stats.put_requests)
+    return runs
+
+
+def test_multilevel_fewer_requests_than_direct_at_16x16(wide_runs):
+    _, d_stats, d_reqs = wide_runs["direct"]
+    _, m_stats, m_reqs = wide_runs["multilevel"]
+    # 16 producers × 16 partitions per exchange side: the merge wave
+    # collapses the request grid
+    assert any(p.n_fragments >= 16 for p in d_stats.pipelines)
+    assert any(p.merge_fragments == 4 for p in m_stats.pipelines)
+    assert m_reqs < d_reqs, (m_reqs, d_reqs)
+    assert m_stats.cost.total_cents < d_stats.cost.total_cents
+    # per-exchange producer-side observation beats direct's too
+    d_x = sum(p.exchange_requests for p in d_stats.pipelines)
+    m_x = sum(p.exchange_requests for p in m_stats.pipelines)
+    assert m_x < d_x
+
+
+def test_combining_fewer_requests_than_direct_at_16x16(wide_runs):
+    c_reqs = wide_runs["combining"][2]
+    d_reqs = wide_runs["direct"][2]
+    assert c_reqs < d_reqs, (c_reqs, d_reqs)
+
+
+def test_wide_fanout_row_parity(wide_runs):
+    for s in ("combining", "multilevel"):
+        _assert_same_rows(wide_runs["direct"][0], wide_runs[s][0],
+                          f"16x16 · {s}")
+
+
+def test_explain_analyze_reports_strategy_and_requests():
+    store = ObjectStore(tier="local", seed=0)
+    catalog = generate_tpch(store, sf=0.01, n_parts=4, seed=0)
+    cfg = CoordinatorConfig(planner=_planner("multilevel"),
+                            use_result_cache=False)
+    with connect(store, catalog, config=cfg) as session:
+        text = session.submit(QUERIES["q3"]).explain_analyze(timeout=300)
+        st = session.stats()
+    assert "exchange: multilevel" in text
+    assert "reqs est≈" in text and "actual=" in text
+    assert "merge wave ×" in text
+    assert st["exchange_strategies"].get("multilevel", 0) > 0
+    # plain EXPLAIN names the strategy on the dest line
+    with connect(store, catalog, config=cfg) as session:
+        assert "·multilevel" in session.explain(QUERIES["q3"])
+
+
+# -- merge-wave combine ---------------------------------------------------------
+
+def test_np_combine_partials_folds_states():
+    cols = {"g": np.array([1, 0, 1, 0, 2], np.int64),
+            "s": np.array([1.0, 2.0, 3.0, 4.0, 5.0]),
+            "mn": np.array([5.0, 1.0, 2.0, 0.5, 9.0]),
+            "mx": np.array([5.0, 1.0, 2.0, 0.5, 9.0])}
+    out = np_combine_partials(cols, ["g"],
+                              [("s", "sum"), ("mn", "min"), ("mx", "max")])
+    assert out["g"].tolist() == [0, 1, 2]
+    assert out["s"].tolist() == [6.0, 4.0, 5.0]
+    assert out["mn"].tolist() == [0.5, 2.0, 9.0]
+    assert out["mx"].tolist() == [1.0, 5.0, 9.0]
+    # empty input is the identity
+    empty = {k: v[:0] for k, v in cols.items()}
+    assert np_combine_partials(empty, ["g"], [("s", "sum")])["s"].size == 0
+
+
+def test_combining_write_matches_direct_partitions():
+    """The combined per-producer object holds, per destination, exactly
+    the rows the direct grid would put in that destination's object —
+    in the same order — and zone maps prune foreign partitions."""
+    from repro.exec.fragment import FragmentStats
+    from repro.storage import InputHandler
+    rng = np.random.default_rng(0)
+    result = {"k": rng.integers(0, 1000, 500).astype(np.int64),
+              "v": rng.normal(size=500)}
+    schema = [ColumnSpec("k", "num", "<i8"), ColumnSpec("v", "num", "<f8")]
+    part = {"kind": "hash", "keys": ["k"], "n_dest": 4,
+            "tier": "s3-standard"}
+    store = ObjectStore(tier="local", seed=0)
+    exchange.get_strategy("direct").write(
+        store, result, schema, part, "x/direct", 0, FragmentStats())
+    exchange.get_strategy("combining").write(
+        store, result, schema, part, "x/comb", 0, FragmentStats())
+    ih = InputHandler(store)
+    for d in range(4):
+        want = ih.read_table(f"x/direct/f0000/d{d:04d}.spax")[0]
+        keys, preds, lf = exchange.plan_exchange_read(
+            dict(part, layout="combined"), "x/comb", 1, "partition",
+            d, 4, None, None)
+        assert not lf and keys == ["x/comb/f0000/all.spax"]
+        got = ih.read_table(keys[0], ["k", "v"], preds)[0]
+        np.testing.assert_array_equal(want["k"], got["k"])
+        np.testing.assert_array_equal(want["v"], got["v"])
+
+
+# -- straggler-aware LPT --------------------------------------------------------
+
+def test_straggler_skew_weights_isolate_slow_partition():
+    nbytes = {d: 100.0 for d in range(4)}
+    write_s = {0: 0.1, 1: 0.1, 2: 0.1, 3: 1.0}   # 3 is 10× slower/byte
+    w = straggler_skew_weights(nbytes, write_s)
+    assert w[3] == max(w.values()) and w[3] >= 4 * w[0] * 0.99
+    # byte-balanced LPT would bundle pairs; skew-aware LPT dedicates a
+    # worker to the slow partition
+    assignment = _lpt_assignment(list(range(4)), w, 2)
+    assert [3] in assignment
+
+
+def test_skew_weights_no_observations_fall_back_to_bytes():
+    nbytes = {0: 10.0, 1: 20.0}
+    assert straggler_skew_weights(nbytes, {0: 0.0, 1: 0.0}) == nbytes
+
+
+# -- Reoptimizer barrier re-pick ------------------------------------------------
+
+def _pipeline(n_frag, n_dest, strategy, est_out_bytes):
+    est_xreq = exchange.get_strategy(strategy).producer_requests(n_frag,
+                                                                 n_dest)
+    return Pipeline(
+        0, "sem", {"t": "scan_exchange", "source": "s",
+                   "mode": "partition"}, [],
+        ExecutionParams(n_frag,
+                        Partitioning("hash", ("k",), n_dest,
+                                     "s3-standard", strategy),
+                        est_in_bytes=10**7, est_out_bytes=est_out_bytes,
+                        est_exchange_requests=est_xreq),
+        [], [])
+
+
+def test_reoptimizer_replans_to_multilevel_at_wide_fanout():
+    r = Reoptimizer(CostModel(), hot_shuffle_object_threshold=10**9)
+    p = _pipeline(300, 16, "direct", 10**7)
+    adaptations = []
+    r._replan_exchange(p, {"s": {"stats": {"bytes_out": 10**7}}},
+                       adaptations)
+    kinds = [a["kind"] for a in adaptations]
+    assert "exchange_restrategy" in kinds
+    a = adaptations[kinds.index("exchange_restrategy")]
+    assert a["from"] == "direct" and a["to"] == "multilevel"
+    assert a["est_requests_to"] < a["est_requests_from"]
+    assert p.partitioning.strategy == "multilevel"
+
+
+def test_reoptimizer_hysteresis_keeps_current_strategy():
+    r = Reoptimizer(CostModel())
+    p = _pipeline(4, 4, "combining", 10**5)
+    adaptations = []
+    r._replan_exchange(p, {"s": {"stats": {"bytes_out": 10**5}}},
+                       adaptations)
+    assert p.partitioning.strategy == "combining"
+    assert not [a for a in adaptations
+                if a["kind"] == "exchange_restrategy"]
+
+
+def test_reoptimizer_honors_forced_strategy():
+    r = Reoptimizer(CostModel(), forced_strategy="direct",
+                    hot_shuffle_object_threshold=10**9)
+    p = _pipeline(300, 16, "direct", 10**7)
+    adaptations = []
+    r._replan_exchange(p, {"s": {"stats": {"bytes_out": 10**7}}},
+                       adaptations)
+    assert p.partitioning.strategy == "direct"
+    assert not adaptations
+
+
+# -- cross-query selectivity calibration ----------------------------------------
+
+FACT_SCHEMA = [
+    ColumnSpec("f_key", "num", "<i8"),
+    ColumnSpec("f_grp", "num", "<i8"),
+    ColumnSpec("f_val", "num", "<f8"),
+]
+DIM_SCHEMA = [
+    ColumnSpec("d_key", "num", "<i8"),
+    ColumnSpec("d_x", "num", "<i8"),
+]
+
+import repro.sql.logical as _logical
+_logical.PRIMARY_KEYS.setdefault("cdim", "d_key")
+
+
+def _calib_db(rows=6000, dim_rows=40, n_parts=4, seed=0):
+    rng = np.random.default_rng(seed)
+    fact = {
+        "f_key": rng.integers(0, dim_rows, rows).astype(np.int64),
+        "f_grp": rng.integers(0, 3, rows).astype(np.int64),
+        "f_val": np.round(rng.normal(0, 10, rows), 3),
+    }
+    dim = {"d_key": np.arange(dim_rows, dtype=np.int64),
+           "d_x": rng.integers(0, 5, dim_rows).astype(np.int64)}
+    store = ObjectStore(tier="local", seed=seed)
+    catalog = Catalog()
+    files = []
+    for p in range(n_parts):
+        sel = slice(p * rows // n_parts, (p + 1) * rows // n_parts)
+        key = f"db/cfact/part-{p:05d}.spax"
+        store.put(key, write_pax({k: v[sel] for k, v in fact.items()},
+                                 FACT_SCHEMA))
+        files.append(key)
+    catalog.add(TableMeta("cfact", FACT_SCHEMA, files, rows, 400_000))
+    store.put("db/cdim/part-00000.spax", write_pax(dim, DIM_SCHEMA))
+    catalog.add(TableMeta("cdim", DIM_SCHEMA, ["db/cdim/part-00000.spax"],
+                          dim_rows, 300_000))
+    return store, catalog
+
+
+CALIB_SQL = ("select d_x, count(*) as n from cfact, cdim "
+             "where f_key = d_key and f_val + f_key < -30 "
+             "group by d_x order by d_x")
+
+
+def test_calibration_converges_recurring_predicate():
+    from repro.core.engine import QueryEngine
+    store, catalog = _calib_db()
+    cfg = CoordinatorConfig(
+        planner=PlannerConfig(bytes_per_worker=40_000,
+                              broadcast_threshold_bytes=1,
+                              exchange_partitions=4),
+        use_result_cache=False, straggler_min_timeout_s=100.0)
+    eng = QueryEngine(store, catalog, config=cfg)
+
+    def _has_filter(op):
+        while op is not None:
+            if op["t"] == "filter":
+                return True
+            op = op.get("child")
+        return False
+
+    try:
+        plan1 = eng.plan_sql(CALIB_SQL)
+        probe_pid = next(pid for pid, p in plan1.pipelines.items()
+                         if p.scan_units and _has_filter(p.op))
+        est1 = plan1.pipelines[probe_pid].params.est_out_rows
+        res = eng.execute_plan(plan1)
+        probe_rows = next(r.rows_out for r in res.stats.pipelines
+                          if r.pid == probe_pid)
+        # the observation landed in the KV tier
+        assert store.list("calibration/cfact/")
+        # a fresh compile of the same predicate seeds from it: the
+        # ~0.1%-selective expression predicate (planner guess: 30%)
+        # converges without waiting for a barrier
+        plan2 = eng.plan_sql(CALIB_SQL)
+        est2 = plan2.pipelines[probe_pid].params.est_out_rows
+        assert est2 < est1
+        assert est2 <= max(2 * probe_rows, 10)
+    finally:
+        eng.platform.close()
+
+
+def test_calibration_is_downward_only():
+    cal_store = ObjectStore(tier="local", seed=0)
+    cal = SelectivityCalibration(cal_store)
+    cal.record("t", "k", 0.9)            # observed far above the guess
+    assert cal.lookup("t", "k") == pytest.approx(0.9)
+    # EMA folds repeat observations
+    cal.record("t", "k", 0.5)
+    assert cal.lookup("t", "k") == pytest.approx(0.7)
+    # the *planner* applies min(static, observed): emulated here by the
+    # contract test on _est via the convergence test above; the unit
+    # check is that record() floors and caps
+    cal.record("t", "lo", -1.0)
+    assert cal.lookup("t", "lo") == pytest.approx(1e-4)
+
+
+def test_scan_filter_signature_only_pure_chains():
+    scan = {"t": "scan_table", "table": "x", "columns": [],
+            "zone_preds": []}
+    filt = {"t": "filter", "child": scan, "pred": {"t": "col", "name": "a"}}
+    proj = {"t": "project", "child": filt, "exprs": []}
+    assert scan_filter_signature(filt) == ("x", predicate_key(
+        [{"t": "col", "name": "a"}]))
+    assert scan_filter_signature(proj) == scan_filter_signature(filt)
+    assert scan_filter_signature(scan) is None            # no filter
+    agg = {"t": "partial_agg", "child": filt, "group_cols": [],
+           "aggs": [], "strategy": "direct", "sizes": []}
+    assert scan_filter_signature(agg) is None             # not pure
