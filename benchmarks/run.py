@@ -17,6 +17,9 @@ measurements on this host.
   exchange → shuffle        (wide-fanout shuffle strategies: direct vs
                              combining vs multilevel, parity- and
                              request-count-checked)
+  tenants  → service        (query service tier: fair-share slot split,
+                             SLO deadline misses, DAG shared-subplan
+                             dedup — all asserted)
   kernels  → Pallas kernels (interpret mode on CPU)
 
 ``--json PATH`` additionally writes the rows as a JSON snapshot (the
@@ -44,6 +47,7 @@ SUITES = {
     "fusion": suites.bench_fusion,
     "adaptive": suites.bench_adaptive,
     "shuffle": suites.bench_shuffle,
+    "service": suites.bench_service,
     "kernels": suites.bench_kernels,
 }
 

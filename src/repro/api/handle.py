@@ -36,10 +36,17 @@ class QueryHandle:
     """Lifecycle, result, and stats of one query in a session."""
 
     def __init__(self, query_id: str, sql: str, session,
-                 priority: int = 0):
+                 priority: int = 0, tenant: str | None = None,
+                 deadline_s: float | None = None,
+                 fleet_cap: int | None = None):
         self.query_id = query_id
         self.sql = sql
         self.priority = priority
+        # service-tier attributes (repro.service): fair-share admission
+        # group, SLO deadline (simulated seconds), degraded-fleet clamp
+        self.tenant = tenant
+        self.deadline_s = deadline_s
+        self.fleet_cap = fleet_cap
         self._session = session
         # RLock: state transitions notify observers while holding the
         # lock, and observers may read handle.state back.

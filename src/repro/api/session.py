@@ -126,7 +126,10 @@ class SkyriseSession:
         return catalog
 
     # -- query API -----------------------------------------------------------
-    def submit(self, sql: str, priority: int = 0) -> QueryHandle:
+    def submit(self, sql: str, priority: int = 0, *,
+               tenant: str | None = None,
+               deadline_s: float | None = None,
+               fleet_cap: int | None = None) -> QueryHandle:
         """Enqueue a query; returns its handle immediately.
 
         ``priority`` orders the session scheduler *and* the platform's
@@ -134,12 +137,20 @@ class SkyriseSession:
         the highest-priority waiting query (ties FIFO), with an aging
         bump per ``aging_interval_s`` waited (see ``AdmissionController``)
         so low-priority queries are delayed but never starved.
+
+        The service tier (``repro.service``) adds: ``tenant`` — the
+        fair-share admission group the query's fragments charge;
+        ``deadline_s`` — an SLO deadline in *simulated* seconds, split
+        into per-stage latency budgets that drive fleet sizing;
+        ``fleet_cap`` — a hard per-pipeline fleet clamp (degraded
+        dispatch for over-budget tenants).
         """
         if self.catalog is None:
             raise RuntimeError("no catalog attached — call "
                                "attach_catalog() or ensure_tpch() first")
         handle = QueryHandle(f"s{self._sid}-q{next(self._qid)}", sql, self,
-                             priority=priority)
+                             priority=priority, tenant=tenant,
+                             deadline_s=deadline_s, fleet_cap=fleet_cap)
         handle._enqueued_at = time.monotonic()
         with self._cv:
             if self._closing:
@@ -260,7 +271,8 @@ class SkyriseSession:
             registry=self.registry, handler=self.handler,
             observer=self.observers, query_id=handle.query_id,
             cancel_check=handle._raise_if_cancelled,
-            priority=handle.priority)
+            priority=handle.priority, tenant=handle.tenant,
+            deadline_s=handle.deadline_s, fleet_cap=handle.fleet_cap)
 
     def _plan_for(self, handle: QueryHandle):
         """Plan (but do not execute) a handle's query, caching the plan

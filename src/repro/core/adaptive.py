@@ -143,7 +143,9 @@ class Reoptimizer:
         self.straggler_skew_cap = straggler_skew_cap
 
     # -- entry point --------------------------------------------------------
-    def adapt(self, p: Pipeline, sources: dict[str, dict]) -> list[dict]:
+    def adapt(self, p: Pipeline, sources: dict[str, dict], *,
+              latency_budget_s: float | None = None,
+              fleet_cap: int | None = None) -> list[dict]:
         """Re-optimize ``p`` in place (mutating ``p.params`` only) before
         launch; returns the list of adaptation records applied.
 
@@ -152,16 +154,26 @@ class Reoptimizer:
         tables directly have no runtime observations to exploit and are
         left untouched; so is any pipeline whose manifests predate stat
         emission (graceful fallback to the static plan).
+
+        ``latency_budget_s`` overrides the configured budget for this
+        call — the service tier passes the query's *remaining deadline
+        share* here, so a query running behind its SLO escalates to a
+        bigger fleet at the next barrier. ``fleet_cap`` clamps the fleet
+        (budget-exhausted tenants degrade to their minimum fleet).
         """
         if p.scan_units or not sources:
             return []
         adaptations: list[dict] = []
         leaves = _collect_leaves(p.op)
+        budget = self.latency_budget_s if latency_budget_s is None \
+            else latency_budget_s
 
         self._downgrade_broadcast_joins(p, sources, adaptations)
         self._prune_empty_partitions(p, sources, leaves, adaptations)
-        self._resize_fleet(p, sources, leaves, adaptations)
-        self._replan_exchange(p, sources, adaptations)
+        self._resize_fleet(p, sources, leaves, adaptations,
+                           latency_budget_s=budget, fleet_cap=fleet_cap)
+        self._replan_exchange(p, sources, adaptations,
+                              latency_budget_s=budget)
         return adaptations
 
     # -- (c) shuffle → broadcast join downgrade ------------------------------
@@ -210,7 +222,11 @@ class Reoptimizer:
     # -- (a) cost-optimal fleet re-sizing -------------------------------------
     def _resize_fleet(self, p: Pipeline, sources: dict,
                       leaves: list[_Leaf],
-                      adaptations: list[dict]) -> None:
+                      adaptations: list[dict], *,
+                      latency_budget_s: float | None = None,
+                      fleet_cap: int | None = None) -> None:
+        budget = self.latency_budget_s if latency_budget_s is None \
+            else latency_budget_s
         aligned = [l for l in leaves
                    if l.op.get("mode") == "partition"
                    and l.op["source"] not in p.params.broadcast_sources]
@@ -248,8 +264,10 @@ class Reoptimizer:
 
         f0 = p.params.n_fragments
         cap = min(f0, max(len(nonempty), 1), self.quota)
+        if fleet_cap is not None:
+            cap = min(cap, max(fleet_cap, 1))
         w = self.cost_model.optimal_fleet(
-            total_bytes, latency_budget_s=self.latency_budget_s,
+            total_bytes, latency_budget_s=budget,
             max_workers=cap)
         static_map = (w == f0 == D and len(nonempty) == D
                       and not p.params.broadcast_sources)
@@ -270,7 +288,7 @@ class Reoptimizer:
                 "est_bytes": int(p.params.est_in_bytes),
                 "cost_cents": self.cost_model.fleet_cost_cents(
                     w, total_bytes),
-                "latency_budget_s": self.latency_budget_s})
+                "latency_budget_s": budget})
 
     # -- (d) exchange re-plan: strategy + tier --------------------------------
     def _observed_out_bytes(self, p: Pipeline, sources: dict) -> float:
@@ -288,12 +306,15 @@ class Reoptimizer:
         return est
 
     def _replan_exchange(self, p: Pipeline, sources: dict,
-                         adaptations: list[dict]) -> None:
+                         adaptations: list[dict], *,
+                         latency_budget_s: float | None = None) -> None:
         """Re-pick this pipeline's output shuffle strategy and tier from
         the adapted producer count and recalibrated payload estimate —
         including injecting (or cancelling) the multi-level merge wave
         the engine schedules after the producer fleet."""
         from repro.exec.exchange import get_strategy
+        budget = self.latency_budget_s if latency_budget_s is None \
+            else latency_budget_s
         part = p.params.partitioning
         if part.kind != "hash":
             return
@@ -303,12 +324,12 @@ class Reoptimizer:
             cost, costs = self.cost_model.choose_exchange_strategy(
                 producers, part.n_dest, nbytes,
                 tier_for=self._tier_for_objects,
-                latency_budget_s=self.latency_budget_s,
+                latency_budget_s=budget,
             )
             cur = costs.get(part.strategy)
             switch = cost.strategy != part.strategy
             if switch and cur is not None \
-                    and cur.makespan_s <= self.latency_budget_s:
+                    and cur.makespan_s <= budget:
                 # hysteresis against churn: keep the planner's strategy
                 # unless the re-pick saves real money (or the current
                 # one blows the latency budget)

@@ -255,3 +255,18 @@ class CostModel:
         mem_budget = self.worker_memory_gib * 2**30 * memory_fill_fraction
         w = max(w, math.ceil(nbytes / max(mem_budget, 1)), 1)
         return min(w, max_workers)
+
+    @staticmethod
+    def stage_latency_budget(deadline_s: float, elapsed_s: float,
+                             stages_left: int,
+                             floor_s: float = 1e-3) -> float:
+        """Per-stage latency budget from a query-level SLO deadline.
+
+        The remaining deadline (simulated seconds) is split evenly over
+        the stages still to run. A query running *behind* its deadline
+        gets the floor — a near-zero budget that drives
+        ``optimal_fleet`` to the cap, i.e. a missed deadline escalates
+        the fleet instead of giving up.
+        """
+        remaining = deadline_s - elapsed_s
+        return max(remaining, floor_s) / max(stages_left, 1)

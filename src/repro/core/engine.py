@@ -185,7 +185,10 @@ class QueryEngine:
                  observer: QueryObserver | None = None,
                  query_id: str = "query",
                  cancel_check: Callable[[], None] | None = None,
-                 priority: int = 0):
+                 priority: int = 0,
+                 tenant: str | None = None,
+                 deadline_s: float | None = None,
+                 fleet_cap: int | None = None):
         self.store = store
         self.catalog = catalog
         self.platform = platform or FaasPlatform()
@@ -196,6 +199,13 @@ class QueryEngine:
         self.observer = observer or QueryObserver()
         self.query_id = query_id
         self.priority = priority
+        # service tier (repro.service): tenant → fair-share admission
+        # group; deadline_s → per-stage latency budgets (SLO-aware fleet
+        # sizing); fleet_cap → degraded dispatch for over-budget tenants
+        self.tenant = tenant
+        self.deadline_s = deadline_s
+        self.fleet_cap = fleet_cap
+        self._stage_budget_s: float | None = None
         self._cancel_check = cancel_check
         self.admission: AdmissionController = self.platform.admission
         cfg = self.config
@@ -229,7 +239,15 @@ class QueryEngine:
     def execute_plan(self, plan: PhysicalPlan) -> QueryResult:
         t_wall = time.perf_counter()
         stats = QueryStats(query_id=self.query_id)
-        for stage in plan.stages():
+        stages = plan.stages()
+        for si, stage in enumerate(stages):
+            if self.deadline_s is not None:
+                # remaining deadline split over the stages still to run:
+                # a query running behind its SLO gets a shrinking budget
+                # → optimal_fleet escalates toward the cap at the barrier
+                self._stage_budget_s = self.cost_model.stage_latency_budget(
+                    self.deadline_s, stats.sim_latency_s,
+                    len(stages) - si)
             stage_sim = 0.0
             for pid in stage:
                 self._check_cancel()
@@ -311,12 +329,15 @@ class QueryEngine:
         # join strategy, exchange tier). Mutates p.params only — the
         # semantic hash, and thus caching/dedup, is unaffected.
         if self.config.adaptive:
-            adaptations = self.reoptimizer.adapt(p, sources)
+            adaptations = self.reoptimizer.adapt(
+                p, sources, latency_budget_s=self._stage_budget_s,
+                fleet_cap=self.fleet_cap)
             if adaptations:
                 report.adaptations = adaptations
                 report.n_fragments = p.n_fragments
                 for a in adaptations:
                     self.observer.on_adaptation(self.query_id, p.pid, a)
+        self._apply_slo_fleet(p, report)
 
         if p.partitioning.kind == "hash":
             report.exchange_strategy = p.partitioning.strategy
@@ -349,6 +370,7 @@ class QueryEngine:
         results = self.platform.invoke_many(
             self.handler, list(specs.values()), pipeline=p.pid,
             cancel_check=self._check_cancel, priority=self.priority,
+            group=self.tenant,
             run=lambda spec: self._run_fragment(p, spec, report, stats,
                                                 extra_fragments))
         completions: dict[int, float] = {
@@ -369,7 +391,8 @@ class QueryEngine:
             for f, t in list(completions.items()):
                 if t > threshold:
                     self.observer.on_straggler(self.query_id, p.pid, f)
-                    self.admission.acquire(1, priority=self.priority)
+                    self.admission.acquire(1, priority=self.priority,
+                                           group=self.tenant)
                     try:
                         # the duplicate's rows/bytes repeat the original
                         # worker's output — bill its cost, don't
@@ -408,6 +431,39 @@ class QueryEngine:
             stats=self._manifest_stats(report))
         self.observer.on_pipeline_complete(self.query_id, report)
         return report
+
+    # -- SLO-aware scan-fleet sizing (service tier) ---------------------------
+    def _apply_slo_fleet(self, p: Pipeline,
+                         report: PipelineReport) -> None:
+        """Re-size a *scan* pipeline's fleet against the query's
+        per-stage deadline budget (scan pipelines have no upstream
+        manifests, so the barrier reoptimizer skips them): a tight
+        budget escalates toward one worker per scan unit, a loose one
+        shrinks to the dollar-minimal fleet. ``fleet_cap`` (degraded
+        tenant dispatch) clamps unconditionally."""
+        if not p.scan_units:
+            return
+        if self._stage_budget_s is None and self.fleet_cap is None:
+            return
+        f0 = p.params.n_fragments
+        cap = min(len(p.scan_units), self.admission.quota)
+        if self.fleet_cap is not None:
+            cap = min(cap, max(self.fleet_cap, 1))
+        if self._stage_budget_s is not None:
+            n = self.cost_model.optimal_fleet(
+                int(p.input_bytes),
+                latency_budget_s=self._stage_budget_s, max_workers=cap)
+        else:
+            n = min(f0, cap)
+        if n == f0:
+            return
+        p.params.n_fragments = n
+        report.n_fragments = n
+        a = {"kind": "deadline_fleet", "from": f0, "to": n,
+             "latency_budget_s": self._stage_budget_s,
+             "fleet_cap": self.fleet_cap}
+        report.adaptations = list(report.adaptations) + [a]
+        self.observer.on_adaptation(self.query_id, p.pid, a)
 
     # -- multi-level exchange: injected merge wave ----------------------------
     COMBINE_GATE_FRACTION = 0.9
@@ -462,6 +518,7 @@ class QueryEngine:
         results = self.platform.invoke_many(
             self.handler, specs, pipeline=p.pid,
             cancel_check=self._check_cancel, priority=self.priority,
+            group=self.tenant,
             run=lambda spec: self._run_fragment(p, spec, mreport, stats,
                                                 extra))
         report.sim_s += (dispatch

@@ -46,6 +46,7 @@ class _Waiter:
     priority: int
     enqueued: float
     seq: int
+    group: str | None = None
 
     def effective(self, now: float, aging_s: float) -> float:
         return self.priority + (now - self.enqueued) / max(aging_s, 1e-9)
@@ -66,12 +67,25 @@ class AdmissionController:
     break in arrival order, so equal-priority traffic — the default —
     keeps the original FIFO behavior.
 
+    Multi-tenant weighted fair share (the service tier's per-tenant
+    token bucket over this quota): ``set_share(group, weight)`` registers
+    a tenant's weight; waiters carrying a weighted ``group`` are ordered
+    by *normalized admitted work* — slots ever granted to the group
+    divided by its weight — so under sustained contention the granted
+    invocation counts converge to the weight ratio. Fair share
+    dominates between distinct weighted groups; priority+aging decides
+    within a group (and for all group-less waiters, preserving the
+    original behavior). A group that stops contending simply stops
+    accumulating work — no tenant starves, no tenant banks idle credit
+    forever beyond its deficit.
+
     ``max_in_flight`` is the observed high-water mark (test/ops signal
     that the quota was never exceeded).
     """
 
     def __init__(self, quota: int, *,
-                 aging_interval_s: float = AGING_INTERVAL_S):
+                 aging_interval_s: float = AGING_INTERVAL_S,
+                 shares: dict[str, float] | None = None):
         if quota < 1:
             raise ValueError(f"concurrency quota must be >= 1, got {quota}")
         self.quota = quota
@@ -81,29 +95,61 @@ class AdmissionController:
         self._waiters: list[_Waiter] = []
         self._seq = itertools.count()
         self.max_in_flight = 0
+        self.shares: dict[str, float] = dict(shares or {})
+        self._admitted: dict[str, int] = {}
 
     @property
     def in_flight(self) -> int:
         with self._cv:
             return self._in_flight
 
-    def _is_best(self, w: _Waiter, now: float) -> bool:
-        we = w.effective(now, self.aging_interval_s)
-        for o in self._waiters:
-            if o is w:
-                continue
-            oe = o.effective(now, self.aging_interval_s)
-            if oe > we or (oe == we and o.seq < w.seq):
-                return False
-        return True
+    def set_share(self, group: str, weight: float) -> None:
+        """Register (or update) a tenant group's fair-share weight."""
+        if weight <= 0:
+            raise ValueError(f"share weight must be > 0, got {weight}")
+        with self._cv:
+            self.shares[group] = float(weight)
+            self._cv.notify_all()
 
-    def acquire(self, want: int, priority: int = 0) -> int:
+    @property
+    def admitted_by_group(self) -> dict[str, int]:
+        """Slots ever granted per weighted group (fair-share evidence)."""
+        with self._cv:
+            return dict(self._admitted)
+
+    def _normalized(self, group: str | None) -> float | None:
+        """Admitted work normalized by weight; None for unweighted."""
+        weight = self.shares.get(group) if group is not None else None
+        if not weight:
+            return None
+        return self._admitted.get(group, 0) / weight
+
+    def _beats(self, a: _Waiter, b: _Waiter, now: float) -> bool:
+        """Strict service order: fair-share deficit between distinct
+        weighted groups, then effective priority, then arrival."""
+        na, nb = self._normalized(a.group), self._normalized(b.group)
+        if na is not None and nb is not None and a.group != b.group \
+                and na != nb:
+            return na < nb
+        ae = a.effective(now, self.aging_interval_s)
+        be = b.effective(now, self.aging_interval_s)
+        if ae != be:
+            return ae > be
+        return a.seq < b.seq
+
+    def _is_best(self, w: _Waiter, now: float) -> bool:
+        return all(o is w or self._beats(w, o, now)
+                   for o in self._waiters)
+
+    def acquire(self, want: int, priority: int = 0,
+                group: str | None = None) -> int:
         """Block until slots are free *and* this caller is the
-        best-priority waiter; grant ``min(want, available)``."""
+        best-ranked waiter (fair share, then priority); grant
+        ``min(want, available)``."""
         if want <= 0:
             return 0
         with self._cv:
-            w = _Waiter(priority, time.monotonic(), next(self._seq))
+            w = _Waiter(priority, time.monotonic(), next(self._seq), group)
             self._waiters.append(w)
             try:
                 while True:
@@ -119,6 +165,8 @@ class AdmissionController:
             grant = min(want, self.quota - self._in_flight)
             self._in_flight += grant
             self.max_in_flight = max(self.max_in_flight, self._in_flight)
+            if group is not None and grant > 0:
+                self._admitted[group] = self._admitted.get(group, 0) + grant
             # remaining capacity may serve the next-best waiter
             self._cv.notify_all()
             return grant
@@ -277,7 +325,7 @@ class FaasPlatform:
                     specs: list[dict], *, pipeline: int, attempt: int = 0,
                     cancel_check: Callable[[], None] | None = None,
                     run: Callable[[dict], InvocationResult] | None = None,
-                    priority: int = 0,
+                    priority: int = 0, group: str | None = None,
                     ) -> list[InvocationResult]:
         """Run a fleet of fragments concurrently in wall-clock.
 
@@ -304,7 +352,7 @@ class FaasPlatform:
             for spec in specs:
                 if cancel_check is not None:
                     cancel_check()
-                self.admission.acquire(1, priority=priority)
+                self.admission.acquire(1, priority=priority, group=group)
                 try:
                     fut = self.executor.submit(self._run_slot, run, spec)
                 except BaseException:

@@ -33,17 +33,14 @@ import msgpack
 
 from repro.storage.object_store import ObjectStore
 
-# One process-wide condition serializes claim writes and wakes waiters on
-# publish/abandon across every registry instance — sessions sharing one
-# backing store share in-flight state through the store itself, so the
-# notification channel must span registry instances too. Cross-process
-# waiters fall back to the poll interval.
-_INFLIGHT_CV = threading.Condition()
-# In-process waiters wake via notify (instant, free); the billed KV
-# re-read happens on notify or at the coarse cross-process interval.
-# The short wake interval only drives cancel_check/TTL responsiveness.
-_WAKE_POLL_S = 0.05
-_CROSS_PROCESS_POLL_S = 1.0
+# One process-wide lock serializes claim writes across every registry
+# instance sharing this interpreter (the conditional-put analog needs a
+# read-check-write critical section). Waiter wake-ups go through the
+# store's ``watch`` primitive instead: publish/abandon are ordinary
+# puts/deletes, which the KV backend turns into notifications (memory)
+# or version-poll wake-ups with exponential backoff (filesystem) — no
+# billed KV reads happen while waiting.
+_CLAIM_LOCK = threading.Lock()
 
 
 class ResultRegistry:
@@ -91,7 +88,7 @@ class ResultRegistry:
         complete or another query is executing it (``await_complete``).
         A claim older than ``claim_ttl_s`` is stolen (orphaned owner).
         """
-        with _INFLIGHT_CV:
+        with _CLAIM_LOCK:
             entry = self._read(sem_hash)
             if entry is not None and not self._stale(entry):
                 return False
@@ -110,22 +107,21 @@ class ResultRegistry:
         self.register(sem_hash, prefix=prefix, n_fragments=n_fragments,
                       partitioning=partitioning, schema=schema,
                       stats=stats)
-        with _INFLIGHT_CV:
-            self._owned.pop(sem_hash, None)
-            _INFLIGHT_CV.notify_all()
+        # the put itself is the notification: store watchers wake
+        self._owned.pop(sem_hash, None)
 
     def abandon(self, sem_hash: str) -> None:
         """Drop an unfinished claim (owner failed or was cancelled) so a
         waiter can re-claim and run the pipeline itself. Only the claim
         this registry wrote is deleted — if the claim was TTL-stolen in
         the meantime, the stealer's live claim stays untouched."""
-        with _INFLIGHT_CV:
+        with _CLAIM_LOCK:
             token = self._owned.pop(sem_hash, None)
             entry = self._read(sem_hash)
             if (entry is not None and not entry.get("complete")
                     and entry.get("owner") == token):
+                # the delete is the notification: store watchers wake
                 self.store.delete(self._key(sem_hash))
-            _INFLIGHT_CV.notify_all()
 
     def await_complete(self, sem_hash: str,
                        cancel_check=None) -> dict | None:
@@ -137,28 +133,33 @@ class ResultRegistry:
         after which the caller should try to ``claim`` again.
         ``cancel_check`` is polled while waiting and may raise to abort
         the wait.
+
+        Waiting is *event-driven*: the claim key's version token is
+        captured before each read, then ``store.watch`` blocks until a
+        writer changes the key (publish overwrites it, abandon deletes
+        it) or the claim's TTL runs out. Version observation is a HEAD
+        analog, so no billed KV requests are issued while waiting — the
+        billed re-read happens once per actual change.
         """
-        with _INFLIGHT_CV:
+        key = self._key(sem_hash)
+        while True:
+            # token BEFORE read: a publish that lands between the two is
+            # caught by watch() returning immediately on the stale token
+            token = self.store.version(key)
             entry = self._read(sem_hash)
-            last_read = time.monotonic()
-            while True:
-                if entry is None or self._stale(entry):
-                    return None
-                if entry.get("complete"):
-                    self.dedup_hits += 1
-                    return entry
-                if cancel_check is not None:
-                    cancel_check()
-                notified = _INFLIGHT_CV.wait(timeout=_WAKE_POLL_S)
-                # staleness is judged on the cached entry (claimed_at is
-                # immutable per claim), so the billed KV read only
-                # happens when something can actually have changed:
-                # an in-process publish/abandon notification, or the
-                # coarse cross-process poll interval
-                if notified or (time.monotonic() - last_read
-                                >= _CROSS_PROCESS_POLL_S):
-                    entry = self._read(sem_hash)
-                    last_read = time.monotonic()
+            if entry is None or self._stale(entry):
+                return None
+            if entry.get("complete"):
+                self.dedup_hits += 1
+                return entry
+            if cancel_check is not None:
+                cancel_check()
+            # wake on publish/abandon, or when the TTL can have expired
+            # (orphaned owner) — whichever comes first
+            ttl_left = self.claim_ttl_s - (time.time()
+                                           - entry.get("claimed_at", 0.0))
+            self.store.watch(key, token, timeout_s=max(ttl_left, 0.0) + 0.01,
+                             cancel_check=cancel_check)
 
     # -- completed entries ---------------------------------------------------
     def register(self, sem_hash: str, *, prefix: str, n_fragments: int,

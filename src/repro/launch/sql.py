@@ -49,6 +49,55 @@ def _print_result(session, handle, analyze: bool = False) -> None:
           f"adaptations {n_adapt}")
 
 
+def _print_service_result(session, handle) -> None:
+    res = handle.result()
+    entry = handle.entry()
+    cols = res.fetch(session.store)
+    names = [n for n in res.output_names if n in cols]
+    print(f"\n[{handle.request_id}] {entry.status.value} "
+          f"(tenant={entry.tenant}, attempt={entry.attempt})")
+    print(" | ".join(f"{n:>16s}" for n in names))
+    n_rows = len(next(iter(cols.values()))) if cols else 0
+    for i in range(min(n_rows, 20)):
+        print(" | ".join(f"{cols[n][i]:>16.4f}"
+                         if np.issubdtype(cols[n].dtype, np.floating)
+                         else f"{cols[n][i]:>16}" for n in names))
+    if n_rows > 20:
+        print(f"… {n_rows - 20} more rows")
+    slo = ""
+    if entry.deadline_s is not None:
+        slo = (f" · deadline {entry.deadline_s:g}s "
+               f"{'MISSED' if res.deadline_missed else 'met'}")
+    print(f"[{handle.request_id}] sim latency {res.sim_latency_s:.2f}s · "
+          f"cost {res.cost_cents:.4f}¢ · "
+          f"cache hits {res.cache_hits}{slo}")
+
+
+def _run_service(session, statements, args) -> None:
+    """Route the queries through the durable service tier so the CLI
+    exercises ledger + admission + SLO plumbing end-to-end."""
+    from repro.service import QueryService, TenantConfig
+
+    tenant = args.tenant or "cli"
+    with QueryService(session, tenants=(TenantConfig(
+            tenant, deadline_s=args.deadline,
+            budget_cents=args.budget_cents),)) as svc:
+        handles = [svc.submit(stmt, tenant=tenant) for stmt in statements]
+        for handle in handles:
+            _print_service_result(session, handle)
+        st = svc.stats()
+        t = st["tenants"][tenant]
+        budget = ("unmetered" if t["budget_cents"] is None else
+                  f"{t['window_spent_cents']:.4f}/{t['budget_cents']:g}¢")
+        print(f"\n[sql] service {st['service_id']}: "
+              f"{sum(st['requests_by_status'].values())} requests "
+              f"{st['requests_by_status']} · tenant {tenant}: "
+              f"budget {budget} · "
+              f"throttled {t['throttled_admissions']} · "
+              f"degraded {t['degraded_dispatches']} · "
+              f"deadline misses {st['deadline_misses']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sf", type=float, default=0.01)
@@ -72,6 +121,17 @@ def main() -> None:
                          "barriers (compile-time plan runs as-is)")
     ap.add_argument("--verbose", action="store_true",
                     help="trace pipeline/straggler/retry events")
+    ap.add_argument("--tenant", default=None,
+                    help="run through the query service tier as this "
+                         "tenant (durable ledger + fair-share admission)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="SLO deadline in simulated seconds — drives "
+                         "per-stage latency budgets for fleet sizing "
+                         "(implies the service tier)")
+    ap.add_argument("--budget-cents", type=float, default=None,
+                    help="tenant cost budget in cents per window — "
+                         "over-budget runs degrade, then throttle "
+                         "(implies the service tier)")
     args = ap.parse_args()
 
     cfg = CoordinatorConfig(
@@ -101,6 +161,12 @@ def main() -> None:
     if args.explain:
         for stmt in statements:
             print(session.explain(stmt))
+        return
+
+    if args.tenant or args.deadline is not None \
+            or args.budget_cents is not None:
+        with session:
+            _run_service(session, statements, args)
         return
 
     with session:

@@ -30,6 +30,26 @@ def _columns_of(node: LNode) -> set[str]:
     raise TypeError(node)
 
 
+def _ordered_columns_of(node: LNode) -> list[str]:
+    """Output columns in *schema* order — LScan's tuple order is the
+    catalog's column order (keys first), so callers that must keep "one
+    arbitrary column" alive pick deterministically, and pick a key
+    column rather than whatever a hash-randomized set yields first
+    (string-typed payload columns cannot enter an XLA block)."""
+    if isinstance(node, LScan):
+        return list(node.schema_cols)
+    if isinstance(node, (LFilter, LSort, LLimit)):
+        return _ordered_columns_of(node.child)
+    if isinstance(node, LProject):
+        return [n for n, _ in node.exprs]
+    if isinstance(node, LJoin):
+        return (_ordered_columns_of(node.left)
+                + _ordered_columns_of(node.right))
+    if isinstance(node, LAggregate):
+        return list(node.group_cols) + [n for n, _, _ in node.aggs]
+    raise TypeError(node)
+
+
 # -- rule: predicate pushdown -------------------------------------------------
 
 def push_filters(node: LNode) -> LNode:
@@ -111,8 +131,9 @@ def prune_columns(node: LNode, needed: set[str] | None = None) -> LNode:
             if arg is not None:
                 child_needed |= set(ast.collect_columns(arg))
         if not child_needed:
-            # count(*) over no columns: keep one arbitrary column alive
-            child_needed = set(list(_columns_of(node.child))[:1])
+            # count(*) over no columns: keep one column alive — the
+            # schema-order first (a key column), deterministically
+            child_needed = set(_ordered_columns_of(node.child)[:1])
         return LAggregate(prune_columns(node.child, child_needed),
                           node.group_cols, node.aggs)
     if isinstance(node, LSort):

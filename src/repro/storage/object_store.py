@@ -16,11 +16,19 @@ import dataclasses
 import os
 import tempfile
 import threading
-from typing import Iterable
+import time
+from typing import Callable, Iterable
 
 import numpy as np
 
 from repro.storage.tiers import TIERS, StorageTier
+
+# Watch (version-polling) backoff: polling a key's version is a HEAD
+# analog — free — but each poll is a syscall/lock acquisition, so waiters
+# back off exponentially between polls. The cap doubles as the
+# cancel-check interval, so a cancelled waiter never sleeps longer.
+WATCH_BACKOFF_INITIAL_S = 0.002
+WATCH_BACKOFF_MAX_S = 0.05
 
 
 @dataclasses.dataclass
@@ -75,6 +83,40 @@ class Backend:
     def delete(self, key: str) -> None:
         raise NotImplementedError
 
+    # -- watch/notify seam -------------------------------------------------
+    def version(self, key: str) -> str | None:
+        """The key's version token, or None while the key is absent —
+        unlike ``etag``, never raises; absence is a observable state a
+        watcher can wait on (claim deleted, entry not yet written)."""
+        try:
+            return self.etag(key)
+        except (KeyError, FileNotFoundError, OSError):
+            return None
+
+    def watch(self, key: str, token: str | None, deadline: float,
+              cancel_check: Callable[[], None] | None = None) -> str | None:
+        """Block until ``key``'s version differs from ``token`` or the
+        monotonic ``deadline`` passes; returns the current version.
+
+        Base implementation: version polling with exponential backoff
+        (shared-filesystem stores have no notification channel).
+        Backends with an in-process write path override this with a
+        notify-on-put wait. ``cancel_check`` is polled between sleeps
+        and may raise to abort the wait.
+        """
+        delay = WATCH_BACKOFF_INITIAL_S
+        while True:
+            cur = self.version(key)
+            if cur != token:
+                return cur
+            now = time.monotonic()
+            if now >= deadline:
+                return cur
+            if cancel_check is not None:
+                cancel_check()
+            time.sleep(min(delay, deadline - now))
+            delay = min(delay * 2, WATCH_BACKOFF_MAX_S)
+
 
 class MemoryBackend(Backend):
     """Dict-backed store; thread-safe; shared within one process."""
@@ -83,11 +125,15 @@ class MemoryBackend(Backend):
         self._objects: dict[str, bytes] = {}
         self._versions: dict[str, int] = {}
         self._lock = threading.Lock()
+        # watch/notify: every put/delete wakes watchers instantly, so
+        # in-process waiters never pay the polling backoff
+        self._watch_cv = threading.Condition(self._lock)
 
     def put(self, key: str, data: bytes) -> None:
         with self._lock:
             self._objects[key] = bytes(data)
             self._versions[key] = self._versions.get(key, 0) + 1
+            self._watch_cv.notify_all()
 
     def get(self, key: str, rng: tuple[int, int] | None) -> bytes:
         with self._lock:
@@ -118,6 +164,25 @@ class MemoryBackend(Backend):
     def delete(self, key: str) -> None:
         with self._lock:
             self._objects.pop(key, None)
+            self._watch_cv.notify_all()
+
+    def watch(self, key: str, token: str | None, deadline: float,
+              cancel_check: Callable[[], None] | None = None) -> str | None:
+        with self._watch_cv:
+            while True:
+                cur = (f"v{self._versions[key]}-{len(self._objects[key])}"
+                       if key in self._objects else None)
+                if cur != token:
+                    return cur
+                now = time.monotonic()
+                if now >= deadline:
+                    return cur
+                if cancel_check is not None:
+                    cancel_check()
+                # bounded wait: cancel_check stays responsive even if no
+                # writer ever notifies
+                self._watch_cv.wait(
+                    timeout=min(WATCH_BACKOFF_MAX_S, deadline - now))
 
 
 class FilesystemBackend(Backend):
@@ -248,6 +313,28 @@ class ObjectStore:
     def etag(self, key: str) -> str:
         """Version token for ``key`` (HEAD analog; not a billed request)."""
         return self.backend.etag(key)
+
+    def version(self, key: str) -> str | None:
+        """Like ``etag`` but None for an absent key (never raises)."""
+        return self.backend.version(key)
+
+    def watch(self, key: str, token: str | None = None, *,
+              timeout_s: float | None = None,
+              cancel_check: Callable[[], None] | None = None) -> str | None:
+        """Block until ``key``'s version differs from ``token``.
+
+        The store-level notification primitive (DynamoDB-streams / etcd
+        watch analog): waiters observe a version token with ``version``,
+        then ``watch`` until a writer changes (or deletes/creates) the
+        key. Returns the current version — equal to ``token`` iff the
+        wait timed out. Memory backends wake watchers on every put and
+        delete; filesystem backends fall back to version polling with
+        exponential backoff. Version reads are HEAD analogs: no billed
+        KV requests are issued while waiting.
+        """
+        deadline = time.monotonic() + (3600.0 if timeout_s is None
+                                       else max(timeout_s, 0.0))
+        return self.backend.watch(key, token, deadline, cancel_check)
 
     def exists(self, key: str) -> bool:
         return self.backend.exists(key)
