@@ -20,6 +20,10 @@ measurements on this host.
   tenants  → service        (query service tier: fair-share slot split,
                              SLO deadline misses, DAG shared-subplan
                              dedup — all asserted)
+  barriers → pipelined      (barrier vs barrier-free schedule on a
+                             skewed-producer join: row parity,
+                             wall-clock reduction, and straggler-free
+                             first byte — all asserted)
   kernels  → Pallas kernels (interpret mode on CPU)
 
 ``--json PATH`` additionally writes the rows as a JSON snapshot (the
@@ -48,6 +52,7 @@ SUITES = {
     "adaptive": suites.bench_adaptive,
     "shuffle": suites.bench_shuffle,
     "service": suites.bench_service,
+    "pipelined": suites.bench_pipelined,
     "kernels": suites.bench_kernels,
 }
 

@@ -209,7 +209,10 @@ class Reoptimizer:
             part = entry.get("partitioning") or {}
             rows = (entry.get("stats") or {}).get("partition_rows")
             if part.get("kind") != "hash" or rows is None \
-                    or sem in p.params.source_partitions:
+                    or sem in p.params.source_partitions \
+                    or entry.get("partial"):
+                # partial (pilot-K) manifests cannot prove a partition
+                # empty — producers still in flight may yet fill it
                 continue
             nonempty = [d for d, r in enumerate(rows) if r > 0]
             if len(nonempty) < len(rows):
@@ -259,6 +262,13 @@ class Reoptimizer:
                     driving_rows[d] += st["partition_rows"][d]
         if not any(not leaf.under_build for leaf, _, _ in entries):
             driving_rows = [1] * D      # defensive: no driving source
+        if any(entry.get("partial")
+               for leaf, _, _ in entries
+               for entry in [sources.get(leaf.op["source"]) or {}]):
+            # pilot-K estimates: a partition with no rows in the pilot
+            # subset may still be filled by in-flight producers — every
+            # partition must stay assigned or its rows would be dropped
+            driving_rows = [max(r, 1) for r in driving_rows]
         nonempty = [d for d in range(D) if driving_rows[d] > 0]
         total_bytes = int(sum(bytes_per_part[d] for d in nonempty))
 

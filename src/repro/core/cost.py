@@ -29,6 +29,12 @@ EC2_CENTS_PER_GIB_S = 1.7 / 3600.0
 EXCHANGE_MIN_SAVING_CENTS = 0.002
 EXCHANGE_HYSTERESIS = 0.15
 
+# Pipelined execution: fraction of post-first-batch read time a worker
+# hides behind kernel compute by double-buffering (prefetch the next
+# top-up batch while the kernel chews the previous one). 1.0 would be
+# perfect overlap; the residue models prefetch ramp + final-batch drain.
+PIPELINE_OVERLAP_EFFICIENCY = 0.9
+
 # -- Table 2: startup latency [seconds] -------------------------------------------
 
 LAMBDA_COLD_START = {"min": 0.122, "max": 0.451, "avg": 0.185}
@@ -255,6 +261,36 @@ class CostModel:
         mem_budget = self.worker_memory_gib * 2**30 * memory_fill_fraction
         w = max(w, math.ceil(nbytes / max(mem_budget, 1)), 1)
         return min(w, max_workers)
+
+    # -- pipelined overlap accounting --------------------------------------------
+    @staticmethod
+    def overlapped_io_s(total_io_s: float, first_batch_s: float,
+                        efficiency: float = PIPELINE_OVERLAP_EFFICIENCY
+                        ) -> tuple[float, float]:
+        """Effective I/O wall time for a double-buffered consumer, and
+        the simulated seconds the overlap saved.
+
+        The first batch is always exposed (nothing to overlap against);
+        of the remaining ``total_io_s - first_batch_s`` read time, the
+        overlap efficiency's share hides behind kernel compute. Returns
+        ``(effective_io_s, saved_s)``.
+        """
+        first = min(max(first_batch_s, 0.0), max(total_io_s, 0.0))
+        rest = max(total_io_s - first, 0.0)
+        saved = efficiency * rest
+        return total_io_s - saved, saved
+
+    @staticmethod
+    def pipeline_start_offset_s(completions_s: list[float],
+                                fraction: float) -> float:
+        """When a consumer pipeline may start: the k-th order statistic
+        of its producers' completion times, k = ⌈fraction · n⌉ — i.e.
+        the moment the admission gate's partition fraction is met. An
+        empty producer list (cache hits) starts immediately."""
+        if not completions_s:
+            return 0.0
+        k = max(1, math.ceil(fraction * len(completions_s)))
+        return sorted(completions_s)[k - 1]
 
     @staticmethod
     def stage_latency_budget(deadline_s: float, elapsed_s: float,

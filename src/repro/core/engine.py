@@ -109,6 +109,25 @@ class PipelineReport:
     est_exchange_requests: int = 0
     exchange_requests: int = 0
     merge_fragments: int = 0
+    # barrier-free pipelined execution: whether this pipeline consumed
+    # partial upstream manifests, how many producers' stats seeded its
+    # re-optimization (pilot-K), the sim time of its first available
+    # input batch, the top-up batches drained after launch, and the read
+    # time hidden behind kernel compute (double-buffering)
+    pipelined: bool = False
+    pilot_k: int = 0
+    first_input_s: float = 0.0
+    topups: int = 0
+    overlap_saved_s: float = 0.0
+    # the pipeline's window on the query's simulated timeline, and the
+    # per-fragment completion offsets downstream admission gates key on
+    sim_start_s: float = 0.0
+    sim_end_s: float = 0.0
+    dispatch_s: float = 0.0
+    producer_completions: list = dataclasses.field(default_factory=list)
+    # recompute cost of this pipeline alone — the registry's age×cost
+    # eviction keep-score
+    cost_cents: float = 0.0
 
 
 @dataclasses.dataclass
@@ -166,6 +185,22 @@ class CoordinatorConfig:
     # tier and seed the planner's estimates with them (downward-only),
     # so recurring predicates converge without waiting for a barrier.
     calibrate_selectivity: bool = True
+    # Barrier-free pipelined execution (incremental exchange manifests):
+    # every pipeline runs on its own scheduler thread; a consumer
+    # launches once `pipeline_start_fraction` of each upstream fleet's
+    # partitions has landed *and* that fleet is fully submitted (the
+    # deadlock-freedom gate), tops up as later manifests arrive, and
+    # re-optimizes on the first `pilot_k` producers' observed stats
+    # extrapolated to the fleet. `pipelined=False` restores the
+    # bit-compatible all-or-nothing stage-barrier schedule.
+    pipelined: bool = True
+    pipeline_start_fraction: float = 0.5
+    pilot_k: int = 2
+    pipelined_wait_timeout_s: float = 600.0
+    # Scan-selectivity pilot: an uncalibrated scan→filter pipeline with
+    # at least this many scan units probes one unit first and records
+    # the observed selectivity before the fleet launches.
+    pilot_scan_min_units: int = 4
 
 
 class QueryEngine:
@@ -205,7 +240,16 @@ class QueryEngine:
         self.tenant = tenant
         self.deadline_s = deadline_s
         self.fleet_cap = fleet_cap
-        self._stage_budget_s: float | None = None
+        # pipelines run on concurrent scheduler threads (pipelined mode),
+        # each with its own stage budget; a failing pipeline poisons its
+        # siblings through _sibling_abort so their waits unwind fast
+        self._budget_local = threading.local()
+        self._sibling_abort: BaseException | None = None
+        # per-plan admission gates: sem_hash -> {"event", "floor"} —
+        # a pipelined consumer may not consult the registry for a
+        # source this plan itself produces until its producer thread
+        # has committed (cache hit, or streams reset for execution)
+        self._source_gates: dict[str, dict] = {}
         self._cancel_check = cancel_check
         self.admission: AdmissionController = self.platform.admission
         cfg = self.config
@@ -237,6 +281,8 @@ class QueryEngine:
         return self.execute_plan(self.plan_sql(sql))
 
     def execute_plan(self, plan: PhysicalPlan) -> QueryResult:
+        if self.config.pipelined:
+            return self._execute_plan_pipelined(plan)
         t_wall = time.perf_counter()
         stats = QueryStats(query_id=self.query_id)
         stages = plan.stages()
@@ -262,6 +308,100 @@ class QueryEngine:
         return QueryResult(self._result_locations(root),
                            plan.output_names, stats)
 
+    def _execute_plan_pipelined(self, plan: PhysicalPlan) -> QueryResult:
+        """Barrier-free schedule: every pipeline gets its own scheduler
+        thread immediately; consumers block inside ``_resolve_sources``
+        on their upstream partial manifests (the admission gate) instead
+        of on a stage barrier, then top up as later partitions land.
+
+        A failing pipeline poisons its own partial streams (in-flight
+        consumer workers fail fast) and trips ``_sibling_abort`` so
+        sibling threads unwind at their next cancel check; the first
+        *root-cause* error (in pipeline order) is re-raised."""
+        t_wall = time.perf_counter()
+        stats = QueryStats(query_id=self.query_id)
+        stages = plan.stages()
+        self._sibling_abort = None
+        self._source_gates = {
+            p.sem_hash: {"event": threading.Event(), "floor": None}
+            for p in plan.pipelines.values()}
+        # deterministic per-pipeline budget: the deadline split evenly
+        # over all stages up front — there is no barrier-elapsed feedback
+        # to re-split on when every stage is in flight at once
+        budget = None
+        if self.deadline_s is not None:
+            budget = self.cost_model.stage_latency_budget(
+                self.deadline_s, 0.0, max(len(stages), 1))
+        order = [pid for stage in stages for pid in stage]
+        reports: dict[int, PipelineReport] = {}
+        errors: dict[int, BaseException] = {}
+
+        def run(pid: int) -> None:
+            p = plan.pipelines[pid]
+            try:
+                self._stage_budget_s = budget
+                reports[pid] = self._run_pipeline(p, stats)
+            except BaseException as e:
+                errors[pid] = e
+                self._sibling_abort = e
+
+        threads = [threading.Thread(target=run, args=(pid,), daemon=True,
+                                    name=f"{self.query_id}-p{pid}")
+                   for pid in order]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self._sibling_abort = None
+        if errors:
+            for pid in order:    # prefer a root cause over induced aborts
+                err = errors.get(pid)
+                if err is not None and not isinstance(err, QueryCancelled):
+                    raise err
+            raise errors[next(pid for pid in order if pid in errors)]
+        for pid in order:
+            stats.pipelines.append(reports[pid])
+        self._sim_timeline(plan, stages, reports, stats)
+        stats.wall_s = time.perf_counter() - t_wall
+        stats.cost.merge(
+            self.cost_model.coordinator_cost(stats.sim_latency_s))
+        root = plan.pipelines[plan.root_pid]
+        return QueryResult(self._result_locations(root),
+                           plan.output_names, stats)
+
+    def _sim_timeline(self, plan: PhysicalPlan, stages: list[list[int]],
+                      reports: dict[int, PipelineReport],
+                      stats: QueryStats) -> None:
+        """Simulated-makespan post-pass for the pipelined schedule: a
+        consumer starts not at its slowest producer's finish (the
+        barrier) but at the admission fraction's k-th order statistic of
+        each upstream fleet's simulated completions — and cannot finish
+        before the producers whose tail partitions it still reads."""
+        frac = self.config.pipeline_start_fraction
+        end: dict[int, float] = {}
+        for stage in stages:
+            for pid in stage:
+                r = reports[pid]
+                start = 0.0
+                tail = 0.0
+                for dep in plan.pipelines[pid].deps:
+                    rr = reports[dep]
+                    if rr.cache_hit:
+                        continue
+                    if r.pipelined:
+                        avail = (rr.sim_start_s + rr.dispatch_s
+                                 + CostModel.pipeline_start_offset_s(
+                                     rr.producer_completions, frac))
+                        start = max(start, min(avail, end[dep]))
+                    else:
+                        start = max(start, end[dep])
+                    tail = max(tail, end[dep])
+                r.sim_start_s = start
+                r.sim_end_s = max(start + r.sim_s, tail) \
+                    if not r.cache_hit else start
+                end[pid] = r.sim_end_s
+        stats.sim_latency_s = max(end.values()) if end else 0.0
+
     # -- result location ------------------------------------------------------
     def _result_locations(self, root: Pipeline) -> list[str]:
         """Resolve the root pipeline's objects from its registry entry.
@@ -279,9 +419,21 @@ class QueryEngine:
         return [f"{prefix}/f{f:04d}/out.spax" for f in range(n)]
 
     # -- pipeline scheduling ----------------------------------------------------
+    @property
+    def _stage_budget_s(self) -> float | None:
+        """Per-stage latency budget, thread-local: in pipelined mode
+        concurrent pipeline threads carry different budgets."""
+        return getattr(self._budget_local, "value", None)
+
+    @_stage_budget_s.setter
+    def _stage_budget_s(self, value: float | None) -> None:
+        self._budget_local.value = value
+
     def _check_cancel(self) -> None:
         if self._cancel_check is not None:
             self._cancel_check()
+        if self._sibling_abort is not None:
+            raise QueryCancelled("sibling pipeline failed; aborting")
 
     def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
         report = PipelineReport(p.pid, p.sem_hash, p.n_fragments,
@@ -296,6 +448,7 @@ class QueryEngine:
             while True:
                 if self.registry.lookup(p.sem_hash):
                     report.cache_hit = True
+                    self._open_source_gate(p.sem_hash)
                     self.observer.on_pipeline_complete(self.query_id,
                                                        report)
                     return report
@@ -307,6 +460,7 @@ class QueryEngine:
                 if entry is not None:
                     report.cache_hit = True
                     report.deduped = True
+                    self._open_source_gate(p.sem_hash)
                     self.observer.on_pipeline_complete(self.query_id,
                                                        report)
                     return report
@@ -314,6 +468,13 @@ class QueryEngine:
         try:
             return self._execute_pipeline(p, stats, report)
         except BaseException:
+            if self.config.pipelined \
+                    and (claimed or not self.config.use_result_cache):
+                # poison the partial streams *before* abandoning the
+                # claim: a waiter that re-claims resets them fresh in
+                # begin_partial, so abort-then-abandon cannot poison the
+                # new owner's streams — the reverse order could
+                self.registry.abort_partial(p.sem_hash)
             if claimed:
                 self.registry.abandon(p.sem_hash)
             raise
@@ -321,7 +482,13 @@ class QueryEngine:
     def _execute_pipeline(self, p: Pipeline, stats: QueryStats,
                           report: PipelineReport) -> PipelineReport:
         prefix = f"results/{p.sem_hash}"
-        sources = self._resolve_sources(p.op)
+        cfg = self.config
+        pipelined = cfg.pipelined
+        sources = self._resolve_sources(p.op, pipelined=pipelined)
+        partials = [e for e in sources.values() if e.get("partial")]
+        if partials:
+            report.pipelined = True
+            report.pilot_k = max(e["partial"]["pilot_k"] for e in partials)
 
         # Barrier hook: every physical decision downstream of this
         # barrier is re-evaluated against the observed statistics the
@@ -338,6 +505,8 @@ class QueryEngine:
                 for a in adaptations:
                     self.observer.on_adaptation(self.query_id, p.pid, a)
         self._apply_slo_fleet(p, report)
+        if pipelined:
+            self._pilot_scan(p, report, stats)
 
         if p.partitioning.kind == "hash":
             report.exchange_strategy = p.partitioning.strategy
@@ -356,81 +525,190 @@ class QueryEngine:
             for f in range(p.n_fragments)
         }
 
-        cfg = self.config
         two_level = p.n_fragments >= cfg.two_level_threshold
         dispatch = self.platform.dispatch_time_s(p.n_fragments,
                                                  two_level=two_level)
+        report.dispatch_s = dispatch
         extra_fragments: list[dict] = []
 
-        # The whole fleet runs concurrently in wall-clock; each fragment
-        # holds one admission slot for exactly its own lifetime
-        # (retries included), released on completion — so concurrent
-        # queries interleave at fragment granularity, not wave
-        # granularity. ``completions`` holds per-fragment *runtimes*.
-        results = self.platform.invoke_many(
-            self.handler, list(specs.values()), pipeline=p.pid,
-            cancel_check=self._check_cancel, priority=self.priority,
-            group=self.tenant,
-            run=lambda spec: self._run_fragment(p, spec, report, stats,
-                                                extra_fragments))
-        completions: dict[int, float] = {
-            f: res.sim_runtime_s for f, res in zip(specs, results)}
-
-        # Straggler mitigation: detect on per-fragment *runtimes* (never
-        # on quota-wave-offset completion times — a later wave's normal
-        # fragment is not a straggler) against the fleet's fast quartile
-        # (the median is already contaminated in small or straggler-heavy
-        # fleets), then re-trigger; the effective runtime races the
-        # original against the duplicate — safe because workers are
-        # idempotent single-object writers.
-        if len(completions) >= 2:
-            runtimes = np.array(list(completions.values()))
-            fast = float(np.percentile(runtimes, 25, method="lower"))
-            threshold = max(cfg.straggler_detect_factor * fast,
-                            cfg.straggler_min_timeout_s)
-            for f, t in list(completions.items()):
-                if t > threshold:
-                    self.observer.on_straggler(self.query_id, p.pid, f)
-                    self.admission.acquire(1, priority=self.priority,
-                                           group=self.tenant)
-                    try:
-                        # the duplicate's rows/bytes repeat the original
-                        # worker's output — bill its cost, don't
-                        # double-count its payload
-                        dup = self._invoke(p, specs[f], report, stats,
-                                           attempt=100 + report.attempts,
-                                           count_payload=False)
-                    finally:
-                        self.admission.release(1)
-                    report.stragglers_retriggered += 1
-                    if dup.error is None:
-                        completions[f] = min(t, threshold
-                                             + dup.sim_runtime_s)
-
-        report.sim_s = (dispatch
-                        + self._sim_makespan(list(completions.values()))
-                        + cfg.response_poll_overhead_s)
-
-        n_total = p.n_fragments + len(extra_fragments)
-        publish_n = n_total
         part_dict = p.partitioning.to_dict()
+        strat = None
         if p.partitioning.kind == "hash":
             strat = exchange.get_strategy(p.partitioning.strategy)
             # consumers dispatch on the *materialized* layout
             part_dict["layout"] = strat.layout
-            if strat.merge_workers(n_total):
-                # multi-level: inject the merge wave as an extra stage of
-                # this pipeline's schedule; the published exchange is the
-                # wave's G×m grid, so downstream readers see G producers
-                publish_n = self._run_merge_wave(p, n_total, prefix,
-                                                 report, stats)
+        # incremental manifests: open the stream consumers gate on
+        # before any producer runs, so a consumer admitted mid-fleet
+        # already sees the layout metadata
+        wave = (pipelined and strat is not None
+                and bool(strat.merge_workers(p.n_fragments)))
+        merge_thread = None
+        merge_box: dict = {}
+        on_all_submitted = None
+        if pipelined:
+            floor = time.time()
+            if wave:
+                # multilevel producers stream into the l0 manifest; the
+                # consumer-facing main stream is re-opened (with the
+                # real group count) at wave launch — reset it here too
+                # so a stale sealed manifest from an earlier run of
+                # this sem cannot admit consumers in the meantime
+                self.registry.begin_partial(
+                    p.sem_hash, stream="l0", n_producers=p.n_fragments,
+                    prefix=f"{prefix}/l0")
+                self.registry.begin_partial(
+                    p.sem_hash,
+                    n_producers=exchange.merge_group_count(
+                        p.n_fragments),
+                    prefix=prefix, partitioning=part_dict,
+                    schema=p.output_schema)
+                merge_thread = threading.Thread(
+                    target=self._merge_wave_pipelined,
+                    args=(p, prefix, report, stats, merge_box),
+                    daemon=True, name=f"{self.query_id}-p{p.pid}-merge")
+            else:
+                self.registry.begin_partial(
+                    p.sem_hash, n_producers=p.n_fragments, prefix=prefix,
+                    partitioning=part_dict, schema=p.output_schema)
+            # producer committed to executing: admit consumers, but only
+            # to entries published from here on (anything older is a
+            # different run's layout)
+            self._open_source_gate(p.sem_hash, floor)
+            producer_stream = "l0" if wave else "partial"
+
+            def on_all_submitted() -> None:
+                # every producer now sits in the FIFO executor queue:
+                # admit consumers (they then only ever wait on work
+                # scheduled ahead of them — the deadlock-freedom gate)
+                # and only now launch the merge wave, so its workers
+                # also queue strictly behind the producers they drain
+                self.registry.mark_all_submitted(
+                    p.sem_hash, p.n_fragments, stream=producer_stream)
+                if merge_thread is not None:
+                    merge_thread.start()
+
+        try:
+            # The whole fleet runs concurrently in wall-clock; each
+            # fragment holds one admission slot for exactly its own
+            # lifetime (retries included), released on completion — so
+            # concurrent queries interleave at fragment granularity, not
+            # wave granularity. ``completions`` holds per-fragment
+            # *runtimes*.
+            results = self.platform.invoke_many(
+                self.handler, list(specs.values()), pipeline=p.pid,
+                cancel_check=self._check_cancel, priority=self.priority,
+                group=self.tenant,
+                run=lambda spec: self._run_fragment(p, spec, report,
+                                                    stats,
+                                                    extra_fragments),
+                on_all_submitted=on_all_submitted)
+            completions: dict[int, float] = {
+                f: res.sim_runtime_s for f, res in zip(specs, results)}
+
+            # Straggler mitigation: detect on per-fragment *runtimes*
+            # (never on quota-wave-offset completion times — a later
+            # wave's normal fragment is not a straggler) against the
+            # fleet's fast quartile (the median is already contaminated
+            # in small or straggler-heavy fleets), then re-trigger; the
+            # effective runtime races the original against the duplicate
+            # — safe because workers are idempotent single-object
+            # writers.
+            if len(completions) >= 2:
+                runtimes = np.array(list(completions.values()))
+                fast = float(np.percentile(runtimes, 25, method="lower"))
+                threshold = max(cfg.straggler_detect_factor * fast,
+                                cfg.straggler_min_timeout_s)
+                for f, t in list(completions.items()):
+                    if t > threshold:
+                        self.observer.on_straggler(self.query_id, p.pid,
+                                                   f)
+                        self.admission.acquire(1, priority=self.priority,
+                                               group=self.tenant)
+                        try:
+                            # the duplicate's rows/bytes repeat the
+                            # original worker's output — bill its cost,
+                            # don't double-count its payload
+                            dup = self._invoke(
+                                p, specs[f], report, stats,
+                                attempt=100 + report.attempts,
+                                count_payload=False)
+                        finally:
+                            self.admission.release(1)
+                        report.stragglers_retriggered += 1
+                        if dup.error is None:
+                            completions[f] = min(t, threshold
+                                                 + dup.sim_runtime_s)
+        except BaseException:
+            if pipelined:
+                # fail fast: poison the streams so in-flight consumers
+                # and the merge wave unwind instead of sitting out their
+                # top-up timeout, then collect the wave thread
+                self.registry.abort_partial(p.sem_hash)
+                if merge_thread is not None:
+                    merge_thread.join()
+            raise
+
+        report.sim_s += (dispatch
+                         + self._sim_makespan(list(completions.values()))
+                         + cfg.response_poll_overhead_s)
+        report.producer_completions = self._sim_schedule(
+            list(completions.values()))
+
+        n_total = p.n_fragments + len(extra_fragments)
+        publish_n = n_total
+        if not pipelined and strat is not None \
+                and strat.merge_workers(n_total):
+            # multi-level (barrier): inject the merge wave as an extra
+            # stage of this pipeline's schedule; the published exchange
+            # is the wave's G×m grid, so downstream readers see G
+            # producers
+            publish_n = self._run_merge_wave(p, n_total, prefix,
+                                             report, stats)
+        if pipelined:
+            try:
+                if wave:
+                    # seal l0 with the final producer count (splits
+                    # included) so merge workers drain the tail and stop
+                    # watching, then collect the concurrent wave
+                    self.registry.finish_partial(
+                        p.sem_hash, stream="l0", n_producers=n_total)
+                    merge_thread.join()
+                    err = merge_box.get("error")
+                    if err is not None:
+                        raise err
+                    publish_n = merge_box["publish_n"]
+                self.registry.finish_partial(p.sem_hash,
+                                             n_producers=publish_n)
+            except BaseException:
+                self.registry.abort_partial(p.sem_hash)
+                raise
         self._record_calibration(p, report)
         self.registry.publish(
             p.sem_hash, prefix=prefix, n_fragments=publish_n,
             partitioning=part_dict, schema=p.output_schema,
-            stats=self._manifest_stats(report))
+            stats=self._manifest_stats(report),
+            cost_cents=report.cost_cents)
         self.observer.on_pipeline_complete(self.query_id, report)
         return report
+
+    def _merge_wave_pipelined(self, p: Pipeline, prefix: str,
+                              report: PipelineReport, stats: QueryStats,
+                              box: dict) -> None:
+        """Merge-wave launcher thread (pipelined multilevel exchange):
+        waits until the admission fraction of l0 partitions has landed,
+        then runs the wave *concurrently* with the producer tail — its
+        workers top up straight from the l0 manifest."""
+        try:
+            gate = self._source_gates.get(p.sem_hash) or {}
+            self.registry.await_source_ready(
+                p.sem_hash, fraction=self.config.pipeline_start_fraction,
+                stream="l0", cancel_check=self._check_cancel,
+                timeout_s=self.config.pipelined_wait_timeout_s,
+                min_published_at=gate.get("floor"))
+            box["publish_n"] = self._run_merge_wave(
+                p, p.n_fragments, prefix, report, stats, pipelined=True)
+        except BaseException as e:      # surfaced after join
+            box["error"] = e
 
     # -- SLO-aware scan-fleet sizing (service tier) ---------------------------
     def _apply_slo_fleet(self, p: Pipeline,
@@ -482,22 +760,53 @@ class QueryEngine:
         return distinct <= self.COMBINE_GATE_FRACTION * rows
 
     def _run_merge_wave(self, p: Pipeline, producers: int, prefix: str,
-                        report: PipelineReport, stats: QueryStats) -> int:
+                        report: PipelineReport, stats: QueryStats, *,
+                        pipelined: bool = False) -> int:
         """Run the multi-level exchange's merge wave: G = ⌈√producers⌉
         workers re-partition the producers' combined l0 intermediates
         into the final G×n_dest grid, re-combining mergeable
         partial-aggregate states when the KMV gate passes. Returns G
-        (the published producer count)."""
+        (the published producer count).
+
+        Barrier mode runs the wave serially after the producer fleet on
+        the *barrier-drained* l0. Pipelined mode runs it concurrently
+        with the producer tail: wave specs carry the l0 manifest key, so
+        each merge worker starts on its group's available l0 objects and
+        tops up until the stream seals."""
         cfg = self.config
         G = exchange.merge_group_count(producers)
         op = p.op["child"] if p.op.get("t") == "final" else p.op
         combine = exchange.combine_spec(op)
-        if combine is not None and not self._combine_gate(report):
-            combine = None
+        if combine is not None:
+            # pipelined: gated on whatever producer stats have landed so
+            # far — a pilot estimate of key repetition (rows-identical
+            # either way; combine only changes intermediate bytes)
+            with self._metrics_lock:
+                gate = self._combine_gate(report)
+            if not gate:
+                combine = None
         part = p.partitioning
         grid = {"kind": "hash", "keys": list(part.keys),
                 "n_dest": part.n_dest, "tier": part.tier,
                 "strategy": "direct"}
+        mop_extra = {}
+        on_all = None
+        if pipelined:
+            # the consumer-facing main stream: downstream admission
+            # gates on the wave's G partitions, not the l0 producers
+            self.registry.begin_partial(
+                p.sem_hash, n_producers=G, prefix=prefix,
+                partitioning=dict(p.partitioning.to_dict(),
+                                  layout=exchange.get_strategy(
+                                      part.strategy).layout),
+                schema=p.output_schema)
+            mop_extra = {
+                "manifest_key": self.registry.partial_key(p.sem_hash,
+                                                          "l0"),
+                "wait_timeout_s": cfg.pipelined_wait_timeout_s}
+
+            def on_all() -> None:
+                self.registry.mark_all_submitted(p.sem_hash, G)
         specs = [{
             "query_id": p.sem_hash, "pipeline": p.pid, "fragment": j,
             "n_fragments": G,
@@ -505,7 +814,7 @@ class QueryEngine:
                    "producers": producers, "group": j, "n_groups": G,
                    "keys": list(part.keys), "n_dest": part.n_dest,
                    "combine": combine, "schema": p.output_schema,
-                   "tier": part.tier},
+                   "tier": part.tier, **mop_extra},
             "scan_units": [],
             "output": {"prefix": prefix, "partitioning": grid,
                        "schema": p.output_schema},
@@ -520,11 +829,31 @@ class QueryEngine:
             cancel_check=self._check_cancel, priority=self.priority,
             group=self.tenant,
             run=lambda spec: self._run_fragment(p, spec, mreport, stats,
-                                                extra))
-        report.sim_s += (dispatch
-                         + self._sim_makespan([r.sim_runtime_s
-                                               for r in results])
-                         + cfg.response_poll_overhead_s)
+                                                extra),
+            on_all_submitted=on_all)
+        if pipelined:
+            # the wave overlapped the producer tail: fold it into the
+            # pipeline's sim window as a concurrent phase starting at
+            # the l0 admission fraction, not a serial one. Safe to read
+            # the producer figures here — wave workers only finish after
+            # the l0 seal, which follows the producer accounting.
+            start = CostModel.pipeline_start_offset_s(
+                report.producer_completions, cfg.pipeline_start_fraction)
+            sched = self._sim_schedule([r.sim_runtime_s
+                                        for r in results])
+            with self._metrics_lock:
+                report.sim_s = max(
+                    report.sim_s,
+                    report.dispatch_s + start + dispatch + max(sched)
+                    + cfg.response_poll_overhead_s)
+                # downstream admission keys on the wave's completions
+                report.producer_completions = [start + dispatch + t
+                                               for t in sched]
+        else:
+            report.sim_s += (dispatch
+                             + self._sim_makespan([r.sim_runtime_s
+                                                   for r in results])
+                             + cfg.response_poll_overhead_s)
         report.merge_fragments = G
         report.attempts += mreport.attempts
         report.transient_failures += mreport.transient_failures
@@ -533,6 +862,11 @@ class QueryEngine:
         report.bytes_written += mreport.bytes_written
         report.exchange_requests += mreport.exchange_requests
         report.footer_cache_hits += mreport.footer_cache_hits
+        report.cost_cents += mreport.cost_cents
+        if mreport.pipelined:   # wave workers topped up from partial l0
+            report.pipelined = True
+            report.topups += mreport.topups
+            report.overlap_saved_s += mreport.overlap_saved_s
         # the wave's grid is what consumers read: its observations
         # supersede the producers' l0 intermediates in the manifest
         report.rows_out = mreport.rows_out
@@ -554,6 +888,100 @@ class QueryEngine:
         if base > 0:
             self.calibration.record(table, pred_key,
                                     report.rows_out / base)
+
+    def _publish_partial(self, p: Pipeline, spec: dict,
+                         res: InvocationResult) -> None:
+        """Stream one successful fragment's landed output (stats +
+        layout) into the pipeline's partial manifest — the
+        per-partition publish event that replaces the stage barrier.
+        Multilevel producers stream into the l0 manifest (the merge
+        wave's input); merge-wave fragments and everything else into the
+        consumer-facing main stream."""
+        if not self.config.pipelined or res.payload is None:
+            return
+        part = spec["output"]["partitioning"]
+        stream = "partial"
+        if spec["op"].get("t") != "merge_exchange" \
+                and part.get("kind") == "hash" \
+                and exchange.get_strategy(part["strategy"]).merge_workers(
+                    spec["n_fragments"]):
+            stream = "l0"
+        s = res.payload["stats"]
+        ps = res.payload.get("partition_stats") or []
+        info = {"rows": s["rows_out"], "bytes": s["bytes_written"],
+                "partition_rows": [d["rows"] for d in ps],
+                "partition_bytes": [d["bytes"] for d in ps],
+                "partition_write_s": [float(d.get("write_s", 0.0))
+                                      for d in ps]}
+        n = None
+        if spec["fragment"] >= spec["n_fragments"]:
+            n = spec["fragment"] + 1    # reassignment split grew the fleet
+        self.registry.publish_partial(p.sem_hash, spec["fragment"], info,
+                                      stream=stream, n_producers=n)
+
+    def _pilot_scan(self, p: Pipeline, report: PipelineReport,
+                    stats: QueryStats) -> None:
+        """Scan-selectivity pilot (pipelined mode): before an
+        *uncalibrated* scan→filter fleet launches, probe one scan unit
+        into a scratch prefix, record the observed selectivity in the
+        cross-query calibration store, and correct the row estimate the
+        stage was planned on. The probe is throwaway — its rows are not
+        counted (the fleet re-reads its unit), only its cost and sim
+        time are billed — and best-effort: on failure the fleet simply
+        runs on the static estimate."""
+        cfg = self.config
+        if self.calibration is None or not cfg.adaptive \
+                or not p.scan_units \
+                or len(p.scan_units) < cfg.pilot_scan_min_units \
+                or p.n_fragments < 2:
+            return
+        op = p.op["child"] if p.op.get("t") == "final" else p.op
+        sig = scan_filter_signature(op)
+        if sig is None:
+            return
+        table, pred_key = sig
+        if self.calibration.lookup(table, pred_key) is not None:
+            return                      # already calibrated: no probe
+        spec = {
+            "query_id": p.sem_hash, "pipeline": p.pid, "fragment": 0,
+            "n_fragments": 1, "op": op,
+            "scan_units": p.scan_units[:1],
+            "output": {"prefix": f"results/{p.sem_hash}/pilot",
+                       "partitioning": {"kind": "single"},
+                       "schema": p.output_schema},
+            "sources": {},
+        }
+        self.admission.acquire(1, priority=self.priority,
+                               group=self.tenant)
+        try:
+            # attempt=300: outside the fleet's retry (0..2) and
+            # straggler-duplicate (100+) attempt ranges, so deterministic
+            # fault plans target the probe and the fleet independently
+            res = self._invoke(p, spec, report, stats, attempt=300,
+                               count_payload=False)
+        finally:
+            self.admission.release(1)
+        if res.error is not None or res.payload is None:
+            return
+        s = res.payload["stats"]
+        if s["rows_in"] <= 0:
+            return
+        sel = s["rows_out"] / s["rows_in"]
+        self.calibration.record(table, pred_key, sel)
+        base = self.catalog.table(table).rows
+        est0 = p.params.est_out_rows
+        p.params.est_out_rows = int(sel * base)
+        report.est_rows = p.params.est_out_rows
+        # the probe runs serially before the fleet: bill its sim time
+        # (report.sim_s is accumulated, not assigned, downstream)
+        report.sim_s += (self.platform.dispatch_time_s(1,
+                                                       two_level=False)
+                         + res.sim_runtime_s)
+        a = {"kind": "pilot_scan", "unit_rows": int(s["rows_in"]),
+             "selectivity": round(sel, 6),
+             "est_rows_from": est0, "est_rows_to": p.params.est_out_rows}
+        report.adaptations = list(report.adaptations) + [a]
+        self.observer.on_adaptation(self.query_id, p.pid, a)
 
     def _manifest_stats(self, report: PipelineReport) -> dict:
         """The exchange-manifest statistics published with a pipeline's
@@ -577,17 +1005,28 @@ class QueryEngine:
             stats["bytes_out"] = int(sum(s["bytes"] for s in ps))
         return stats
 
-    def _sim_makespan(self, runtimes: list[float]) -> float:
-        """Simulated completion of a fleet under per-slot admission:
-        list-scheduling makespan over ``quota`` slots — each fragment
-        starts the moment a slot frees (never on a wave boundary). With
-        quota ≥ fleet size this is simply ``max(runtimes)``."""
+    def _sim_schedule(self, runtimes: list[float]) -> list[float]:
+        """Per-fragment simulated completion offsets under per-slot
+        admission: list scheduling over ``quota`` slots — each fragment
+        starts the moment a slot frees (never on a wave boundary). The
+        k-th order statistic of this list is what pipelined downstream
+        admission gates on."""
         if not runtimes:
-            return 0.0
+            return []
         slots = [0.0] * min(self.admission.quota, len(runtimes))
+        heapq.heapify(slots)
+        ends = []
         for r in runtimes:
-            heapq.heappush(slots, heapq.heappop(slots) + r)
-        return max(slots)
+            t = heapq.heappop(slots) + r
+            ends.append(t)
+            heapq.heappush(slots, t)
+        return ends
+
+    def _sim_makespan(self, runtimes: list[float]) -> float:
+        """Simulated completion of a whole fleet (see _sim_schedule).
+        With quota ≥ fleet size this is simply ``max(runtimes)``."""
+        ends = self._sim_schedule(runtimes)
+        return max(ends) if ends else 0.0
 
     # -- fragment execution with retries/reassignment -----------------------------
     def _run_fragment(self, p: Pipeline, spec: dict,
@@ -611,6 +1050,10 @@ class QueryEngine:
                 # parallel; the slower of the two is the critical path
                 res.sim_runtime_s = failed_runtime + max(
                     res.sim_runtime_s, extra_runtime)
+                # per-partition publish: stream this fragment's landed
+                # output into the pipeline's partial manifest so gated
+                # consumers start/top up before the fleet finishes
+                self._publish_partial(p, spec, res)
                 return res
             failed_runtime += res.sim_runtime_s
             with self._metrics_lock:
@@ -642,6 +1085,7 @@ class QueryEngine:
                         "reassigned fragment failed",
                         post_mortem={"pipeline": p.pid,
                                      "fragment": extra["fragment"]})
+                self._publish_partial(p, extra, eres)
                 extra_runtime = max(extra_runtime, eres.sim_runtime_s)
 
     def _split_fragment(self, p: Pipeline, spec: dict, n_extra: int):
@@ -680,10 +1124,23 @@ class QueryEngine:
                         "footer_cache_hits", 0)
                     if s.get("kernel"):
                         report.kernel_fragments += 1
+                    if s.get("pipelined"):
+                        # consumer-side pipelined read observations:
+                        # first byte = earliest fragment's first batch
+                        report.pipelined = True
+                        report.topups += s.get("topups", 0)
+                        report.overlap_saved_s += s.get(
+                            "overlap_saved_s", 0.0)
+                        fi = float(s.get("first_input_s", 0.0))
+                        if report.first_input_s == 0.0 \
+                                or fi < report.first_input_s:
+                            report.first_input_s = fi
                     self._merge_partition_stats(
                         report, res.payload.get("partition_stats"))
-            stats.cost.merge(
-                self.cost_model.worker_cost(res.sim_runtime_s, tier_ops))
+            cost = self.cost_model.worker_cost(res.sim_runtime_s,
+                                               tier_ops)
+            report.cost_cents += cost.total_cents
+            stats.cost.merge(cost)
         return res
 
     def _merge_partition_stats(self, report: PipelineReport,
@@ -705,22 +1162,155 @@ class QueryEngine:
             acc["write_s"] += float(s.get("write_s", 0.0))
 
     # -- plumbing -------------------------------------------------------------
-    def _resolve_sources(self, op: dict) -> dict:
+    def _resolve_sources(self, op: dict, *,
+                         pipelined: bool = False) -> dict:
         sources: dict[str, dict] = {}
 
         def collect(o: dict):
             if o["t"] == "scan_exchange":
-                entry = self.registry.lookup(o["source"])
-                if entry is None:
-                    raise QueryAborted(
-                        f"upstream result {o['source']} missing",
-                        post_mortem={"source": o["source"]})
-                sources[o["source"]] = entry
+                sem = o["source"]
+                if sem not in sources:
+                    if pipelined:
+                        sources[sem] = self._await_source(sem)
+                    else:
+                        entry = self.registry.lookup(sem)
+                        if entry is None:
+                            raise QueryAborted(
+                                f"upstream result {sem} missing",
+                                post_mortem={"source": sem})
+                        sources[sem] = entry
             for k in ("child", "probe", "build"):
                 if k in o:
                     collect(o[k])
         collect(op)
         return sources
+
+    def _await_source(self, sem: str) -> dict:
+        """Pipelined consumer admission: block until the upstream
+        pipeline is barrier-complete (returns its registry entry) or
+        past the partial-admission gate (returns a pilot-K
+        pseudo-entry). An aborted upstream stream is waited out — a
+        peer that re-claims the failed execution resets it — until our
+        own cancel check (sibling abort) or the wait deadline fires."""
+        cfg = self.config
+        deadline = time.time() + cfg.pipelined_wait_timeout_s
+        floor = self._await_source_gate(sem, deadline)
+        while True:
+            try:
+                entry = self.registry.await_source_ready(
+                    sem, fraction=cfg.pipeline_start_fraction,
+                    cancel_check=self._check_cancel,
+                    timeout_s=max(deadline - time.time(), 0.01),
+                    min_published_at=floor)
+            except QueryCancelled:
+                raise
+            except TimeoutError as e:
+                raise QueryAborted(
+                    f"upstream result {sem} not ready: {e}",
+                    post_mortem={"source": sem}) from e
+            except RuntimeError:
+                self._check_cancel()
+                if time.time() >= deadline:
+                    raise QueryAborted(
+                        f"upstream producer of {sem} aborted",
+                        post_mortem={"source": sem})
+                time.sleep(0.05)
+                continue
+            if entry is not None:
+                return entry
+            man = self.registry.partial_manifest(sem)
+            if man is None:
+                # sealed and retired between the gate and this read —
+                # the barrier-complete entry must exist now
+                entry = self.registry.lookup(sem)
+                if entry is not None and (
+                        floor is None
+                        or entry.get("published_at", 0.0) >= floor):
+                    return entry
+                raise QueryAborted(f"upstream result {sem} missing",
+                                   post_mortem={"source": sem})
+            return self._partial_source_entry(sem, man)
+
+    def _await_source_gate(self, sem: str,
+                           deadline: float) -> float | None:
+        """Block until this plan's producer of ``sem`` has committed to
+        a path — a cache hit (any published entry is valid) or a fresh
+        execution (only entries published after its stream reset are).
+        Consulting the registry earlier races the producer thread: a
+        stale complete entry or sealed partial manifest left by an
+        earlier query on the same store describes a *different*
+        physical layout, and reading through it duplicates or drops
+        rows. Returns the freshness floor (``None`` = any entry)."""
+        gate = self._source_gates.get(sem)
+        if gate is None:
+            # not produced by this plan (pre-registered external
+            # source): whatever the registry holds is authoritative
+            return None
+        while not gate["event"].wait(0.05):
+            self._check_cancel()
+            if time.time() >= deadline:
+                raise QueryAborted(
+                    f"upstream producer of {sem} never started",
+                    post_mortem={"source": sem})
+        return gate["floor"]
+
+    def _open_source_gate(self, sem: str,
+                          floor: float | None = None) -> None:
+        gate = self._source_gates.get(sem)
+        if gate is not None:
+            gate["floor"] = floor
+            gate["event"].set()
+
+    def _partial_source_entry(self, sem: str, man: dict) -> dict:
+        """Pseudo registry entry for a partially available source: the
+        pilot-K estimate — the first K landed producers' stats summed
+        and extrapolated ×(n/K) — plus the manifest key consumer
+        fragments top up from. Flagged ``partial`` so the re-optimizer
+        skips decisions that need the full fleet's observations (e.g.
+        empty-partition pruning: a partition empty in the pilot subset
+        may still receive rows from later producers)."""
+        cfg = self.config
+        done = sorted(int(f) for f in (man.get("done") or {}))
+        n = max(int(man.get("n_producers") or 0), len(done), 1)
+        k = min(len(done), max(cfg.pilot_k, 1))
+        est: dict = {}
+        if k > 0:
+            infos = [man["done"][str(f)] for f in done[:k]]
+            scale = n / k
+            est = {"rows_out": int(sum(i.get("rows", 0)
+                                       for i in infos) * scale),
+                   "bytes_out": int(sum(i.get("bytes", 0)
+                                        for i in infos) * scale)}
+            plists = [i.get("partition_rows") or [] for i in infos]
+            D = len(plists[0]) if plists else 0
+            if D and all(len(x) == D for x in plists):
+                blists = [i.get("partition_bytes") or [] for i in infos]
+                wlists = [i.get("partition_write_s") or []
+                          for i in infos]
+                if all(len(x) == D for x in blists) \
+                        and all(len(x) == D for x in wlists):
+                    est["partition_rows"] = [
+                        int(sum(x[d] for x in plists) * scale)
+                        for d in range(D)]
+                    est["partition_bytes"] = [
+                        int(sum(x[d] for x in blists) * scale)
+                        for d in range(D)]
+                    # per-byte skew ratios survive the uniform
+                    # extrapolation factor, so plain sums suffice here
+                    est["partition_write_s"] = [
+                        float(sum(x[d] for x in wlists))
+                        for d in range(D)]
+        return {
+            "complete": False, "pipelined": True,
+            "partial": {"done": len(done), "of": n, "pilot_k": k},
+            "prefix": man.get("prefix") or f"results/{sem}",
+            "n_fragments": n,
+            "partitioning": man.get("partitioning") or {},
+            "schema": man.get("schema"),
+            "stats": est,
+            "manifest_key": self.registry.partial_key(sem),
+            "wait_timeout_s": cfg.pipelined_wait_timeout_s,
+        }
 
     def _fragment_spec(self, p: Pipeline, f: int, n: int, prefix: str,
                        sources: dict, op: dict | None = None) -> dict:
@@ -808,6 +1398,9 @@ def _describe_adaptation(a: dict) -> str:
                 f"(source {a['source'][:10]})")
     if kind == "exchange_retier":
         return f"exchange_retier {a['from']}→{a['to']}"
+    if kind == "pilot_scan":
+        return (f"pilot_scan sel={a['selectivity']:.4f} "
+                f"(rows est {a['est_rows_from']}→{a['est_rows_to']})")
     if kind == "exchange_restrategy":
         return (f"exchange_restrategy {a['from']}→{a['to']} "
                 f"(est {a['est_requests_from']}→{a['est_requests_to']} "
@@ -853,6 +1446,14 @@ def explain_analyze(plan: PhysicalPlan, stats: QueryStats) -> str:
                     f"    exchange: {r.exchange_strategy} · reqs "
                     f"est≈{r.est_exchange_requests} "
                     f"actual={r.exchange_requests}{wave}")
+            if r.pipelined:
+                pilot = f" · pilot-K={r.pilot_k}" if r.pilot_k else ""
+                lines.append(
+                    f"    pipelined: window "
+                    f"{r.sim_start_s:.3f}→{r.sim_end_s:.3f}s · "
+                    f"first input {r.first_input_s:.3f}s · "
+                    f"{r.topups} top-ups · overlap saved "
+                    f"{r.overlap_saved_s:.3f}s{pilot}")
             lines.append("    ops: " + " → ".join(_op_kinds(p.op)[::-1]))
             for a in r.adaptations:
                 lines.append("    adapted: " + _describe_adaptation(a))

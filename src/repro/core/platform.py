@@ -189,6 +189,11 @@ class FaultPlan:
     straggler_factor: float = 10.0      # runtime multiplier when straggling
     kill_fragments: tuple = ()          # (pipeline, fragment, attempt) kills
     straggle_fragments: tuple = ()      # deterministic stragglers
+    # Wall-clock sleep added to a straggling invocation (sim time is
+    # scaled by straggler_factor regardless). Zero keeps fault tests
+    # instant; the pipelined benchmark sets it so barrier-vs-pipelined
+    # first-byte gains show up in *real* wall-clock, not just sim time.
+    straggle_wall_s: float = 0.0
     seed: int = 0
 
     def roll(self, pipeline: int, fragment: int, attempt: int):
@@ -316,6 +321,8 @@ class FaasPlatform:
             return InvocationResult(None, str(e), start, start, cold)
         if straggle:
             runtime = runtime * self.faults.straggler_factor
+            if self.faults.straggle_wall_s > 0:
+                time.sleep(self.faults.straggle_wall_s)
         with self._lock:
             self._warm_sandboxes += 1
         return InvocationResult(response, None, start, start + runtime,
@@ -326,6 +333,7 @@ class FaasPlatform:
                     cancel_check: Callable[[], None] | None = None,
                     run: Callable[[dict], InvocationResult] | None = None,
                     priority: int = 0, group: str | None = None,
+                    on_all_submitted: Callable[[], None] | None = None,
                     ) -> list[InvocationResult]:
         """Run a fleet of fragments concurrently in wall-clock.
 
@@ -341,6 +349,12 @@ class FaasPlatform:
         Returns one ``InvocationResult`` per spec, in spec order. If any
         fragment raises, the remaining fragments are drained and the
         first error is re-raised.
+
+        ``on_all_submitted`` fires once the whole fleet sits in the
+        executor's FIFO queue. The pipelined engine uses it to flip the
+        manifest's ``all_submitted`` flag: consumers admitted after this
+        point only wait on work already scheduled ahead of them, which
+        keeps partial-input waiting deadlock-free at any quota.
         """
         if run is None:
             def run(spec: dict) -> InvocationResult:
@@ -374,6 +388,8 @@ class FaasPlatform:
                 except BaseException:  # noqa: BLE001 - draining
                     pass
             raise
+        if on_all_submitted is not None:
+            on_all_submitted()
         results: list[InvocationResult] = []
         first_error: BaseException | None = None
         for fut in futures:

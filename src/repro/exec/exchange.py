@@ -63,6 +63,16 @@ class ExchangeStrategy:
 
     name = ""
     layout = "grid"          # materialized layout consumers dispatch on
+    # Whether this strategy's layout supports *incremental* consumption:
+    # each producer's contribution is a self-contained object (or object
+    # row-group) readable the moment that producer publishes its partial
+    # manifest entry, so consumers can start on a subset of producers and
+    # top up. All built-in layouts qualify — direct and combining write
+    # per-producer objects; multilevel's consumer-facing grid is written
+    # per merge *group*, each itself an incremental reader of the l0
+    # stream. A strategy that interleaves producers inside shared objects
+    # would set this False and consumers would fall back to the barrier.
+    incremental = True
 
     # -- request-count math (the cost model's per-strategy estimates) ----
     def written_objects(self, producers: int, n_dest: int) -> int:
@@ -222,7 +232,8 @@ def get_strategy(name: str) -> ExchangeStrategy:
 
 # -- consumer read planning -----------------------------------------------------
 
-def plan_exchange_read(part: dict, prefix: str, n_producers: int,
+def plan_exchange_read(part: dict, prefix: str,
+                       n_producers: int | Sequence[int],
                        mode: str, me: int, n_fragments: int,
                        assigned: list[int] | None,
                        nonempty: list[int] | None,
@@ -234,11 +245,15 @@ def plan_exchange_read(part: dict, prefix: str, n_producers: int,
     what was actually written, which may differ from the reader's plan
     (cached results, adapted strategies). ``assigned`` is the adaptive
     partition assignment, ``nonempty`` the provably non-empty partition
-    ids of this source.
+    ids of this source. ``n_producers`` may be an explicit producer-id
+    subset instead of a count: pipelined consumers plan one top-up batch
+    at a time over exactly the ids newly present in the partial manifest.
     """
+    producers: Sequence[int] = range(n_producers) \
+        if isinstance(n_producers, int) else n_producers
     if part["kind"] != "hash":
-        return ([f"{prefix}/f{g:04d}/out.spax"
-                 for g in range(n_producers)], [], False)
+        return ([f"{prefix}/f{g:04d}/out.spax" for g in producers],
+                [], False)
     layout = part.get("layout", "grid")
     ds: list[int] | None
     local_filter = False
@@ -259,14 +274,14 @@ def plan_exchange_read(part: dict, prefix: str, n_producers: int,
     if layout == "combined":
         if ds is not None and not ds:
             return [], [], False
-        keys = [f"{prefix}/f{g:04d}/all.spax" for g in range(n_producers)]
+        keys = [f"{prefix}/f{g:04d}/all.spax" for g in producers]
         preds = [] if ds is None or len(ds) == part["n_dest"] else \
             [ZonePredicate(DEST_COL, "in", tuple(ds))]
         return keys, preds, local_filter
     if ds is None:
         ds = list(range(part["n_dest"]))
     keys = [f"{prefix}/f{g:04d}/d{d:04d}.spax"
-            for g in range(n_producers) for d in ds]
+            for g in producers for d in ds]
     return keys, [], local_filter
 
 
@@ -290,6 +305,13 @@ def execute_merge(store, spec: dict, footer_cache=None):
     re-combines partial-aggregate states (per-worker partial aggregation
     before the final exchange write), and writes its slice of the final
     G×m grid — the layout consumers read as a plain direct grid.
+
+    When the spec carries an l0 ``manifest_key`` (pipelined execution),
+    the merge fragment starts on the *partial* l0 stream: it drains the
+    objects already published, then tops up batch-by-batch as further
+    producers land — watching manifest versions, never polling — until
+    the stream is sealed. Assembly order is sorted producer id either
+    way, so the merged grid is bit-identical to the barrier run's.
     """
     from repro.exec.fragment import FragmentResult, FragmentStats
     op = spec["op"]
@@ -297,17 +319,59 @@ def execute_merge(store, spec: dict, footer_cache=None):
     stats = FragmentStats()
     view = store.with_tier(tier)
     handler = InputHandler(view, footer_cache=footer_cache)
-    gids = [g for g in range(op["producers"])
-            if g % op["n_groups"] == op["group"]]
-    keys = [f"{op['l0_prefix']}/f{g:04d}/all.spax" for g in gids]
     schema = [ColumnSpec(s["name"], s["kind"], s["dtype"])
               for s in op["schema"]]
     names = [c.name for c in schema] + [DEST_COL]
-    parts, st = handler.read_tables(keys, names)
-    stats.account(tier, st, write=False)
-    cols = {c.name: np.concatenate([p[c.name] for p in parts]) if parts
-            else np.empty((0,), np.dtype(c.dtype)) for c in schema}
-    dest = np.concatenate([p[DEST_COL] for p in parts]) if parts \
+
+    def in_group(g: int) -> bool:
+        return g % op["n_groups"] == op["group"]
+
+    parts_by_g: dict[int, dict] = {}
+
+    def drain(gids: list[int]) -> None:
+        keys = [f"{op['l0_prefix']}/f{g:04d}/all.spax" for g in gids]
+        parts, st = handler.read_tables(keys, names)
+        if parts_by_g:
+            stats.topups += 1
+        else:
+            stats.first_input_s = st.sim_time_s
+        stats.account(tier, st, write=False)
+        parts_by_g.update(zip(gids, parts))
+
+    manifest_key = op.get("manifest_key")
+    if manifest_key is None:
+        drain([g for g in range(op["producers"]) if in_group(g)])
+    else:
+        from repro.core.registry import read_manifest
+        stats.pipelined = True
+        kv = store.with_tier("dynamodb")
+        deadline = time.time() + float(op.get("wait_timeout_s") or 600.0)
+        while True:
+            token = kv.version(manifest_key)
+            man = read_manifest(kv, manifest_key)
+            if man is None:
+                # stream retired with its entry: planned count is final
+                man = {"done": {str(g): None
+                                for g in range(op["producers"])},
+                       "complete": True}
+            if man.get("aborted"):
+                raise RuntimeError("upstream producer pipeline aborted")
+            fresh = sorted(g for g in map(int, man.get("done") or {})
+                           if in_group(g) and g not in parts_by_g)
+            if fresh:
+                drain(fresh)
+            if man.get("complete"):
+                break
+            if time.time() >= deadline:
+                raise TimeoutError("l0 stream never sealed: producer "
+                                   "pipeline lost without abort")
+            kv.watch(manifest_key, token, timeout_s=1.0)
+
+    ordered = [parts_by_g[g] for g in sorted(parts_by_g)]
+    cols = {c.name: np.concatenate([p[c.name] for p in ordered])
+            if ordered else np.empty((0,), np.dtype(c.dtype))
+            for c in schema}
+    dest = np.concatenate([p[DEST_COL] for p in ordered]) if ordered \
         else np.empty((0,), np.int32)
     stats.rows_in = int(dest.shape[0])
 

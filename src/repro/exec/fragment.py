@@ -40,6 +40,16 @@ class FragmentStats:
     bytes_written: int = 0
     footer_cache_hits: int = 0
     kernel: str = ""       # fused Pallas kernel this fragment ran on ("" = jnp)
+    # Pipelined consumption: this fragment read at least one input from a
+    # partial manifest. ``first_input_s`` is the simulated makespan of the
+    # first available batch (the fragment's exposed input latency);
+    # ``topups`` counts later batches, whose read time double-buffers
+    # against compute — the worker turns that into ``overlap_saved_s``
+    # simulated seconds hidden from its runtime (CostModel overlap term).
+    pipelined: bool = False
+    first_input_s: float = 0.0
+    topups: int = 0
+    overlap_saved_s: float = 0.0
     # per-tier request/byte accounting for the cost model
     tier_ops: dict = dataclasses.field(default_factory=dict)
 
@@ -203,9 +213,13 @@ def _load_scan_table(handler: InputHandler, spec: dict, leaf_op: dict,
             for c in leaf_op["columns"]}
 
 
-def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
+def _load_scan_exchange(handler_for, store: ObjectStore, spec: dict,
+                        leaf_op: dict,
                         stats: FragmentStats) -> dict[str, np.ndarray]:
     src = spec["sources"][leaf_op["source"]]
+    if src.get("pipelined"):
+        return _load_exchange_pipelined(handler_for, store, spec, leaf_op,
+                                        stats)
     part = src["partitioning"]
     tier = part.get("tier", "s3-standard")
     handler = handler_for(tier)
@@ -233,6 +247,95 @@ def _load_scan_exchange(handler_for, spec: dict, leaf_op: dict,
     parts, st = handler.read_tables(keys, names, preds)
     stats.account(tier, st, write=False)
     out = {c: np.concatenate([p[c] for p in parts]) if parts
+           else np.empty((0,), np.dtype(s["dtype"]))
+           for c, s in zip(names, src["schema"])}
+    if local_filter:
+        dest = ops.np_hash_dest(out, list(part["keys"]), F)
+        sel = dest == me
+        out = {c: v[sel] for c, v in out.items()}
+    return out
+
+
+def _load_exchange_pipelined(handler_for, store: ObjectStore, spec: dict,
+                             leaf_op: dict, stats: FragmentStats,
+                             ) -> dict[str, np.ndarray]:
+    """Consume an exchange from its *partial* manifest (barrier-free).
+
+    The fragment was admitted once a fraction of its producers had
+    published. It drains what exists, then tops up batch-by-batch as
+    further manifest entries land — each batch prefetched on a
+    background thread while the previous one is collected (double
+    buffering), waiting on manifest *versions* between batches. Rows are
+    assembled in sorted producer-id order regardless of completion
+    order, so the concatenated input — and every byte derived from it —
+    is identical to the barrier run's.
+    """
+    from repro.core.registry import read_manifest
+    src = spec["sources"][leaf_op["source"]]
+    part = src["partitioning"]
+    tier = part.get("tier", "s3-standard")
+    handler = handler_for(tier)
+    me, F = spec["fragment"], spec["n_fragments"]
+    assigned = spec.get("read_partitions")
+    nonempty = (spec.get("source_partitions") or {}).get(leaf_op["source"])
+    names = [c["name"] for c in src["schema"]]
+    kv = store.with_tier("dynamodb")
+    mkey = src["manifest_key"]
+    deadline = time.time() + float(src.get("wait_timeout_s") or 600.0)
+    stats.pipelined = True
+    tables: dict[int, list] = {}        # producer id → its tables
+    local_filter = False
+    pending: tuple | None = None        # (Prefetch, gids, n_keys)
+
+    def collect(pref, gids, n_keys) -> None:
+        parts, st = pref.result()
+        if tables:
+            stats.topups += 1
+        else:
+            stats.first_input_s = st.sim_time_s
+        stats.account(tier, st, write=False)
+        per = n_keys // len(gids) if gids else 0
+        for i, g in enumerate(gids):
+            tables[g] = parts[i * per:(i + 1) * per]
+
+    while True:
+        token = kv.version(mkey)
+        man = read_manifest(kv, mkey)
+        if man is None:
+            # stream already retired with its result entry — the entry's
+            # producer count is final and every object exists
+            man = {"done": {str(g): None
+                            for g in range(src["n_fragments"])},
+                   "complete": True}
+        if man.get("aborted"):
+            raise RuntimeError("upstream producer pipeline aborted")
+        known = set(tables) | (set(pending[1]) if pending else set())
+        fresh = sorted(g for g in map(int, man.get("done") or {})
+                       if g not in known)
+        if fresh:
+            keys, preds, lf = exchange.plan_exchange_read(
+                part, src["prefix"], fresh, leaf_op["mode"], me, F,
+                assigned, nonempty)
+            local_filter = local_filter or lf
+            nxt = (handler.prefetch_tables(keys, names, preds), fresh,
+                   len(keys))
+            if pending is not None:
+                collect(*pending)   # overlap: next batch is in flight
+            pending = nxt
+        if man.get("complete"):
+            break
+        if not fresh:
+            if time.time() >= deadline:
+                raise TimeoutError("exchange manifest never sealed: "
+                                   "producer pipeline lost without abort")
+            kv.watch(mkey, token, timeout_s=1.0)
+    if pending is not None:
+        collect(*pending)
+
+    ordered: list[dict] = []
+    for g in sorted(tables):
+        ordered.extend(tables[g])
+    out = {c: np.concatenate([p[c] for p in ordered]) if ordered
            else np.empty((0,), np.dtype(s["dtype"]))
            for c, s in zip(names, src["schema"])}
     if local_filter:
@@ -275,7 +378,8 @@ def execute_fragment(store: ObjectStore, spec: dict,
             cols = _load_scan_table(handler_for(None), spec, leaf_op,
                                     stats)
         else:
-            cols = _load_scan_exchange(handler_for, spec, leaf_op, stats)
+            cols = _load_scan_exchange(handler_for, store, spec, leaf_op,
+                                       stats)
         n = len(next(iter(cols.values()))) if cols else 0
         stats.rows_in += n
         blk = from_numpy(cols, bucket_capacity(n))

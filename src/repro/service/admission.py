@@ -1,6 +1,6 @@
 """Multi-tenant admission over the shared platform quota (service tier).
 
-Two enforcement layers:
+Three enforcement layers:
 
   * **fair share** — each tenant's weight is registered with the
     platform's ``AdmissionController`` (``set_share``); every fragment a
@@ -18,6 +18,13 @@ Two enforcement layers:
     tenant at/over budget is *throttled* — its queued requests simply
     wait for the window to roll over, which always happens, so
     throttling is bounded, never starvation.
+
+  * **deadline ordering** — the dispatcher admits queued requests in
+    ``deadline_order``: tightest *feasible* deadline first (earliest
+    deadline first, gated on the tenant's observed-runtime EMA fitting
+    the deadline), then deadline-free requests FIFO, then
+    infeasible-deadline requests last — a request whose SLO is already
+    lost never displaces one whose SLO can still be met.
 
 This module is pure policy on in-process state plus the platform's
 admission ledger; durable request state lives in the ledger
@@ -56,6 +63,40 @@ class _TenantState:
     lifetime_cents: float = 0.0
     throttled_admissions: int = 0       # admissions deferred on budget
     degraded_dispatches: int = 0
+    runtime_ema_s: float | None = None  # observed sim latency (EMA)
+
+
+#: EMA weight for per-tenant runtime observations — recent queries
+#: dominate, so a tenant that switches workload shape re-converges in a
+#: handful of queries.
+RUNTIME_EMA_ALPHA = 0.3
+
+
+def deadline_order(entries, runtime_estimate):
+    """Admission order for QUEUED ledger entries (EDF with a
+    feasibility gate):
+
+      1. requests with a *feasible* deadline, tightest deadline first —
+         feasible means the tenant's observed runtime estimate fits
+         inside the deadline (no estimate yet → optimistically
+         feasible);
+      2. requests with no deadline, oldest submission first (plain
+         FIFO — the pre-deadline behavior);
+      3. requests whose deadline is *infeasible* (estimate already
+         exceeds it), oldest first. They would likely miss anyway, so
+         they must not displace requests whose SLO can still be met —
+         but they stay in the queue and run, they are never dropped.
+
+    ``runtime_estimate`` maps a tenant name (or None) to an estimated
+    sim latency in seconds, or None when unknown."""
+    def rank(e):
+        if e.deadline_s is None:
+            return (1, 0.0, e.submitted_at, e.request_id)
+        est = runtime_estimate(e.tenant)
+        if est is not None and est > e.deadline_s:
+            return (2, 0.0, e.submitted_at, e.request_id)
+        return (0, e.deadline_s, e.submitted_at, e.request_id)
+    return sorted(entries, key=rank)
 
 
 class FairShareAdmission:
@@ -98,6 +139,28 @@ class FairShareAdmission:
             self._roll_window_locked(st)
             st.spent_cents += cents
             st.lifetime_cents += cents
+
+    # -- runtime estimation (deadline feasibility) ----------------------------
+    def observe_runtime(self, tenant: str | None, sim_s: float) -> None:
+        """Fold a finished query's simulated latency into the tenant's
+        runtime EMA — the feasibility estimate ``deadline_order``
+        consults for its queue ordering."""
+        if tenant is None or sim_s <= 0:
+            return
+        with self._lock:
+            st = self._tenants.get(tenant)
+            if st is None:
+                return
+            if st.runtime_ema_s is None:
+                st.runtime_ema_s = sim_s
+            else:
+                st.runtime_ema_s += RUNTIME_EMA_ALPHA * (
+                    sim_s - st.runtime_ema_s)
+
+    def runtime_estimate(self, tenant: str | None) -> float | None:
+        with self._lock:
+            st = self._tenants.get(tenant) if tenant else None
+        return st.runtime_ema_s if st else None
 
     def admissible(self, tenant: str | None) -> bool:
         """May this tenant's next request be admitted *now*? False only
@@ -142,6 +205,7 @@ class FairShareAdmission:
                     "lifetime_cents": st.lifetime_cents,
                     "throttled_admissions": st.throttled_admissions,
                     "degraded_dispatches": st.degraded_dispatches,
+                    "runtime_ema_s": st.runtime_ema_s,
                 } for name, st in self._tenants.items()}
         admitted = self.admission.admitted_by_group
         for name, t in tenants.items():

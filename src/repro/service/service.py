@@ -13,7 +13,11 @@ serverless SQL endpoint needs (ISSUE 6 / ROADMAP "query service tier"):
     shape);
   * SLO deadlines ride the request into the engine: the remaining
     deadline becomes per-stage latency budgets for cost-optimal fleet
-    sizing, escalating at barriers when the query runs behind;
+    sizing, escalating at barriers when the query runs behind — and
+    they order the queue itself (``deadline_order``): tightest
+    *feasible* deadline first, judged against the tenant's
+    observed-runtime EMA, so an already-lost SLO never displaces a
+    winnable one;
   * on completion the result pointer (object locations + cost) is
     written back to the ledger and the tenant's budget is charged;
     over-budget tenants degrade to their minimum fleet, then throttle
@@ -38,7 +42,8 @@ import numpy as np
 
 from repro.api.session import SkyriseSession
 from repro.core.engine import QueryCancelled
-from repro.service.admission import FairShareAdmission, TenantConfig
+from repro.service.admission import (FairShareAdmission, TenantConfig,
+                                     deadline_order)
 from repro.service.dag import validate_dag
 from repro.service.ledger import (LedgerConflict, LedgerEntry,
                                   RequestLedger, RequestStatus)
@@ -63,6 +68,9 @@ class ServiceResult:
         self.sim_latency_s: float = pointer.get("sim_latency_s", 0.0)
         self.cache_hits: int = pointer.get("cache_hits", 0)
         self.deadline_missed: bool = pointer.get("deadline_missed", False)
+        self.pipelined_pipelines: int = pointer.get(
+            "pipelined_pipelines", 0)
+        self.overlap_saved_s: float = pointer.get("overlap_saved_s", 0.0)
 
     def fetch(self, store: ObjectStore) -> dict[str, np.ndarray]:
         ih = InputHandler(store)
@@ -301,7 +309,10 @@ class QueryService:
             self._closing.wait(poll)
 
     def _admit_queued(self) -> None:
-        for entry in self.ledger.entries(status=RequestStatus.QUEUED):
+        queued = deadline_order(
+            self.ledger.entries(status=RequestStatus.QUEUED),
+            self.admission.runtime_estimate)
+        for entry in queued:
             if self._closing.is_set():
                 return
             ready, failed_dep = self._deps_state(entry)
@@ -398,6 +409,7 @@ class QueryService:
         if missed:
             self.deadline_misses += 1
         self.admission.charge(entry.tenant, stats.cost.total_cents)
+        self.admission.observe_runtime(entry.tenant, stats.sim_latency_s)
         self._transition_safe(rid, RequestStatus.SUCCEEDED, result={
             "locations": result.locations,
             "output_names": result.output_names,
@@ -406,6 +418,13 @@ class QueryService:
             "cache_hits": stats.cache_hits,
             "deduped": sum(1 for p in stats.pipelines if p.deduped),
             "deadline_missed": missed,
+            # pipelined execution telemetry (barrier-free PR): how many
+            # pipelines started on partial input, and the overlap they
+            # reclaimed from the simulated critical path
+            "pipelined_pipelines": sum(
+                1 for p in stats.pipelines if p.pipelined),
+            "overlap_saved_s": sum(
+                p.overlap_saved_s for p in stats.pipelines),
         })
 
     def _transition_safe(self, rid: str, to: RequestStatus,

@@ -218,6 +218,20 @@ class InputHandler:
         stats.sim_time_s += _pool_makespan(lat, self.pool_size)
         return out, stats
 
+    def prefetch_tables(self, keys: Sequence[str],
+                        columns: Sequence[str] | None = None,
+                        predicates: Sequence[pax.ZonePredicate] = (),
+                        ) -> "Prefetch":
+        """Start a ``read_tables`` batch on a background thread and
+        return immediately — the double-buffering half of pipelined
+        consumption: a fragment collects the *previous* batch's arrays
+        (and feeds its kernel) while the next top-up batch is in flight.
+        The wall-clock overlap is real (two host threads); the simulated
+        overlap is accounted by the worker's overlap term, not here —
+        the returned ``IoStats`` still carries the batch's full pool
+        makespan."""
+        return Prefetch(self, keys, columns, predicates)
+
     def _read_object(self, key: str, columns, predicates, stats: IoStats,
                      lat: _LatencyLog,
                      ) -> tuple[dict[str, np.ndarray], pax.PaxFooter]:
@@ -258,6 +272,39 @@ class InputHandler:
             else:
                 out[n] = np.empty((0,), dtype=spec.np_dtype())
         return out, footer
+
+
+class Prefetch:
+    """In-flight background ``read_tables`` batch (see
+    ``InputHandler.prefetch_tables``). ``result()`` joins the reader
+    thread and returns ``(tables, IoStats)``, re-raising any reader
+    failure in the caller's thread."""
+
+    def __init__(self, handler: InputHandler, keys, columns, predicates):
+        self._box: list = []
+        self._keys = list(keys)
+
+        def _run() -> None:
+            try:
+                self._box.append(handler.read_tables(
+                    self._keys, columns, predicates))
+            except BaseException as e:  # noqa: BLE001 - re-raised in result
+                self._box.append(e)
+
+        self._thread = threading.Thread(target=_run, daemon=True,
+                                        name="prefetch-reader")
+        self._thread.start()
+
+    @property
+    def keys(self) -> list[str]:
+        return self._keys
+
+    def result(self) -> tuple[list[dict[str, np.ndarray]], IoStats]:
+        self._thread.join()
+        out = self._box[0]
+        if isinstance(out, BaseException):
+            raise out
+        return out
 
 
 class OutputHandler:

@@ -99,16 +99,23 @@ def queries(draw):
 
 
 @settings(max_examples=25, deadline=None)
-@given(sql=queries(), seed=st.integers(0, 3))
-def test_engine_matches_oracle(sql, seed):
+@given(sql=queries(), seed=st.integers(0, 3),
+       pipelined=st.booleans(),
+       strategy=st.sampled_from(["direct", "combining", "multilevel"]))
+def test_engine_matches_oracle(sql, seed, pipelined, strategy):
+    """Random queries × {barrier, pipelined} × every shuffle strategy
+    must all agree with the numpy oracle — barrier-free admission and
+    incremental top-up reads are invisible to query results."""
     store, catalog, tables = _make_db(900, 40, seed)
     plan, _ = Binder(catalog).bind(parse(sql))
     want = oracle.run(optimize(plan), tables)
     coord = QueryCoordinator(
         store, catalog, platform=FaasPlatform(seed=seed),
-        config=CoordinatorConfig(planner=PlannerConfig(
-            bytes_per_worker=3_000, broadcast_threshold_bytes=2_000,
-            exchange_partitions=2)))
+        config=CoordinatorConfig(
+            pipelined=pipelined,
+            planner=PlannerConfig(
+                bytes_per_worker=3_000, broadcast_threshold_bytes=2_000,
+                exchange_partitions=2, exchange_strategy=strategy)))
     got = coord.execute_sql(sql).fetch(store)
     n_want = len(next(iter(want.values()))) if want else 0
     n_got = len(next(iter(got.values()))) if got else 0
