@@ -24,6 +24,9 @@ measurements on this host.
                              skewed-producer join: row parity,
                              wall-clock reduction, and straggler-free
                              first byte — all asserted)
+  faults   → chaos          (chaos engine off-path overhead, one-shot
+                             kill-point recovery, probabilistic fault
+                             storm — parity asserted throughout)
   kernels  → Pallas kernels (interpret mode on CPU)
 
 ``--json PATH`` additionally writes the rows as a JSON snapshot (the
@@ -53,6 +56,7 @@ SUITES = {
     "shuffle": suites.bench_shuffle,
     "service": suites.bench_service,
     "pipelined": suites.bench_pipelined,
+    "chaos": suites.bench_chaos,
     "kernels": suites.bench_kernels,
 }
 

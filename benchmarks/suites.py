@@ -651,6 +651,116 @@ def bench_fusion(smoke: bool = False):
     return rows
 
 
+# -- robustness: chaos engine --------------------------------------------------------------
+
+def bench_chaos(smoke: bool = False):
+    """Chaos engine: off-path overhead, kill-point recovery, fault storm.
+
+    Three asserted rows (failing the CI bench-smoke job on regression):
+
+      * ``off_overhead`` — q6 with a zero-probability ``ChaosEngine``
+        attached vs no engine at all: parity asserted, zero injections
+        asserted; the derived column reports the wall-clock cost of the
+        hooks themselves.
+      * ``kill_recovery`` — q3 with a one-shot kill at every registry
+        protocol step (claim / begin_partial / publish_partial /
+        finish_partial): every kill must actually fire, and the
+        TTL-steal + partial-stream recovery must converge to identical
+        rows.
+      * ``storm`` — a probabilistic schedule (transient GET/PUT errors,
+        503 throttles, latency spikes, torn PUTs, cold-start storms,
+        worker kills) swept over several seeds, parity asserted per
+        seed.
+    """
+    from repro.api import ChaosConfig, ChaosEngine
+    from repro.core.registry import ResultRegistry
+
+    sf, n_parts = 0.01, 4
+    # fresh store per run, so the (registry-backed) result cache never
+    # crosses runs; it must stay ON — the claim protocol under kill is
+    # half of what this suite exercises
+    cfg = CoordinatorConfig(planner=CFG.planner,
+                            calibrate_selectivity=False, max_attempts=6)
+
+    def run(qname, chaos, seed=0):
+        store, catalog = _db(sf, n_parts=n_parts)
+        registry = ResultRegistry(store, claim_ttl_s=0.25)
+        with connect(store, catalog, quota=64, seed=seed, config=cfg,
+                     registry=registry, chaos=chaos) as session:
+            t0 = time.perf_counter()
+            res = session.sql(QUERIES[qname])
+            wall = time.perf_counter() - t0
+            ctx = chaos.pause() if chaos is not None \
+                else contextlib.nullcontext()
+            with ctx:
+                cols = res.fetch(store)
+        return cols, wall
+
+    def sorted_rows(cols):
+        keys = sorted(cols)
+        arrs = [np.asarray(cols[k], np.float64) for k in keys]
+        order = np.lexsort(arrs[::-1])
+        return keys, [a[order] for a in arrs]
+
+    def assert_parity(ref, got, label):
+        rkeys, rarrs = sorted_rows(ref)
+        gkeys, garrs = sorted_rows(got)
+        assert rkeys == gkeys, f"{label}: column mismatch"
+        for k, ra, ga in zip(rkeys, rarrs, garrs):
+            np.testing.assert_allclose(
+                ga, ra, rtol=1e-9, atol=1e-9,
+                err_msg=f"chaos parity regression: {label}.{k}")
+
+    rows = []
+    run("q6", None)                     # pay JIT tracing once
+    run("q3", None)
+
+    # -- off-path overhead: hooks attached but every probability zero
+    ref6, base_wall = run("q6", None)
+    idle = ChaosEngine(ChaosConfig(seed=0))
+    cols, idle_wall = run("q6", idle)
+    assert_parity(ref6, cols, "off_overhead")
+    assert not idle.injected, f"zero-prob engine injected: {idle.injected}"
+    rows.append(("chaos/off_overhead", idle_wall * 1e6,
+                 f"baseline_us={base_wall * 1e6:.1f};"
+                 f"overhead={idle_wall / base_wall:.2f}x;"
+                 f"injected=0;parity=ok"))
+
+    # -- one-shot kills at every registry protocol step
+    ref3, clean_wall = run("q3", None)
+    sites = ("registry.claim", "registry.begin_partial",
+             "registry.publish_partial", "registry.finish_partial")
+    chaos = ChaosEngine(ChaosConfig(seed=1, kill_points=sites))
+    cols, kill_wall = run("q3", chaos)
+    for site in sites:
+        assert chaos.injected.get(f"kill:{site}") == 1, \
+            f"kill point never fired: {site}"
+    assert_parity(ref3, cols, "kill_recovery")
+    rows.append(("chaos/kill_recovery_4sites", kill_wall * 1e6,
+                 f"clean_us={clean_wall * 1e6:.1f};"
+                 f"recovery_cost={kill_wall / clean_wall:.2f}x;"
+                 f"kills={len(sites)};parity=ok"))
+
+    # -- probabilistic storm across seeds
+    seeds = range(2) if smoke else range(5)
+    walls, injected = [], 0
+    for seed in seeds:
+        storm = ChaosEngine(ChaosConfig(
+            seed=seed, get_error_prob=0.01, put_error_prob=0.01,
+            throttle_prob=0.005, latency_spike_prob=0.08,
+            torn_put_prob=0.01, cold_storm_prob=0.15,
+            worker_kill_prob=0.03))
+        cols, wall = run("q6", storm, seed=seed)
+        assert_parity(ref6, cols, f"storm_seed{seed}")
+        walls.append(wall)
+        injected += sum(storm.injected.values())
+    rows.append((f"chaos/storm_{len(walls)}seeds",
+                 float(np.mean(walls)) * 1e6,
+                 f"baseline_us={base_wall * 1e6:.1f};"
+                 f"injected={injected};parity=ok"))
+    return rows
+
+
 # -- kernels -------------------------------------------------------------------------------
 
 def bench_kernels():

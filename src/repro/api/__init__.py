@@ -20,18 +20,23 @@ multi-tenant layer the paper's single-query coordinator deliberately
 leaves out (section 3.1).
 """
 
+from repro.core.chaos import ChaosConfig, ChaosEngine
 from repro.core.engine import (CoordinatorConfig, QueryAborted,
                                QueryCancelled, QueryResult, QueryStats,
                                explain_analyze, explain_plan)
 from repro.core.events import ConsoleObserver, QueryObserver
 from repro.core.platform import FaasPlatform, FaultPlan
+from repro.core.retry import (QueryFailedError, RetryBudgetExhausted,
+                              RetryPolicy, TransientInfraError)
 
 from repro.api.handle import QueryHandle, QueryState
 from repro.api.session import SkyriseSession, connect
 
 __all__ = [
-    "ConsoleObserver", "CoordinatorConfig", "FaasPlatform", "FaultPlan",
-    "QueryAborted", "QueryCancelled", "QueryHandle", "QueryObserver",
-    "QueryResult", "QueryState", "QueryStats", "SkyriseSession",
-    "connect", "explain_analyze", "explain_plan",
+    "ChaosConfig", "ChaosEngine", "ConsoleObserver", "CoordinatorConfig",
+    "FaasPlatform", "FaultPlan", "QueryAborted", "QueryCancelled",
+    "QueryFailedError", "QueryHandle", "QueryObserver", "QueryResult",
+    "QueryState", "QueryStats", "RetryBudgetExhausted", "RetryPolicy",
+    "SkyriseSession", "TransientInfraError", "connect", "explain_analyze",
+    "explain_plan",
 ]

@@ -16,6 +16,7 @@ import enum
 import threading
 
 from repro.core.engine import QueryCancelled, QueryResult, QueryStats
+from repro.core.retry import QueryFailedError
 
 
 class QueryState(enum.Enum):
@@ -76,7 +77,15 @@ class QueryHandle:
         return self._done.wait(timeout)
 
     def result(self, timeout: float | None = None) -> QueryResult:
-        """Block for the QueryResult; raises on FAILED/CANCELLED."""
+        """Block for the QueryResult; raises on FAILED/CANCELLED.
+
+        Failures surface through the typed taxonomy (``core.retry``):
+        an already-typed error — :class:`QueryAborted`,
+        :class:`RetryBudgetExhausted`, any :class:`QueryFailedError` —
+        is re-raised as-is; anything else is wrapped in a
+        :class:`QueryFailedError` with the original exception chained
+        (``__cause__``), so the causal chain from the failing fragment
+        is preserved either way."""
         if not self._done.wait(timeout):
             raise TimeoutError(
                 f"query {self.query_id} still {self.state.value} "
@@ -85,7 +94,11 @@ class QueryHandle:
             if self._state is QueryState.CANCELLED:
                 raise QueryCancelled(f"query {self.query_id} was cancelled")
             if self._error is not None:
-                raise self._error
+                if isinstance(self._error, QueryFailedError):
+                    raise self._error
+                raise QueryFailedError(
+                    f"query {self.query_id} failed: "
+                    f"{self._error}") from self._error
             assert self._result is not None
             return self._result
 

@@ -59,6 +59,8 @@ class SkyriseSession:
                  faults: FaultPlan | None = None,
                  config: CoordinatorConfig | None = None,
                  cost_model: CostModel | None = None,
+                 registry: ResultRegistry | None = None,
+                 chaos=None,
                  max_concurrent_queries: int = 4,
                  observers: tuple[QueryObserver, ...] = (),
                  seed: int = 0):
@@ -86,11 +88,26 @@ class SkyriseSession:
             faults=faults)
         self.config = config or CoordinatorConfig()
         self.cost_model = cost_model or CostModel()
+        # Chaos engine (core.chaos): one shared, seeded fault schedule
+        # attached to the store (storage faults + registry/ledger kill
+        # points ride on it) and the platform (storms, worker kills).
+        self.chaos = chaos
+        if chaos is not None:
+            self.store.chaos = chaos
+            self.platform.chaos = chaos
         # Shared across every query of the session: one result cache,
         # one worker handler (code package) whose SPAX footer cache spans
         # all fragments of all queries, one admission ledger.
-        self.registry = ResultRegistry(store)
-        self.handler = make_worker_handler(store)
+        self.registry = registry if registry is not None \
+            else ResultRegistry(store)
+        if chaos is not None:
+            # a registry built before this session snapshotted its KV
+            # view (with_tier copies `chaos` at construction) — attach
+            # the schedule to that view too so protocol kill points fire
+            self.registry.store.chaos = chaos
+        self.handler = make_worker_handler(
+            store, cost_model=(self.cost_model
+                               if self.config.hedged_reads else None))
         self.footer_cache = self.handler.footer_cache
         self.observers = ObserverMux(list(observers))
 

@@ -9,6 +9,7 @@ The public client entry point is :mod:`repro.api` (``connect()`` →
 """
 
 from repro.core.adaptive import Reoptimizer
+from repro.core.chaos import ChaosConfig, ChaosEngine, ChaosKill
 from repro.core.coordinator import QueryCoordinator
 from repro.core.cost import CostBreakdown, CostModel
 from repro.core.engine import (CoordinatorConfig, PipelineReport,
@@ -19,12 +20,15 @@ from repro.core.events import ConsoleObserver, ObserverMux, QueryObserver
 from repro.core.platform import (AdmissionController, FaasPlatform,
                                  FaultPlan)
 from repro.core.registry import ResultRegistry
+from repro.core.retry import (QueryFailedError, RetryBudgetExhausted,
+                              RetryPolicy, TransientInfraError)
 
 __all__ = [
-    "AdmissionController", "ConsoleObserver", "CoordinatorConfig",
-    "CostBreakdown", "CostModel", "FaasPlatform", "FaultPlan",
-    "ObserverMux", "PipelineReport", "QueryAborted", "QueryCancelled",
-    "QueryCoordinator", "QueryEngine", "QueryObserver", "QueryResult",
-    "QueryStats", "Reoptimizer", "ResultRegistry", "explain_analyze",
-    "explain_plan",
+    "AdmissionController", "ChaosConfig", "ChaosEngine", "ChaosKill",
+    "ConsoleObserver", "CoordinatorConfig", "CostBreakdown", "CostModel",
+    "FaasPlatform", "FaultPlan", "ObserverMux", "PipelineReport",
+    "QueryAborted", "QueryCancelled", "QueryCoordinator", "QueryEngine",
+    "QueryFailedError", "QueryObserver", "QueryResult", "QueryStats",
+    "Reoptimizer", "ResultRegistry", "RetryBudgetExhausted", "RetryPolicy",
+    "TransientInfraError", "explain_analyze", "explain_plan",
 ]

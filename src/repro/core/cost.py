@@ -114,6 +114,23 @@ class CostModel:
                 * tier.write_transfer_cents_per_gib)
         return out
 
+    def hedge_timeout_s(self, tier) -> float:
+        """Cost-optimal hedged-read timeout for one storage tier.
+
+        A duplicate GET costs one read request; waiting costs the
+        worker's GiB-seconds. The break-even wait — where the dollars
+        burned waiting equal the dollars a hedge would cost — is
+        ``read_request_cents / (memory_gib · LAMBDA_CENTS_PER_GIB_S)``.
+        Hedging any earlier pays more in requests than the wait costs;
+        any later burns compute on the first-byte tail the measurement
+        study documents. Offset from the tier's *median* read latency so
+        a typical request never hedges (≈ 42 ms for s3-standard).
+        """
+        t = TIERS[tier] if isinstance(tier, str) else tier
+        break_even_s = (t.read_request_cents_per_1m / 1e6) / (
+            self.worker_memory_gib * LAMBDA_CENTS_PER_GIB_S)
+        return t.read_median_s + break_even_s
+
     def coordinator_cost(self, runtime_s: float) -> CostBreakdown:
         out = CostBreakdown()
         out.compute_cents = (runtime_s * self.worker_memory_gib

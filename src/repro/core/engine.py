@@ -49,6 +49,9 @@ from repro.core.events import QueryObserver
 from repro.core.platform import (AdmissionController, FaasPlatform,
                                  InvocationResult)
 from repro.core.registry import ResultRegistry
+from repro.core.retry import (QueryFailedError, RetryBudget,
+                              RetryBudgetExhausted, RetryPolicy,
+                              TransientInfraError, is_transient)
 from repro.core.worker import make_worker_handler
 from repro.data.catalog import Catalog
 from repro.exec import exchange
@@ -64,7 +67,10 @@ from repro.storage.io_handlers import InputHandler
 from repro.storage.object_store import ObjectStore
 
 
-class QueryAborted(RuntimeError):
+class QueryAborted(QueryFailedError):
+    """Permanent query failure with a post-mortem (bad plan, repeated
+    deterministic worker failure, missing upstream)."""
+
     def __init__(self, msg: str, post_mortem: dict):
         super().__init__(msg)
         self.post_mortem = post_mortem
@@ -201,6 +207,16 @@ class CoordinatorConfig:
     # at least this many scan units probes one unit first and records
     # the observed selectivity before the fleet launches.
     pilot_scan_min_units: int = 4
+    # Unified retry policy (core.retry): bounded exponential backoff
+    # with full jitter, one per-query budget spent by every layer that
+    # retries a transient failure (fragment re-invokes and query-level
+    # re-drives after coordinator-side infrastructure errors).
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    # Hedged storage reads: replace the constant straggler re-trigger
+    # timeout with the cost model's per-tier break-even point (duplicate
+    # request cents vs GiB-seconds spent waiting). Off by default —
+    # identical request counts to the seed behavior.
+    hedged_reads: bool = False
 
 
 class QueryEngine:
@@ -265,6 +281,9 @@ class QueryEngine:
                 cfg.planner.hot_shuffle_object_threshold),
             quota=self.admission.quota,
             forced_strategy=cfg.planner.exchange_strategy)
+        # per-query transient-retry allowance shared by every retrying
+        # layer (fragment re-invokes, query-level re-drives)
+        self.retry_budget = RetryBudget(self.config.retry.budget)
         # fragments of one pipeline report concurrently
         self._metrics_lock = threading.Lock()
 
@@ -281,6 +300,36 @@ class QueryEngine:
         return self.execute_plan(self.plan_sql(sql))
 
     def execute_plan(self, plan: PhysicalPlan) -> QueryResult:
+        """Run the plan, re-driving it after coordinator-side transient
+        infrastructure failures (registry/ledger/KV write lost
+        mid-protocol, chaos kills). Re-driving is safe: completed
+        pipelines are published checkpoints (cache hits on the re-drive)
+        and abandoned claims are re-won or TTL-stolen. Retries draw from
+        the per-query budget; exhaustion (or ``query_retries`` attempts)
+        surfaces :class:`RetryBudgetExhausted` with the final transient
+        cause chained."""
+        policy = self.config.retry
+        q_attempt = 0
+        while True:
+            try:
+                return self._execute_plan_once(plan)
+            except QueryCancelled:
+                raise
+            except TransientInfraError as e:
+                if not is_transient(e):
+                    raise
+                q_attempt += 1
+                if q_attempt > policy.query_retries \
+                        or not self.retry_budget.try_spend():
+                    raise RetryBudgetExhausted(
+                        f"query {self.query_id}: transient infrastructure "
+                        f"failures exhausted the retry budget "
+                        f"(spent {self.retry_budget.spent}, last: {e})",
+                        last_error=e,
+                        spent=self.retry_budget.spent) from e
+                time.sleep(policy.backoff_s(q_attempt))
+
+    def _execute_plan_once(self, plan: PhysicalPlan) -> QueryResult:
         if self.config.pipelined:
             return self._execute_plan_pipelined(plan)
         t_wall = time.perf_counter()
@@ -1067,8 +1116,25 @@ class QueryEngine:
                                  "fragment": spec["fragment"],
                                  "attempts": attempt,
                                  "last_error": res.error})
+            # every retry draws from the one per-query budget; a fleet
+            # burning through it proves the infrastructure is down, not
+            # hiccuping — surface a permanent, typed failure with the
+            # last transient cause chained
+            if not self.retry_budget.try_spend():
+                cause = TransientInfraError(
+                    res.error or "transient worker failure")
+                raise RetryBudgetExhausted(
+                    f"pipeline {p.pid} fragment {spec['fragment']}: "
+                    f"per-query retry budget exhausted "
+                    f"({self.retry_budget.budget} retries spent)",
+                    last_error=cause,
+                    spent=self.retry_budget.spent) from cause
             self.observer.on_retry(self.query_id, p.pid, spec["fragment"],
                                    attempt)
+            # bounded exponential backoff with full jitter before the
+            # re-invoke (decorrelates a fleet retrying one throttled
+            # prefix); delays are wall-clock and deliberately tiny
+            time.sleep(self.config.retry.backoff_s(attempt))
             # Reassignment: after two failures, split a multi-unit
             # fragment's inputs across an additional fresh worker that
             # runs in parallel with the (now half-sized) retry.

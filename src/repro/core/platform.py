@@ -34,6 +34,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.cost import LAMBDA_COLD_START, LAMBDA_WARM_START
+from repro.core.retry import TransientInfraError
 
 # Starvation-avoidance aging: a waiter's effective priority gains one
 # level per interval spent waiting, so a steady stream of high-priority
@@ -207,8 +208,10 @@ class FaultPlan:
         return killed or transient, straggle
 
 
-class TransientWorkerError(RuntimeError):
-    """Infrastructure-level failure (sandbox died, network blip)."""
+class TransientWorkerError(TransientInfraError):
+    """Infrastructure-level failure (sandbox died, network blip).
+    Subclass of the shared :class:`TransientInfraError` taxonomy —
+    kept as a name for back-compat with existing callers."""
 
 
 @dataclasses.dataclass
@@ -228,9 +231,10 @@ class FaasPlatform:
     MAX_HOST_THREADS = 64           # host-resource cap on the pool size
 
     def __init__(self, *, quota: int = 1000, seed: int = 0,
-                 faults: FaultPlan | None = None):
+                 faults: FaultPlan | None = None, chaos=None):
         self.quota = quota
         self.faults = faults or FaultPlan()
+        self.chaos = chaos  # optional ChaosEngine (storms, worker kills)
         self._rng = np.random.default_rng(seed)
         self._lock = threading.Lock()
         self._warm_sandboxes = 0
@@ -299,9 +303,12 @@ class FaasPlatform:
         (response_payload, sim_worker_runtime_s). Thread-safe: sandbox
         bookkeeping is locked; the handler itself runs unlocked so
         concurrent queries overlap."""
+        storm = self.chaos is not None and self.chaos.cold_storm()
         with self._lock:
             self.invocations += 1
-            cold = self._warm_sandboxes <= 0
+            # a cold-start storm forces a cold start without draining
+            # the warm pool (availability blip, not a pool reset)
+            cold = storm or self._warm_sandboxes <= 0
             if cold:
                 self.cold_starts += 1
             else:
@@ -309,6 +316,8 @@ class FaasPlatform:
             start = self._start_latency(cold)
 
         fail, straggle = self.faults.roll(pipeline, fragment, attempt)
+        if self.chaos is not None and self.chaos.worker_kill():
+            fail = True
         if fail:
             # the sandbox died mid-flight; it still cost its startup time
             # but must NOT rejoin the warm pool — the retry pays a fresh
@@ -317,7 +326,10 @@ class FaasPlatform:
             return InvocationResult(None, "transient", start, start, cold)
         try:
             response, runtime = handler(payload)
-        except TransientWorkerError as e:  # pragma: no cover - defensive
+        except TransientInfraError as e:
+            # worker-side infrastructure failure (sandbox death, storage
+            # 503, chaos injection): surfaced as a failed invocation so
+            # the coordinator's fragment retry handles it uniformly
             return InvocationResult(None, str(e), start, start, cold)
         if straggle:
             runtime = runtime * self.faults.straggler_factor

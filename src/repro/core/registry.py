@@ -154,6 +154,14 @@ class ResultRegistry:
                 and time.time() - entry.get("claimed_at", 0.0)
                 > self.claim_ttl_s)
 
+    def _chaos(self):
+        return getattr(self.store, "chaos", None)
+
+    def _kill_once(self, site: str) -> None:
+        chaos = self._chaos()
+        if chaos is not None:
+            chaos.kill_once(site)
+
     def claim(self, sem_hash: str) -> bool:
         """Atomically claim execution of ``sem_hash``.
 
@@ -161,15 +169,31 @@ class ResultRegistry:
         with ``publish`` or ``abandon``. False → the result is already
         complete or another query is executing it (``await_complete``).
         A claim older than ``claim_ttl_s`` is stolen (orphaned owner).
+
+        The claim write is a *versioned CAS*: the claimant captures the
+        key's version token before deciding and the put lands only if
+        the key is still at that version. Two waiters observing the same
+        TTL-expired claim both decide to steal — exactly one conditional
+        put wins; the loser sees the version move and backs off to
+        ``await_complete``. (The in-process lock only serializes local
+        claimants; cross-process exclusion comes from the CAS.)
         """
+        key = self._key(sem_hash)
         with _CLAIM_LOCK:
+            token0 = self.store.version(key)
             entry = self._read(sem_hash)
             if entry is not None and not self._stale(entry):
                 return False
             token = uuid.uuid4().hex
-            self.store.put(self._key(sem_hash), msgpack.packb(
-                {"complete": False, "claimed_at": time.time(),
-                 "owner": token}))
+            blob = msgpack.packb({"complete": False,
+                                  "claimed_at": time.time(),
+                                  "owner": token})
+            if not self.store.put_if_version(key, blob, token0):
+                return False    # lost the steal race to another claimant
+            # chaos: owner dies right after writing its claim and before
+            # recording ownership — the claim is orphaned (no abandon
+            # path) and must be TTL-stolen by a waiter
+            self._kill_once("registry.claim")
             self._owned[sem_hash] = token
             self.claims += 1
             return True
@@ -257,6 +281,10 @@ class ResultRegistry:
                    "n_producers": n_producers, "prefix": prefix,
                    "partitioning": partitioning, "schema": schema}
             self.store.put(key, msgpack.packb(man))
+            # chaos: owner dies right after opening the stream — the
+            # fresh manifest (no done entries) is orphaned; the re-won
+            # claim rewrites it fresh
+            self._kill_once("registry.begin_partial")
         return key
 
     def publish_partial(self, sem_hash: str, fragment: int, info: dict, *,
@@ -278,6 +306,10 @@ class ResultRegistry:
                                          man.get("n_producers") or 0)
             man["version"] += 1
             self.store.put(key, msgpack.packb(man))
+        # chaos: owner dies right after landing one partition — consumers
+        # may already be topping up from it; the abort/abandon path must
+        # poison the stream and let a waiter re-run the pipeline
+        self._kill_once("registry.publish_partial")
 
     def mark_all_submitted(self, sem_hash: str, n_producers: int, *,
                            stream: str = "partial") -> None:
@@ -318,6 +350,9 @@ class ResultRegistry:
         loops may drain and stop watching. The manifest stays until
         ``invalidate`` deletes it with the main entry — removing it here
         would race consumers still reading their last top-up batch."""
+        # chaos: owner dies with every producer done but the stream not
+        # yet sealed — the next owner re-runs and seals
+        self._kill_once("registry.finish_partial")
         key = self.partial_key(sem_hash, stream)
         with _CLAIM_LOCK:
             man = read_manifest(self.store, key)

@@ -18,11 +18,16 @@ from repro.storage.object_store import ObjectStore
 
 
 def make_worker_handler(store: ObjectStore,
-                        footer_cache: FooterCache | None = None):
+                        footer_cache: FooterCache | None = None,
+                        cost_model: CostModel | None = None):
+    # cost_model (optional): enables hedged reads — workers re-trigger
+    # tail-latency GETs at the tier's break-even timeout instead of the
+    # constant straggler timeout
     cache = footer_cache if footer_cache is not None else FooterCache()
 
     def handler(payload: dict) -> tuple[dict, float]:
-        result = execute_fragment(store, payload, footer_cache=cache)
+        result = execute_fragment(store, payload, footer_cache=cache,
+                                  cost_model=cost_model)
         stats = result.stats
         if stats.pipelined:
             # Double-buffered consumption: only the first available

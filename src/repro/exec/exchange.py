@@ -298,7 +298,7 @@ def combine_spec(op: dict) -> dict | None:
                      for name, fn, _ in op["aggs"]]}
 
 
-def execute_merge(store, spec: dict, footer_cache=None):
+def execute_merge(store, spec: dict, footer_cache=None, cost_model=None):
     """Run one merge-wave fragment of a multi-level exchange.
 
     Reads its producer group's combined l0 intermediates, optionally
@@ -318,7 +318,8 @@ def execute_merge(store, spec: dict, footer_cache=None):
     tier = op.get("tier", "s3-standard")
     stats = FragmentStats()
     view = store.with_tier(tier)
-    handler = InputHandler(view, footer_cache=footer_cache)
+    handler = InputHandler(view, footer_cache=footer_cache,
+                           cost_model=cost_model)
     schema = [ColumnSpec(s["name"], s["kind"], s["dtype"])
               for s in op["schema"]]
     names = [c.name for c in schema] + [DEST_COL]

@@ -349,12 +349,14 @@ def _load_exchange_pipelined(handler_for, store: ObjectStore, spec: dict,
 
 def execute_fragment(store: ObjectStore, spec: dict,
                      footer_cache: FooterCache | None = None,
+                     cost_model=None,
                      ) -> FragmentResult:
     cache = footer_cache if footer_cache is not None else FooterCache()
     # Merge-wave fragments of a multi-level exchange are pure host-side
     # re-bucketing (plus partial-state combining): no XLA program.
     if spec["op"]["t"] == "merge_exchange":
-        return exchange.execute_merge(store, spec, footer_cache=cache)
+        return exchange.execute_merge(store, spec, footer_cache=cache,
+                                      cost_model=cost_model)
     stats = FragmentStats()
     # One input handler per storage tier, all sharing the (session-scoped)
     # footer cache — every leaf of this fragment reuses them instead of
@@ -364,7 +366,8 @@ def execute_fragment(store: ObjectStore, spec: dict,
     def handler_for(tier: str | None) -> InputHandler:
         if tier not in handlers:
             view = store if tier is None else store.with_tier(tier)
-            handlers[tier] = InputHandler(view, footer_cache=cache)
+            handlers[tier] = InputHandler(view, footer_cache=cache,
+                                          cost_model=cost_model)
         return handlers[tier]
 
     fn, leaves, kernel, fn_key = _compiled(

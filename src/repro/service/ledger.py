@@ -223,6 +223,12 @@ class RequestLedger:
                 entry.owner = None
                 entry.lease_expires = 0.0
             self._write(entry)
+            # chaos: the service instance dies right after the CAS
+            # landed this transition — the entry is consistent but the
+            # owner is gone; lease expiry must hand it to a peer
+            chaos = getattr(self.store, "chaos", None)
+            if chaos is not None:
+                chaos.kill_once(f"ledger.{to.value}")
             return entry
 
     # -- ownership / leases --------------------------------------------------
@@ -241,11 +247,19 @@ class RequestLedger:
             return None
 
     def renew_lease(self, request_id: str, owner: str) -> bool:
-        """Extend the owner's lease on a live entry; False if lost."""
+        """Extend the owner's lease on a live entry; False if lost.
+
+        An *expired* lease cannot be renewed even by its original owner:
+        once the deadline passed, ``recover_expired`` may already have
+        handed the request to a peer (or is about to) — a slow-but-alive
+        owner renewing after expiry would resurrect ownership it no
+        longer holds and run the query twice. The owner must treat the
+        False as a fencing signal and drop the request."""
         with _LEDGER_LOCK:
             entry = self._read(request_id)
             if entry is None or entry.owner != owner \
-                    or entry.status.terminal:
+                    or entry.status.terminal \
+                    or entry.lease_expires < time.time():
                 return False
             entry.version += 1
             entry.lease_expires = time.time() + self.lease_ttl_s

@@ -295,17 +295,25 @@ class QueryService:
 
     # -- dispatcher ----------------------------------------------------------
     def _dispatch_loop(self) -> None:
+        from repro.core.chaos import ChaosKill
         poll = 0.02
         last_recover = time.monotonic()
         while not self._closing.is_set():
-            self._harvest_finished()
-            self._renew_leases()
-            now = time.monotonic()
-            if now - last_recover >= self.ledger.lease_ttl_s / 3:
-                self.recovered_requests += len(
-                    self.ledger.recover_expired())
-                last_recover = now
-            self._admit_queued()
+            try:
+                self._harvest_finished()
+                self._renew_leases()
+                now = time.monotonic()
+                if now - last_recover >= self.ledger.lease_ttl_s / 3:
+                    self.recovered_requests += len(
+                        self.ledger.recover_expired())
+                    last_recover = now
+                self._admit_queued()
+            except ChaosKill:
+                # instance death: the dispatcher stops cold, leaving
+                # ledger entries to lease expiry — a peer (or a restart)
+                # recovers them via recover_expired
+                self._closing.set()
+                return
             self._closing.wait(poll)
 
     def _admit_queued(self) -> None:

@@ -47,6 +47,7 @@ class IoStats:
     row_groups_pruned: int = 0
     footer_hits: int = 0             # footer served from the shared cache
     coalesced_chunks: int = 0        # chunk fetches merged into ranged GETs
+    hedges: int = 0                  # cost-model-priced duplicate GETs
 
     def merge(self, other: "IoStats") -> None:
         self.requests += other.requests
@@ -57,6 +58,7 @@ class IoStats:
         self.row_groups_pruned += other.row_groups_pruned
         self.footer_hits += other.footer_hits
         self.coalesced_chunks += other.coalesced_chunks
+        self.hedges += other.hedges
 
 
 @dataclasses.dataclass
@@ -121,7 +123,8 @@ class InputHandler:
     def __init__(self, store: ObjectStore, *, pool_size: int = 16,
                  straggler_timeout_s: float = 0.2, max_retriggers: int = 2,
                  footer_cache: FooterCache | None = None,
-                 coalesce_gap: int = COALESCE_GAP_BYTES):
+                 coalesce_gap: int = COALESCE_GAP_BYTES,
+                 cost_model=None):
         # coalesce_gap: max wasted bytes between chunks sharing one GET;
         # 0 merges only strictly adjacent chunks, negative disables
         # coalescing (one GET per chunk)
@@ -132,6 +135,13 @@ class InputHandler:
         self.footer_cache = footer_cache if footer_cache is not None \
             else FooterCache()
         self.coalesce_gap = coalesce_gap
+        # hedged reads: with a cost model attached, the re-trigger
+        # timeout is not a constant but the tier's break-even point —
+        # hedge exactly when waiting longer costs more GiB-seconds than
+        # the duplicate request costs in read-request cents
+        self.hedged = cost_model is not None
+        if self.hedged:
+            self.straggler_timeout_s = cost_model.hedge_timeout_s(store.tier)
 
     # -- single requests with retriggering ---------------------------------
     def _get(self, key: str, rng: tuple[int, int] | None, stats: IoStats,
@@ -148,9 +158,16 @@ class InputHandler:
         deadline = self.straggler_timeout_s
         retriggers = 0
         while effective > deadline and retriggers < self.max_retriggers:
-            retry = self.store.get(key, rng)
+            try:
+                retry = self.store.get(key, rng)
+            except Exception:
+                # a failed duplicate never hurts: the original request
+                # already returned the bytes — stop hedging this fetch
+                break
             stats.requests += 1
             stats.retriggers += 1
+            if self.hedged:
+                stats.hedges += 1
             stats.bytes += retry.nbytes
             lat.busy.append(retry.sim_latency_s)
             effective = min(effective, deadline + retry.sim_latency_s)
@@ -334,7 +351,9 @@ class OutputHandler:
                        for c in schema}
         data = pax.write_pax(columns, schema, self.row_group_rows,
                              splits=splits)
-        res = self.store.put(key, data)
+        # torn-write protection: a producer killed mid-PUT must never
+        # leave a readable partial object at the final key
+        res = self.store.put_committed(key, data)
         stats.requests += 1
         stats.bytes += res.nbytes
         stats.sim_time_s += res.sim_latency_s

@@ -17,11 +17,21 @@ import os
 import tempfile
 import threading
 import time
+import uuid
 from typing import Callable, Iterable
 
 import numpy as np
 
 from repro.storage.tiers import TIERS, StorageTier
+
+
+def _transient(msg: str) -> Exception:
+    # Lazy import: the storage layer must not trigger the repro.core
+    # package init at module-import time (core → sql → data → storage
+    # would cycle). sys.modules caching makes the per-call cost a dict
+    # lookup; fault paths are rare anyway.
+    from repro.core.retry import TransientInfraError
+    return TransientInfraError(msg)
 
 # Watch (version-polling) backoff: polling a key's version is a HEAD
 # analog — free — but each poll is a syscall/lock acquisition, so waiters
@@ -82,6 +92,25 @@ class Backend:
 
     def delete(self, key: str) -> None:
         raise NotImplementedError
+
+    def rename(self, src: str, dst: str) -> None:
+        """Move ``src`` to ``dst`` (atomic where the backend allows it) —
+        the commit step of torn-write-protected puts."""
+        data = self.get(src, None)
+        self.put(dst, data)
+        self.delete(src)
+
+    def put_if_version(self, key: str, data: bytes,
+                       expected: str | None) -> bool:
+        """Conditional put: lands only if the key's current version
+        equals ``expected`` (None = key absent). Returns True iff the
+        write landed. Base implementation is check-then-put — atomic
+        enough for single-process backends only; backends with an
+        in-process lock override with a real compare-and-swap."""
+        if self.version(key) != expected:
+            return False
+        self.put(key, data)
+        return True
 
     # -- watch/notify seam -------------------------------------------------
     def version(self, key: str) -> str | None:
@@ -166,6 +195,27 @@ class MemoryBackend(Backend):
             self._objects.pop(key, None)
             self._watch_cv.notify_all()
 
+    def rename(self, src: str, dst: str) -> None:
+        with self._lock:
+            data = self._objects.pop(src)
+            self._versions.pop(src, None)
+            self._objects[dst] = data
+            self._versions[dst] = self._versions.get(dst, 0) + 1
+            self._watch_cv.notify_all()
+
+    def put_if_version(self, key: str, data: bytes,
+                       expected: str | None) -> bool:
+        # real CAS: version check and write under one lock acquisition
+        with self._lock:
+            cur = (f"v{self._versions[key]}-{len(self._objects[key])}"
+                   if key in self._objects else None)
+            if cur != expected:
+                return False
+            self._objects[key] = bytes(data)
+            self._versions[key] = self._versions.get(key, 0) + 1
+            self._watch_cv.notify_all()
+            return True
+
     def watch(self, key: str, token: str | None, deadline: float,
               cancel_check: Callable[[], None] | None = None) -> str | None:
         with self._watch_cv:
@@ -248,6 +298,11 @@ class FilesystemBackend(Backend):
         except FileNotFoundError:
             pass
 
+    def rename(self, src: str, dst: str) -> None:
+        dpath = self._path(dst)
+        os.makedirs(os.path.dirname(dpath), exist_ok=True)
+        os.replace(self._path(src), dpath)  # atomic on one filesystem
+
 
 class ObjectStore:
     """A keyed object store with a tier latency/cost model attached.
@@ -266,6 +321,7 @@ class ObjectStore:
         self._rng_lock = threading.Lock()
         self.stats = StoreStats()
         self._stats_lock = threading.Lock()
+        self.chaos = None  # optional ChaosEngine injecting storage faults
 
     # -- tier views --------------------------------------------------------
     def with_tier(self, tier: str | StorageTier) -> "ObjectStore":
@@ -276,13 +332,26 @@ class ObjectStore:
         view._rng_lock = self._rng_lock
         view.stats = self.stats        # shared accounting
         view._stats_lock = self._stats_lock
+        view.chaos = self.chaos        # shared fault schedule
         return view
 
+    # -- chaos -------------------------------------------------------------
+    def _chaos(self):
+        """The attached chaos engine, or None. The KV tier is exempt
+        from random storage faults (conditional writes are atomic in the
+        modeled backend); its failure modes are the explicit protocol
+        kill points instead."""
+        ch = self.chaos
+        if ch is None or self.tier.name == "dynamodb":
+            return None
+        return ch
+
     # -- accounting --------------------------------------------------------
-    def _account(self, *, write: bool, nbytes: int) -> tuple[float, float]:
+    def _account(self, *, write: bool, nbytes: int,
+                 scale: float = 1.0) -> tuple[float, float]:
         with self._rng_lock:
             latency = self.tier.draw_latency_s(self._rng, write=write,
-                                               nbytes=nbytes)
+                                               nbytes=nbytes) * scale
         cost = self.tier.request_cost_cents(write=write, nbytes=nbytes)
         with self._stats_lock:
             if write:
@@ -297,14 +366,86 @@ class ObjectStore:
 
     # -- object API --------------------------------------------------------
     def put(self, key: str, data: bytes) -> RequestResult:
+        ch = self._chaos()
+        scale = 1.0
+        if ch is not None:
+            fault = ch.storage_fault("put", key)
+            if fault == "transient":
+                raise _transient(
+                    f"chaos: transient PUT failure for {key}")
+            if fault == "throttle":
+                # 503 SlowDown: the round trip happened and its latency
+                # is billed, but no bytes landed
+                with self._stats_lock:
+                    self.stats.sim_latency_s += ch.config.throttle_latency_s
+                raise _transient(f"chaos: 503 SlowDown on PUT {key}")
+            if fault == "torn":
+                # sandbox died mid-PUT: a strict prefix of the bytes
+                # lands under the key, and nobody cleans it up
+                self.backend.put(key, bytes(data)[:max(1, len(data) // 2)])
+                raise _transient(
+                    f"chaos: sandbox died mid-PUT of {key} (torn object)")
+            scale = ch.latency_scale("put")
         self.backend.put(key, data)
-        latency, cost = self._account(write=True, nbytes=len(data))
+        latency, cost = self._account(write=True, nbytes=len(data),
+                                      scale=scale)
         return RequestResult(None, latency, cost, len(data))
+
+    def put_committed(self, key: str, data: bytes) -> RequestResult:
+        """Torn-write-protected put: write to a temp key, validate that
+        every byte landed (etag/size check), then commit with an atomic
+        rename. A producer killed mid-PUT leaves only an orphaned temp
+        object under ``_tmp/`` — a readable partial object never appears
+        at the final key. Billed as the data PUT; the commit rename is a
+        metadata operation (S3 COPY analog on the same backend, not a
+        second data round trip)."""
+        data = bytes(data)
+        tmp = f"_tmp/{uuid.uuid4().hex}"
+        res = self.put(tmp, data)  # chaos may fail or tear THIS write
+        # etag-validated commit: confirm the temp object is whole before
+        # it becomes visible under the final key
+        if self.backend.version(tmp) is None \
+                or self.backend.size(tmp) != len(data):
+            self.backend.delete(tmp)
+            raise _transient(
+                f"chaos: torn temp object detected before commit of {key}")
+        ch = self._chaos()
+        if ch is not None:
+            # optional kill point: death after upload, before commit —
+            # the final key must stay absent
+            ch.kill_once("storage.commit")
+        self.backend.rename(tmp, key)
+        return RequestResult(None, res.sim_latency_s, res.cost_cents,
+                             len(data))
+
+    def put_if_version(self, key: str, data: bytes,
+                       expected: str | None) -> bool:
+        """Conditional put (DynamoDB conditional-write analog): lands
+        only if the key's current version equals ``expected`` (None =
+        absent). Returns True iff the write landed; billed as one PUT
+        either way (the request happens, condition or not)."""
+        data = bytes(data)
+        ok = self.backend.put_if_version(key, data, expected)
+        self._account(write=True, nbytes=len(data))
+        return ok
 
     def get(self, key: str,
             rng: tuple[int, int] | None = None) -> RequestResult:
+        ch = self._chaos()
+        scale = 1.0
+        if ch is not None:
+            fault = ch.storage_fault("get", key)
+            if fault == "transient":
+                raise _transient(
+                    f"chaos: transient GET failure for {key}")
+            if fault == "throttle":
+                with self._stats_lock:
+                    self.stats.sim_latency_s += ch.config.throttle_latency_s
+                raise _transient(f"chaos: 503 SlowDown on GET {key}")
+            scale = ch.latency_scale("get")
         data = self.backend.get(key, rng)
-        latency, cost = self._account(write=False, nbytes=len(data))
+        latency, cost = self._account(write=False, nbytes=len(data),
+                                      scale=scale)
         return RequestResult(data, latency, cost, len(data))
 
     def size(self, key: str) -> int:

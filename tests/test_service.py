@@ -191,11 +191,18 @@ def test_ledger_lease_expiry_requeues_and_bumps_attempt():
     assert e.owner is None and e.attempt == 1
     # renew_lease from the dead owner must now fail
     assert not led.renew_lease("r", "svc-dead")
-    # a live owner's renewals keep the entry out of recovery
+    # a live owner renewing *before* expiry keeps the entry out of
+    # recovery
     led.claim("r", "svc-live")
-    time.sleep(0.06)
     assert led.renew_lease("r", "svc-live")
     assert led.recover_expired() == []
+    # ...but once the lease lapses, even the original owner is fenced:
+    # recovery may already have handed the request to a peer, so a late
+    # renewal must not resurrect ownership
+    time.sleep(0.1)
+    assert not led.renew_lease("r", "svc-live")
+    assert [e.request_id for e in led.recover_expired()] == ["r"]
+    assert led.get("r").owner is None
 
 
 def test_ledger_entries_filters_and_orders():
