@@ -604,30 +604,47 @@ def bench_pipelined(smoke: bool = False):
 def bench_fusion(smoke: bool = False):
     """Fused kernel dispatch vs the generic jnp operator chain, same data.
 
-    Runs Q6 (→ fused ``filter_agg``) and Q1 (→ ``groupby_onehot``) with
-    the dispatch layer on and off, *asserting numeric parity* — a
-    regression raises and fails the CI bench-smoke job. On CPU the
-    kernels execute in Pallas interpret mode, so wall clock there
-    measures dispatch overhead rather than TPU speedup; the storage
-    request reductions (footer cache + range coalescing) and the
-    kernel-path coverage counts are backend-independent.
+    One row per fused kernel — Q6 (→ ``filter_agg``), Q1
+    (→ ``groupby_onehot``), Q12 (→ ``join_probe_agg``), a grouped
+    min/max (→ ``segmented_minmax``), a non-dict group-by
+    (→ ``sort_agg``), and Q3 (→ ``topk`` on the final stage) — with the
+    dispatch layer on and off, *asserting numeric parity and kernel
+    coverage* — a regression raises and fails the CI bench-smoke job.
+    On CPU the kernels execute in Pallas interpret mode, so wall clock
+    there measures dispatch overhead rather than TPU speedup; the
+    storage request reductions (footer cache + range coalescing) and
+    the kernel-path coverage counts are backend-independent.
     """
     from repro.exec import lower
 
     sf, n_parts = (0.01, 4) if smoke else (0.02, 6)
     cfg = CoordinatorConfig(planner=CFG.planner, use_result_cache=False)
     store, catalog = _db(sf, n_parts=n_parts)
+    items = [
+        ("q6", QUERIES["q6"], "filter_agg"),
+        ("q1", QUERIES["q1"], "groupby_onehot"),
+        ("q12", QUERIES["q12"], "join_probe_agg"),
+        ("minmax", "select l_returnflag, min(l_quantity) as mq, "
+                   "max(l_tax) as mt from lineitem "
+                   "group by l_returnflag order by l_returnflag",
+         "segmented_minmax"),
+        ("sortagg", "select l_orderkey, sum(l_quantity) as s, "
+                    "count(*) as c from lineitem "
+                    "group by l_orderkey order by l_orderkey",
+         "sort_agg"),
+        ("q3", QUERIES["q3"], "topk"),
+    ]
     rows = []
-    for qname in ("q6", "q1"):
+    for qname, sql, kernel in items:
         runs = {}
         for mode in ("fused", "jnp"):
             ctx = contextlib.nullcontext() if mode == "fused" \
                 else lower.disabled()
             with ctx, connect(store, catalog, quota=1000, config=cfg,
                               seed=3) as session:
-                session.sql(QUERIES[qname])         # pay JIT tracing once
+                session.sql(sql)                    # pay JIT tracing once
                 t0 = time.perf_counter()
-                res = session.sql(QUERIES[qname])
+                res = session.sql(sql)
                 wall = time.perf_counter() - t0
                 runs[mode] = (wall, res, res.fetch(store))
         fused_wall, fused, fdata = runs["fused"]
@@ -638,9 +655,13 @@ def bench_fusion(smoke: bool = False):
                 np.asarray(jdata[k], np.float64), rtol=1e-9, atol=1e-9,
                 err_msg=f"fused-vs-jnp parity regression: {qname}.{k}")
         fs, js = fused.stats, generic.stats
+        assert any(p.kernel == kernel and p.kernel_fragments
+                   for p in fs.pipelines), \
+            f"kernel coverage regression: {qname} no longer runs {kernel}"
         rows.append((
             f"fusion/{qname}_fused_vs_jnp", fused_wall * 1e6,
             f"jnp_us={jnp_wall * 1e6:.1f};"
+            f"kernel={kernel};"
             f"kernel_fragments="
             f"{sum(p.kernel_fragments for p in fs.pipelines)};"
             f"requests_fused={sum(p.requests for p in fs.pipelines)};"

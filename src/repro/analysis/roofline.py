@@ -17,6 +17,7 @@ bidirectional rings make this a conservative upper bound).
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 
 from repro.launch.mesh import TPU_V5E
@@ -142,3 +143,173 @@ def model_flops(cfg, shape, *, train: bool) -> float:
                                    else 1)
     mult = 6 if train else 2
     return mult * n * tokens
+
+
+# -- kernel tiling autotune ------------------------------------------------------
+#
+# The analytic half of the roofline: pick Pallas block sizes and resident
+# capacities for the fused query kernels (repro.exec.lower) from the same
+# machine constants the post-hoc analyzer divides by, instead of
+# hand-picked constants. The model is deliberately static — a pure
+# function of the op shape (column counts, group domain, aggregate
+# count) — so the chosen tiling can join the compiled-program cache key
+# and be unit-tested without tracing anything.
+
+# Per-element VMEM cost of a kernel operand lane. Interpret mode runs
+# f64/i64, but the tiling models the TPU execution (f32/i32 lanes) —
+# the cast happens at kernel entry either way.
+_ELEM_BYTES = 4
+
+# Fraction of VMEM a kernel's working set may claim; the rest is head
+# room for Mosaic's double buffering of grid inputs and spills.
+_VMEM_FRACTION = 0.25
+
+_MIN_BLOCK = 128        # ≥ the f32 min tile's lane count (8, 128)
+_MAX_BLOCK = 8192
+
+
+def machine_balance() -> float:
+    """Machine balance point in FLOPs/byte: arithmetic intensities above
+    it are compute-bound on the MXU, below it HBM-bandwidth-bound."""
+    return TPU_V5E["peak_bf16_flops"] / TPU_V5E["hbm_bandwidth"]
+
+
+def vmem_budget_bytes() -> int:
+    return int(TPU_V5E["vmem_bytes"] * _VMEM_FRACTION)
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << max(int(n).bit_length() - 1, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelTiling:
+    """Roofline-chosen tiling for one fused kernel instance.
+
+    ``block_rows`` is the per-grid-step row block; ``resident_rows`` the
+    largest input capacity a fully-VMEM-resident kernel (sort / top-k /
+    join build side) accepts before the dispatch falls back to the XLA
+    path. ``arithmetic_intensity`` and ``dominant`` record which side of
+    the machine balance the kernel lands on at the chosen block.
+    """
+    kernel: str
+    block_rows: int
+    resident_rows: int
+    vmem_bytes: int              # estimated working set at block_rows
+    flops_per_row: float
+    bytes_per_row: float
+    arithmetic_intensity: float
+    dominant: str                # "compute" | "memory"
+
+    @property
+    def key(self) -> tuple:
+        return (self.kernel, self.block_rows, self.resident_rows)
+
+    def as_dict(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "block_rows": self.block_rows,
+            "resident_rows": self.resident_rows,
+            "vmem_bytes": self.vmem_bytes,
+            "flops_per_row": round(self.flops_per_row, 3),
+            "bytes_per_row": round(self.bytes_per_row, 3),
+            "arithmetic_intensity": round(self.arithmetic_intensity, 4),
+            "dominant": self.dominant,
+        }
+
+
+def _finish(kernel: str, block: int, resident: int, ws_bytes: float,
+            flops_per_row: float, bytes_per_row: float) -> KernelTiling:
+    ai = flops_per_row / max(bytes_per_row, 1e-9)
+    dominant = "compute" if ai >= machine_balance() else "memory"
+    return KernelTiling(kernel, block, resident, int(ws_bytes),
+                        flops_per_row, bytes_per_row, ai, dominant)
+
+
+def _grid_block(ws_at, flops_per_row: float, bytes_per_row: float) -> int:
+    """Largest power-of-two block whose working set fits the budget; a
+    compute-bound kernel (AI past the machine balance) halves once —
+    the MXU is the bottleneck anyway and the smaller tile deepens the
+    grid pipeline instead of hogging VMEM."""
+    budget = vmem_budget_bytes()
+    block = _MIN_BLOCK
+    while block * 2 <= _MAX_BLOCK and ws_at(block * 2) <= budget:
+        block *= 2
+    ai = flops_per_row / max(bytes_per_row, 1e-9)
+    if ai >= machine_balance() and block > _MIN_BLOCK:
+        block //= 2
+    return block
+
+
+def filter_agg_tiling(*, n_cols: int, n_aggs: int) -> KernelTiling:
+    """scan→filter→agg: streaming VPU kernel, one (1, A) accumulator."""
+    def ws(b):
+        return (n_cols + 1) * b * _ELEM_BYTES + n_aggs * _ELEM_BYTES
+    flops = 4.0 * n_aggs + 2.0 * n_cols          # pred eval + accumulate
+    bpr = float((n_cols + 1) * _ELEM_BYTES)
+    block = _grid_block(ws, flops, bpr)
+    return _finish("filter_agg", block, _MAX_BLOCK * 16, ws(block),
+                   flops, bpr)
+
+
+def groupby_tiling(kernel: str, *, n_cols: int, n_aggs: int,
+                   n_groups: int) -> KernelTiling:
+    """One-hot grouped aggregation (sum/count matmul on the MXU, plus
+    masked broadcast min/max reductions for ``segmented_minmax``): the
+    (block, K) one-hot tile dominates the working set."""
+    K, A = max(n_groups, 1), n_aggs
+
+    def ws(b):
+        return ((n_cols + 1) * b * _ELEM_BYTES      # input columns + mask
+                + b * K * _ELEM_BYTES               # one-hot matrix
+                + K * (A + 1) * _ELEM_BYTES)        # accumulator tile
+    flops = 2.0 * K * (A + 1)                       # one-hot matmul row
+    bpr = float((n_cols + 1) * _ELEM_BYTES)
+    block = _grid_block(ws, flops, bpr)
+    return _finish(kernel, block, _MAX_BLOCK * 16, ws(block), flops, bpr)
+
+
+def join_probe_tiling(*, n_cols: int, n_payload: int, n_aggs: int,
+                      n_groups: int) -> KernelTiling:
+    """Fused join probe + aggregation: the sorted build side stays
+    resident across every grid step, so the budget splits between the
+    build arrays and the per-step probe block."""
+    budget = vmem_budget_bytes()
+    build_lane = (n_payload + 1) * _ELEM_BYTES      # sorted keys + payload
+    resident = _pow2_floor(max(budget // 2 // build_lane, _MIN_BLOCK))
+    K, A = max(n_groups, 1), n_aggs
+
+    def ws(b):
+        return (resident * build_lane
+                + (n_cols + 1) * b * _ELEM_BYTES
+                + b * K * _ELEM_BYTES
+                + K * (A + 1) * _ELEM_BYTES)
+    # log2(B) binary-search compares + gathers + the agg update
+    flops = 2.0 * math.log2(max(resident, 2)) + 2.0 * K * (A + 1)
+    bpr = float((n_cols + 1) * _ELEM_BYTES)
+    block = _grid_block(ws, flops, bpr)
+    return _finish("join_probe_agg", block, resident, ws(block), flops,
+                   bpr)
+
+
+def resident_sort_tiling(kernel: str, *, n_arrays: int) -> KernelTiling:
+    """Fully-resident sorting kernels (bitonic sort-aggregation, top-k):
+    every operand array plus one scratch copy lives in VMEM for the whole
+    sort network, so capacity — not block — is what the budget caps."""
+    budget = vmem_budget_bytes()
+    lane = 2 * max(n_arrays, 1) * _ELEM_BYTES       # arrays + shifted copy
+    resident = _pow2_floor(max(budget // lane, _MIN_BLOCK))
+    stages = math.log2(max(resident, 2))
+    flops = n_arrays * stages * (stages + 1) / 2    # compare-exchange net
+    bpr = float(n_arrays * _ELEM_BYTES)
+    return _finish(kernel, resident, resident, resident * lane, flops,
+                   bpr)
+
+
+def onehot_group_capacity(n_aggs: int = 4) -> int:
+    """Largest group domain K the one-hot kernels accept: at the minimum
+    block the (block, K) one-hot plus the (K, A+1) accumulator must fit
+    the VMEM budget. Replaces the hand-picked MAX_KERNEL_GROUPS."""
+    budget = vmem_budget_bytes()
+    lane = (_MIN_BLOCK + n_aggs + 1) * _ELEM_BYTES
+    return _pow2_floor(max(budget // lane, 1))

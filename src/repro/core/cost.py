@@ -298,6 +298,39 @@ class CostModel:
         return total_io_s - saved, saved
 
     @staticmethod
+    def pipeline_admission_fraction(completions_s: list[float], *,
+                                    topup_overhead_s: float = 0.01,
+                                    efficiency: float =
+                                    PIPELINE_OVERLAP_EFFICIENCY) -> float:
+        """Cost-model-chosen consumer admission fraction k/n.
+
+        For each candidate k, the expected consumer finish is the k-th
+        producer completion (the admission wait), plus the overlap
+        residue of the producer tail it still has to read — the
+        ``1 - efficiency`` share of the spread ``c[n-1] - c[k-1]`` a
+        double-buffered consumer cannot hide — plus a per-top-up
+        overhead for the ``n - k`` partitions drained after launch
+        (one mostly-hidden ranged GET: about a tier first-byte
+        latency, so ~0.01 s). Skewed fleets (stragglers) admit early
+        to hide the tail; exactly-uniform fleets admit late, where the
+        k-statistic is the same instant anyway and top-ups are pure
+        overhead. An empty completion list (no observations yet)
+        falls back to 0.5, the pre-cost-model constant.
+        """
+        c = sorted(float(x) for x in completions_s or [])
+        n = len(c)
+        if n == 0:
+            return 0.5
+        best_k, best_cost = n, None
+        for k in range(1, n + 1):
+            cost = (c[k - 1]
+                    + (1.0 - efficiency) * (c[-1] - c[k - 1])
+                    + topup_overhead_s * (n - k))
+            if best_cost is None or cost < best_cost - 1e-12:
+                best_k, best_cost = k, cost
+        return best_k / n
+
+    @staticmethod
     def pipeline_start_offset_s(completions_s: list[float],
                                 fraction: float) -> float:
         """When a consumer pipeline may start: the k-th order statistic

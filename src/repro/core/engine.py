@@ -99,6 +99,8 @@ class PipelineReport:
     # kernel dispatch + metadata-cache visibility (section 3.3/3.4 hot path)
     kernel: str = ""               # fused kernel the plan lowers to
     kernel_fragments: int = 0      # fragments that ran on the fused path
+    kernel_miss_reason: str = ""   # why the matcher fell back (if it did)
+    kernel_roofline: dict | None = None   # roofline-chosen tiling
     footer_cache_hits: int = 0
     # adaptive re-optimization (core.adaptive): the static plan's fleet,
     # the planner's row estimate (EXPLAIN ANALYZE est vs actual), the
@@ -193,14 +195,18 @@ class CoordinatorConfig:
     calibrate_selectivity: bool = True
     # Barrier-free pipelined execution (incremental exchange manifests):
     # every pipeline runs on its own scheduler thread; a consumer
-    # launches once `pipeline_start_fraction` of each upstream fleet's
+    # launches once the admission fraction of each upstream fleet's
     # partitions has landed *and* that fleet is fully submitted (the
     # deadlock-freedom gate), tops up as later manifests arrive, and
     # re-optimizes on the first `pilot_k` producers' observed stats
     # extrapolated to the fleet. `pipelined=False` restores the
     # bit-compatible all-or-nothing stage-barrier schedule.
+    # `pipeline_start_fraction=None` (the default) lets the cost model
+    # choose the fraction per upstream fleet from its observed runtime
+    # skew (CostModel.pipeline_admission_fraction); a float forces that
+    # constant fraction everywhere, e.g. the seed behavior's 0.5.
     pipelined: bool = True
-    pipeline_start_fraction: float = 0.5
+    pipeline_start_fraction: float | None = None
     pilot_k: int = 2
     pipelined_wait_timeout_s: float = 600.0
     # Scan-selectivity pilot: an uncalibrated scan→filter pipeline with
@@ -418,6 +424,15 @@ class QueryEngine:
         return QueryResult(self._result_locations(root),
                            plan.output_names, stats)
 
+    def _admission_fraction(self, completions_s: list[float]) -> float:
+        """The consumer-admission fraction for one upstream fleet: the
+        config's forced constant when set, else the cost model's pick
+        from the fleet's observed completion skew."""
+        f = self.config.pipeline_start_fraction
+        if f is not None:
+            return f
+        return self.cost_model.pipeline_admission_fraction(completions_s)
+
     def _sim_timeline(self, plan: PhysicalPlan, stages: list[list[int]],
                       reports: dict[int, PipelineReport],
                       stats: QueryStats) -> None:
@@ -426,7 +441,6 @@ class QueryEngine:
         barrier) but at the admission fraction's k-th order statistic of
         each upstream fleet's simulated completions — and cannot finish
         before the producers whose tail partitions it still reads."""
-        frac = self.config.pipeline_start_fraction
         end: dict[int, float] = {}
         for stage in stages:
             for pid in stage:
@@ -438,6 +452,8 @@ class QueryEngine:
                     if rr.cache_hit:
                         continue
                     if r.pipelined:
+                        frac = self._admission_fraction(
+                            rr.producer_completions)
                         avail = (rr.sim_start_s + rr.dispatch_s
                                  + CostModel.pipeline_start_offset_s(
                                      rr.producer_completions, frac))
@@ -487,6 +503,9 @@ class QueryEngine:
     def _run_pipeline(self, p: Pipeline, stats: QueryStats) -> PipelineReport:
         report = PipelineReport(p.pid, p.sem_hash, p.n_fragments,
                                 kernel=p.kernel or "",
+                                kernel_miss_reason=p.kernel_miss_reason
+                                or "",
+                                kernel_roofline=p.kernel_roofline,
                                 n_planned=p.n_fragments,
                                 est_rows=p.params.est_out_rows)
         claimed = False
@@ -564,9 +583,9 @@ class QueryEngine:
         self.observer.on_pipeline_start(self.query_id, p.pid, p.sem_hash,
                                         p.n_fragments)
         # broadcast-downgraded sources rewrite the op tree on one copy
-        # (the pipeline's logical core stays untouched); the resulting
-        # join probe runs on the generic jnp fallback of the kernel
-        # dispatch layer
+        # (the pipeline's logical core stays untouched); the rewritten
+        # join probe re-enters kernel dispatch and, when the chain ends
+        # in an aggregate, runs the fused join-probe kernel
         eff_op = apply_broadcast(p.op, p.params.broadcast_sources)
         specs = {
             f: self._fragment_spec(p, f, p.n_fragments, prefix, sources,
@@ -751,6 +770,7 @@ class QueryEngine:
             gate = self._source_gates.get(p.sem_hash) or {}
             self.registry.await_source_ready(
                 p.sem_hash, fraction=self.config.pipeline_start_fraction,
+                cost_model=self.cost_model,
                 stream="l0", cancel_check=self._check_cancel,
                 timeout_s=self.config.pipelined_wait_timeout_s,
                 min_published_at=gate.get("floor"))
@@ -887,7 +907,8 @@ class QueryEngine:
             # the producer figures here — wave workers only finish after
             # the l0 seal, which follows the producer accounting.
             start = CostModel.pipeline_start_offset_s(
-                report.producer_completions, cfg.pipeline_start_fraction)
+                report.producer_completions,
+                self._admission_fraction(report.producer_completions))
             sched = self._sim_schedule([r.sim_runtime_s
                                         for r in results])
             with self._metrics_lock:
@@ -958,6 +979,9 @@ class QueryEngine:
         s = res.payload["stats"]
         ps = res.payload.get("partition_stats") or []
         info = {"rows": s["rows_out"], "bytes": s["bytes_written"],
+                # producer wall time: the admission gate's cost model
+                # reads the landed walls as a pilot of the fleet's skew
+                "wall_s": float(res.sim_runtime_s),
                 "partition_rows": [d["rows"] for d in ps],
                 "partition_bytes": [d["bytes"] for d in ps],
                 "partition_write_s": [float(d.get("write_s", 0.0))
@@ -1265,6 +1289,7 @@ class QueryEngine:
             try:
                 entry = self.registry.await_source_ready(
                     sem, fraction=cfg.pipeline_start_fraction,
+                    cost_model=self.cost_model,
                     cancel_check=self._check_cancel,
                     timeout_s=max(deadline - time.time(), 0.01),
                     min_published_at=floor)
@@ -1439,7 +1464,13 @@ def explain_plan(plan: PhysicalPlan) -> str:
             dest = (f"hash[{','.join(part.keys)}]×{part.n_dest} "
                     f"@{part.tier} ·{part.strategy}"
                     if part.kind == "hash" else "single")
-            kern = f" · kernel={p.kernel}" if p.kernel else ""
+            kern = ""
+            if p.kernel:
+                rl = p.kernel_roofline or {}
+                tile = (f" block={rl['block_rows']}"
+                        f" resident={rl['resident_rows']}"
+                        f" ({rl['dominant']}-bound)" if rl else "")
+                kern = f" · kernel={p.kernel}{tile}"
             lines.append(
                 f"  pipeline {pid}{role} · sem={p.sem_hash[:10]} · "
                 f"{p.n_fragments} workers · "
@@ -1520,6 +1551,18 @@ def explain_analyze(plan: PhysicalPlan, stats: QueryStats) -> str:
                     f"first input {r.first_input_s:.3f}s · "
                     f"{r.topups} top-ups · overlap saved "
                     f"{r.overlap_saved_s:.3f}s{pilot}")
+            if r.kernel:
+                rl = r.kernel_roofline or {}
+                tile = (f" · block={rl['block_rows']} "
+                        f"resident={rl['resident_rows']} "
+                        f"AI={rl['arithmetic_intensity']} "
+                        f"({rl['dominant']}-bound)" if rl else "")
+                lines.append(
+                    f"    kernel: {r.kernel} × "
+                    f"{r.kernel_fragments} fragments{tile}")
+            elif r.kernel_miss_reason:
+                lines.append(
+                    f"    kernel: generic jnp — {r.kernel_miss_reason}")
             lines.append("    ops: " + " → ".join(_op_kinds(p.op)[::-1]))
             for a in r.adaptations:
                 lines.append("    adapted: " + _describe_adaptation(a))

@@ -76,19 +76,33 @@ def read_manifest(store: ObjectStore, key: str) -> dict | None:
     return msgpack.unpackb(store.get(key).data)
 
 
-def partitions_ready(manifest: dict, fraction: float) -> bool:
+def partitions_ready(manifest: dict, fraction: float | None,
+                     *, cost_model=None) -> bool:
     """The consumer-admission gate: a configurable fraction of producer
     partitions landed AND every producer invocation has been submitted
     to the platform's FIFO executor. The second condition is what keeps
     pipelined waiting deadlock-free — an admitted consumer only ever
-    waits on producers that are already running or queued ahead of it."""
+    waits on producers that are already running or queued ahead of it.
+
+    ``fraction=None`` delegates the choice to the cost model: the
+    landed partitions' producer wall times (``wall_s`` in the manifest
+    infos) are a pilot sample of the fleet's runtime skew, and
+    ``cost_model.pipeline_admission_fraction`` picks the fraction that
+    minimizes the expected consumer finish under them. No observations
+    (or no cost model) fall back to the 0.5 constant."""
     if manifest.get("complete"):
         return True
     if not manifest.get("all_submitted"):
         return False
+    done = manifest.get("done") or {}
+    if fraction is None:
+        walls = [i["wall_s"] for i in done.values()
+                 if isinstance(i, dict) and i.get("wall_s") is not None]
+        fraction = (cost_model.pipeline_admission_fraction(walls)
+                    if cost_model is not None and walls else 0.5)
     n = max(1, int(manifest.get("n_producers") or 1))
     need = max(1, math.ceil(fraction * n))
-    return len(manifest.get("done") or {}) >= need
+    return len(done) >= need
 
 
 class ResultRegistry:
@@ -370,7 +384,9 @@ class ResultRegistry:
         return read_manifest(self.store,
                              self.partial_key(sem_hash, stream))
 
-    def await_source_ready(self, sem_hash: str, *, fraction: float,
+    def await_source_ready(self, sem_hash: str, *,
+                           fraction: float | None,
+                           cost_model=None,
                            stream: str = "partial", cancel_check=None,
                            timeout_s: float | None = None,
                            min_published_at: float | None = None
@@ -402,7 +418,7 @@ class ResultRegistry:
                 if man.get("aborted"):
                     raise RuntimeError(
                         f"producer pipeline {sem_hash[:12]} aborted")
-                if partitions_ready(man, fraction):
+                if partitions_ready(man, fraction, cost_model=cost_model):
                     return None
             if cancel_check is not None:
                 cancel_check()

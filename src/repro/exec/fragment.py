@@ -159,7 +159,17 @@ def _compiled(op: dict):
     # read the dispatch switch once: key and lowering gate must agree, or
     # a concurrent toggle could park a generic program under a fused key
     dispatch = lower.enabled()
-    key = (_plan_key(op), dispatch)
+    if dispatch:
+        # cheap match-only pass: the kernel's roofline tiling joins the
+        # cache key (a tiling change must not reuse a stale trace), and
+        # ``final`` ops whose top-k arm misses dispatch on their child —
+        # the coordinator's host sort still runs either way
+        _, tkey, op = lower.dispatch_signature(op)
+    else:
+        tkey = None
+        if op.get("t") == "final":
+            op = op["child"]
+    key = (_plan_key(op), dispatch, tkey)
     with _FN_CACHE_LOCK:
         entry = _FN_CACHE.get(key)
         if entry is not None:
@@ -256,6 +266,12 @@ def _load_scan_exchange(handler_for, store: ObjectStore, spec: dict,
     return out
 
 
+def _read_cost(info) -> int:
+    """Estimated read cost of one upstream partition, from its manifest
+    entry (0 for retired streams whose entries carry no stats)."""
+    return int(info.get("bytes") or 0) if isinstance(info, dict) else 0
+
+
 def _load_exchange_pipelined(handler_for, store: ObjectStore, spec: dict,
                              leaf_op: dict, stats: FragmentStats,
                              ) -> dict[str, np.ndarray]:
@@ -310,8 +326,12 @@ def _load_exchange_pipelined(handler_for, store: ObjectStore, spec: dict,
         if man.get("aborted"):
             raise RuntimeError("upstream producer pipeline aborted")
         known = set(tables) | (set(pending[1]) if pending else set())
-        fresh = sorted(g for g in map(int, man.get("done") or {})
-                       if g not in known)
+        done = man.get("done") or {}
+        # top-up order: most expensive reads first (per-partition bytes
+        # from the partial manifest), so the largest transfers overlap
+        # compute the longest; arrival order carries no such signal
+        fresh = sorted((g for g in map(int, done) if g not in known),
+                       key=lambda g: (-_read_cost(done.get(str(g))), g))
         if fresh:
             keys, preds, lf = exchange.plan_exchange_read(
                 part, src["prefix"], fresh, leaf_op["mode"], me, F,
@@ -370,8 +390,7 @@ def execute_fragment(store: ObjectStore, spec: dict,
                                           cost_model=cost_model)
         return handlers[tier]
 
-    fn, leaves, kernel, fn_key = _compiled(
-        spec["op"] if spec["op"]["t"] != "final" else spec["op"]["child"])
+    fn, leaves, kernel, fn_key = _compiled(spec["op"])
     stats.kernel = kernel
 
     # 1. Load leaf inputs (host side, ranged + pruned + re-triggered reads).

@@ -10,16 +10,41 @@ compatibly — for every unmatched shape.
 
 Matched patterns (paper section 3.3's one-pass vectorized worker loop):
 
-  ``scan → [filter…] → partial_agg`` (direct, no groups)
+  ``scan → [filter…] → partial_agg/merge_agg`` (direct, no groups)
       → :func:`repro.kernels.ops.fused_filter_agg` — predicate and
         aggregate inputs evaluate inside the kernel over VMEM column
         tiles; one (1, A) accumulator tile crosses the row-block grid.
         TPC-H Q6 is the canonical instance.
 
-  ``scan → [filter…] → partial_agg`` (direct, K = prod(sizes) groups)
-      → :func:`repro.kernels.ops.fused_groupby` — group ids become a
-        one-hot matrix against the aggregate inputs; grouped sums run on
-        the MXU, scatter-free. TPC-H Q1 is the canonical instance.
+  ``scan → [filter…] → partial_agg/merge_agg`` (direct, K groups)
+      → :func:`repro.kernels.ops.fused_groupby` when every aggregate is
+        a sum/count (pure one-hot matmul on the MXU, TPC-H Q1), else
+        :func:`~repro.kernels.ops.fused_groupby_minmax`, which adds
+        masked broadcast min/max reductions over the same one-hot tile.
+
+  ``scan → [filter…] → partial_agg`` (sort strategy)
+      → :func:`repro.kernels.ops.fused_sort_agg` — fully VMEM-resident
+        bitonic sort by group keys plus a segmented scan; large or
+        unsized group domains that the one-hot kernels reject.
+
+  ``join(probe=[filter…]→scan, build=scan) → [filter…] → partial_agg``
+      → :func:`repro.kernels.ops.fused_join_probe_agg` — the sorted
+        build side stays VMEM-resident; each probe block binary-searches
+        it in-kernel and folds straight into the aggregation tile
+        (TPC-H Q12/Q14/Q19).
+
+  ``final`` with ORDER BY + LIMIT over ``[filter…]→scan``
+      → :func:`repro.kernels.ops.fused_topk` — bitonic sort with per-key
+        descending directions; only the top ``limit`` rows stay valid,
+        and the coordinator's host sort is idempotent on them (Q3's
+        final pipeline).
+
+Block sizes and resident capacities are not hand constants: every arm
+asks ``repro.analysis.roofline`` for a :class:`KernelTiling` derived from
+the kernel's working set, the VMEM budget, and its arithmetic intensity
+relative to the machine balance. The tiling key joins the compiled-
+program cache key (``dispatch_signature``) and its estimates surface in
+EXPLAIN via :func:`kernel_info`.
 
 Lowering is value-semantics-preserving: predicates/arguments are the same
 compiled expressions the generic path uses, and in interpret mode (CPU CI)
@@ -27,10 +52,12 @@ the kernels accumulate in float64 like the jnp path. ``set_enabled`` /
 ``disabled()`` switch the layer off globally — used by the parity tests
 and the fused-vs-generic benchmark rows.
 
-Adding a new fused kernel: extend :func:`match_fragment` with the new op
-shape, add the kernel factory under ``repro.kernels``, and emit its
-lowered program in :func:`lower_fragment`; everything downstream (jit
-caching, stats, explain output) picks it up from the returned
+Adding a new fused kernel: add a match arm in :func:`match_fragment_ex`
+(return a :class:`Match` with a roofline tiling, or a precise miss
+reason), add the kernel factory under ``repro.kernels`` plus its tiling
+model in ``repro.analysis.roofline``, and emit the lowered program in
+:func:`lower_fragment`; everything downstream (jit caching, stats,
+explain output, the fusion benchmark) picks it up from the returned
 :class:`Lowered`.
 """
 
@@ -44,15 +71,25 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import roofline
+from repro.exec import operators as xops
 from repro.exec.expr import compile_expr, expr_from_dict
 from repro.exec.operators import decode_group_ids, mixed_radix_strides
 from repro.kernels import ops as kops
 
 # One-hot grouped aggregation materializes a (block, K) matrix in VMEM;
-# cap K well below the direct-agg strategy bound so the tile stays small.
-MAX_KERNEL_GROUPS = 4096
-UNGROUPED_AGG_FNS = frozenset({"sum", "count", "min", "max"})
-GROUPED_AGG_FNS = frozenset({"sum", "count"})   # one-hot matmul can't min/max
+# the cap is the largest K whose tile fits the roofline VMEM budget at
+# the minimum block (4096 on v5e — well below the planner's direct-agg
+# strategy bound).
+MAX_KERNEL_GROUPS = roofline.onehot_group_capacity()
+AGG_FNS = frozenset({"sum", "count", "min", "max"})
+ONEHOT_AGG_FNS = frozenset({"sum", "count"})  # pure-matmul groupby subset
+
+# Back-compat aliases (pre-PR9 names).
+UNGROUPED_AGG_FNS = AGG_FNS
+GROUPED_AGG_FNS = ONEHOT_AGG_FNS
+
+_LEAF_OPS = ("scan_table", "scan_exchange")
 
 _enabled = os.environ.get("SKYRISE_DISABLE_FUSED", "") not in ("1", "true")
 
@@ -80,12 +117,23 @@ def disabled():
 
 @dataclasses.dataclass
 class Match:
-    kernel: str                  # "filter_agg" | "groupby_onehot"
-    leaf: dict                   # the scan_table op feeding the chain
-    preds: list[dict]            # filter predicate expr dicts (conjoined)
+    kernel: str                  # kernel name (see module docstring)
+    leaf: dict                   # probe-side scan op feeding the chain
+    preds: list[dict]            # post-join/agg-level predicate dicts
     group_cols: list[str]
     sizes: list[int]
     aggs: list                   # [name, fn, arg expr dict | None]
+    tiling: roofline.KernelTiling
+    # join_probe_agg only:
+    build_leaf: dict | None = None
+    probe_preds: list = dataclasses.field(default_factory=list)
+    build_preds: list = dataclasses.field(default_factory=list)
+    probe_key: str | None = None
+    build_key: str | None = None
+    payload: list = dataclasses.field(default_factory=list)
+    # topk only:
+    sort_keys: list = dataclasses.field(default_factory=list)
+    limit: int | None = None
 
 
 @dataclasses.dataclass
@@ -93,6 +141,7 @@ class Lowered:
     fn: Callable                 # blocks → (columns, mask)
     leaves: list[tuple[str, dict]]
     kernel: str
+    tiling: roofline.KernelTiling | None = None
 
 
 def _expr_cols(d: dict, out: set) -> None:
@@ -107,47 +156,205 @@ def _expr_cols(d: dict, out: set) -> None:
                     _expr_cols(x, out)
 
 
-def match_fragment(op: dict) -> Match | None:
-    """Recognize a fragment op tree one of the fused kernels covers."""
-    if op.get("t") != "partial_agg" or op.get("strategy") != "direct":
-        return None
+def _peel_filters(op: dict) -> tuple[list[dict], dict]:
     preds: list[dict] = []
-    child = op["child"]
-    while child.get("t") == "filter":
-        preds.append(child["pred"])
-        child = child["child"]
-    if child.get("t") != "scan_table":
-        return None
-    group_cols = list(op["group_cols"])
-    sizes = list(op["sizes"] or [])
-    fns = {fn for _, fn, _ in op["aggs"]}
-    if group_cols:
-        if len(sizes) != len(group_cols):
-            return None
-        if int(np.prod(sizes)) > MAX_KERNEL_GROUPS:
-            return None
-        if not fns <= GROUPED_AGG_FNS:
-            return None
-        kernel = "groupby_onehot"
-    else:
-        if not fns <= UNGROUPED_AGG_FNS:
-            return None
-        kernel = "filter_agg"
-    needed: set[str] = set(group_cols)
+    while op.get("t") == "filter":
+        preds.append(op["pred"])
+        op = op["child"]
+    return preds, op
+
+
+def _leaf_width(leaf: dict, fallback: int) -> int:
+    """Column count feeding a kernel: exact for table scans, an estimate
+    for exchange scans whose schema is only known at runtime."""
+    if leaf.get("t") == "scan_table":
+        return len(leaf["columns"])
+    return max(fallback, 1)
+
+
+def match_fragment_ex(op: dict) -> tuple[Match | None, str | None]:
+    """Recognize a fragment op tree one of the fused kernels covers.
+
+    Returns ``(match, None)`` on success or ``(None, miss_reason)`` — a
+    short human-readable account of the first structural property that
+    disqualified the tree, surfaced in EXPLAIN ANALYZE so erosion of
+    match coverage is observable.
+    """
+    t = op.get("t")
+    if t == "final":
+        return _match_final(op)
+    if t in ("partial_agg", "merge_agg"):
+        return _match_agg(op)
+    return None, f"no fusible root (op={t})"
+
+
+def _match_final(op: dict):
+    sort_keys = [(k, bool(d)) for k, d in (op.get("sort_keys") or [])]
+    limit = op.get("limit")
+    if not sort_keys or limit is None:
+        return None, "final lacks ORDER BY + LIMIT (no top-k)"
+    if op.get("project"):
+        return None, "final has a post-project"
+    preds, child = _peel_filters(op["child"])
+    if child.get("t") not in _LEAF_OPS:
+        return None, f"unsupported op under final (op={child.get('t')})"
+    needed: set[str] = {k for k, _ in sort_keys}
     for p in preds:
         _expr_cols(p, needed)
-    for _, _, arg in op["aggs"]:
+    if child["t"] == "scan_table" and not needed <= set(child["columns"]):
+        missing = sorted(needed - set(child["columns"]))
+        return None, f"columns {missing} absent from scan"
+    tiling = roofline.resident_sort_tiling(
+        "topk", n_arrays=_leaf_width(child, len(sort_keys) + 4) + 2)
+    return Match("topk", child, preds, [], [], [], tiling,
+                 sort_keys=sort_keys, limit=int(limit)), None
+
+
+def _match_agg(op: dict):
+    strategy = op.get("strategy")
+    group_cols = list(op["group_cols"])
+    sizes = list(op["sizes"] or [])
+    aggs = list(op["aggs"])
+    fns = {fn for _, fn, _ in aggs}
+    if not fns <= AGG_FNS:
+        return None, f"aggregate fns {sorted(fns - AGG_FNS)} unsupported"
+    needed: set[str] = set(group_cols)
+    for _, _, arg in aggs:
         if arg is not None:
             _expr_cols(arg, needed)
-    if not needed <= set(child["columns"]):
-        return None
-    return Match(kernel, child, preds, group_cols, sizes, list(op["aggs"]))
+    preds, child = _peel_filters(op["child"])
+    for p in preds:
+        _expr_cols(p, needed)
+
+    if strategy == "sort":
+        if child.get("t") not in _LEAF_OPS:
+            return None, (f"sort-strategy aggregate over non-scan child "
+                          f"(op={child.get('t')})")
+        if child["t"] == "scan_table" and \
+                not needed <= set(child["columns"]):
+            missing = sorted(needed - set(child["columns"]))
+            return None, f"columns {missing} absent from scan"
+        tiling = roofline.resident_sort_tiling(
+            "sort_agg", n_arrays=2 + len(group_cols) + len(aggs))
+        return Match("sort_agg", child, preds, group_cols, sizes, aggs,
+                     tiling), None
+    if strategy != "direct":
+        return None, f"aggregation strategy {strategy!r} unsupported"
+
+    if group_cols:
+        if len(sizes) != len(group_cols):
+            return None, "group columns not dict-coded (no sizes)"
+        K = int(np.prod(sizes))
+        if K > MAX_KERNEL_GROUPS:
+            return None, (f"group domain {K} exceeds the one-hot VMEM cap "
+                          f"{MAX_KERNEL_GROUPS}")
+    else:
+        K = 0
+
+    if child.get("t") == "join":
+        return _match_join(op, child, preds, needed, group_cols, sizes,
+                           aggs, K)
+    if child.get("t") not in _LEAF_OPS:
+        return None, f"unsupported child op {child.get('t')}"
+    if child["t"] == "scan_table" and not needed <= set(child["columns"]):
+        missing = sorted(needed - set(child["columns"]))
+        return None, f"columns {missing} absent from scan"
+    if not group_cols:
+        kernel = "filter_agg"
+        tiling = roofline.filter_agg_tiling(
+            n_cols=_leaf_width(child, len(needed)), n_aggs=len(aggs))
+    else:
+        kernel = ("groupby_onehot" if fns <= ONEHOT_AGG_FNS
+                  else "segmented_minmax")
+        tiling = roofline.groupby_tiling(
+            kernel, n_cols=_leaf_width(child, len(needed)),
+            n_aggs=len(aggs), n_groups=K)
+    return Match(kernel, child, preds, group_cols, sizes, aggs,
+                 tiling), None
+
+
+def _match_join(op, join, preds, needed, group_cols, sizes, aggs, K):
+    probe_preds, probe_leaf = _peel_filters(join["probe"])
+    if probe_leaf.get("t") not in _LEAF_OPS:
+        return None, (f"join probe side is not a scan chain "
+                      f"(op={probe_leaf.get('t')})")
+    build_preds, build_leaf = _peel_filters(join["build"])
+    if build_leaf.get("t") not in _LEAF_OPS:
+        return None, (f"join build side is not a scan chain "
+                      f"(op={build_leaf.get('t')})")
+    payload = list(join["payload"])
+    probe_key, build_key = join["probe_key"], join["build_key"]
+    for p in probe_preds:
+        _expr_cols(p, needed)
+    needed.add(probe_key)
+    if probe_leaf["t"] == "scan_table":
+        avail = set(probe_leaf["columns"]) | set(payload)
+        if not needed <= avail:
+            missing = sorted(needed - avail)
+            return None, f"columns {missing} absent from join inputs"
+    if build_leaf["t"] == "scan_table":
+        bneeded = {build_key} | set(payload)
+        for p in build_preds:
+            _expr_cols(p, bneeded)
+        if not bneeded <= set(build_leaf["columns"]):
+            missing = sorted(bneeded - set(build_leaf["columns"]))
+            return None, f"columns {missing} absent from build scan"
+    tiling = roofline.join_probe_tiling(
+        n_cols=_leaf_width(probe_leaf, len(needed)),
+        n_payload=len(payload), n_aggs=len(aggs), n_groups=K)
+    return Match("join_probe_agg", probe_leaf, preds, group_cols, sizes,
+                 aggs, tiling, build_leaf=build_leaf,
+                 probe_preds=probe_preds, build_preds=build_preds,
+                 probe_key=probe_key, build_key=build_key,
+                 payload=payload), None
+
+
+def match_fragment(op: dict) -> Match | None:
+    """Recognize a fragment op tree one of the fused kernels covers."""
+    m, _ = match_fragment_ex(op)
+    return m
+
+
+def kernel_miss_reason(op: dict) -> str | None:
+    """Why ``op`` stays on the generic jnp path (None if it matched)."""
+    _, miss = match_fragment_ex(op)
+    return miss
+
+
+def dispatch_signature(op: dict) -> tuple[str, tuple | None, dict]:
+    """(kernel name or "", tiling cache key, effective op) for an op tree
+    — matching only, no program construction, so the compiled-program
+    cache can form its key cheaply. ``final`` ops whose top-k arm misses
+    dispatch on their child (the coordinator's host sort still runs)."""
+    m, _ = match_fragment_ex(op)
+    if m is not None:
+        return m.kernel, m.tiling.key, op
+    if op.get("t") == "final":
+        return dispatch_signature(op["child"])
+    return "", None, op
 
 
 def match_kernel(op: dict) -> str | None:
     """Name of the fused kernel ``op`` lowers to, or None (plan/explain)."""
-    m = match_fragment(op)
-    return m.kernel if m is not None else None
+    kernel, _, _ = dispatch_signature(op)
+    return kernel or None
+
+
+def kernel_info(op: dict) -> dict:
+    """Dispatch summary for EXPLAIN: ``{"kernel", "miss", "tiling"}``.
+
+    ``kernel`` is the fused kernel the pipeline will actually run with
+    (for ``final`` ops, possibly on the child under the host sort) or
+    None; ``miss`` is the miss reason for the op that executes; ``tiling``
+    the roofline tiling estimates of the matched kernel.
+    """
+    m, miss = match_fragment_ex(op)
+    if m is None and op.get("t") == "final":
+        return kernel_info(op["child"])
+    if m is None:
+        return {"kernel": None, "miss": miss, "tiling": None}
+    return {"kernel": m.kernel, "miss": None,
+            "tiling": m.tiling.as_dict()}
 
 
 def _compile_pred(preds: list[dict]):
@@ -163,51 +370,178 @@ def _compile_pred(preds: list[dict]):
     return pred
 
 
+def _is_pow2(n: int) -> bool:
+    return n > 0 and n & (n - 1) == 0
+
+
 def lower_fragment(op: dict) -> Lowered | None:
     """Build the kernel-backed program for a matched fragment op tree.
 
     The returned function consumes the same leaf blocks as the generic
     chain and produces outputs identical in names, shapes, dtypes, and
-    mask semantics to ``operators.make_direct_agg`` — callers need no
+    mask semantics to the generic operators — callers need no
     special-casing beyond swapping the function.
     """
     m = match_fragment(op)
     if m is None:
         return None
+    if m.kernel == "topk":
+        return _lower_topk(m)
+    if m.kernel == "join_probe_agg":
+        return _lower_join_probe(op, m)
+    if m.kernel == "sort_agg":
+        return _lower_sort_agg(op, m)
+    return _lower_direct_agg(m)
+
+
+def _agg_closures(aggs):
+    names = [name for name, _, _ in aggs]
+    fns = [(fn, compile_expr(expr_from_dict(arg)) if arg is not None
+            else None) for _, fn, arg in aggs]
+    return names, fns
+
+
+def _gid_fn(group_cols, sizes):
+    strides = mixed_radix_strides(sizes)
+
+    def gid(cols):
+        g = jnp.zeros(cols[group_cols[0]].shape, jnp.int32)
+        for c, s in zip(group_cols, strides):
+            g = g + cols[c].astype(jnp.int32) * s
+        return g
+    return gid
+
+
+def _lower_direct_agg(m: Match) -> Lowered:
     pred = _compile_pred(m.preds)
-    agg_names = [name for name, _, _ in m.aggs]
-    aggs = [(fn, compile_expr(expr_from_dict(arg)) if arg is not None
-             else None) for _, fn, arg in m.aggs]
+    agg_names, aggs = _agg_closures(m.aggs)
     leaf_id = "in0"
     leaves = [(leaf_id, m.leaf)]
+    block = m.tiling.block_rows
 
     if m.kernel == "filter_agg":
         def fn(blocks):
             cols, mask = blocks[leaf_id]
-            acc = kops.fused_filter_agg(cols, mask, pred=pred, aggs=aggs)
+            acc = kops.fused_filter_agg(cols, mask, pred=pred, aggs=aggs,
+                                        block=block)
             out = {name: acc[j].reshape(1).astype(jnp.float64)
                    for j, name in enumerate(agg_names)}
             return out, jnp.ones((1,), bool)
-        return Lowered(fn, leaves, m.kernel)
+        return Lowered(fn, leaves, m.kernel, m.tiling)
 
     # grouped: mixed-radix group id over dict-coded key columns, same
     # code assignment as operators.make_direct_agg
     K = int(np.prod(m.sizes))
-    strides = mixed_radix_strides(m.sizes)
+    gid_fn = _gid_fn(list(m.group_cols), list(m.sizes))
     group_cols, sizes = list(m.group_cols), list(m.sizes)
-
-    def gid_fn(cols):
-        gid = jnp.zeros(cols[group_cols[0]].shape, jnp.int32)
-        for c, s in zip(group_cols, strides):
-            gid = gid + cols[c].astype(jnp.int32) * s
-        return gid
+    grouped = (kops.fused_groupby if m.kernel == "groupby_onehot"
+               else kops.fused_groupby_minmax)
 
     def fn(blocks):
         cols, mask = blocks[leaf_id]
-        tile = kops.fused_groupby(cols, mask, pred=pred, gid_fn=gid_fn,
-                                  aggs=aggs, n_groups=K)
+        tile = grouped(cols, mask, pred=pred, gid_fn=gid_fn, aggs=aggs,
+                       n_groups=K, block=block)
         out = dict(decode_group_ids(group_cols, sizes, K))
         for j, name in enumerate(agg_names):
             out[name] = tile[:, j].astype(jnp.float64)
         return out, tile[:, -1] > 0
-    return Lowered(fn, leaves, m.kernel)
+    return Lowered(fn, leaves, m.kernel, m.tiling)
+
+
+def _lower_sort_agg(op: dict, m: Match) -> Lowered:
+    pred = _compile_pred(m.preds)
+    aggs3 = [(name, fn, compile_expr(expr_from_dict(arg))
+              if arg is not None else None) for name, fn, arg in m.aggs]
+    group_cols = list(m.group_cols)
+    # identical-semantics XLA path for capacities the resident bitonic
+    # network can't take (non-power-of-two or past the VMEM cap)
+    generic = xops.make_sort_agg(
+        group_cols, [(n, fn, expr_from_dict(a) if a else None)
+                     for n, fn, a in m.aggs])
+    cap = m.tiling.resident_rows
+    leaf_id = "in0"
+
+    def fn(blocks):
+        cols, mask = blocks[leaf_id]
+        n = int(mask.shape[0])
+        if not _is_pow2(n) or n > cap:
+            m2 = mask if pred is None else mask & pred(cols)
+            return generic(cols, m2)
+        out, om = kops.fused_sort_agg(cols, mask, group_cols=group_cols,
+                                      pred=pred, aggs=aggs3)
+        out = {c: (v.astype(jnp.int64) if c in group_cols
+                   else v.astype(jnp.float64)) for c, v in out.items()}
+        return out, om
+    return Lowered(fn, [(leaf_id, m.leaf)], m.kernel, m.tiling)
+
+
+def _lower_join_probe(op: dict, m: Match) -> Lowered:
+    agg_pred = _compile_pred(m.preds)
+    probe_pred = _compile_pred(m.probe_preds)
+    build_pred = _compile_pred(m.build_preds)
+    # inside the kernel the probe filters evaluate after the payload
+    # gather; the conjunction with the hit mask is order-independent
+    kernel_pred = _compile_pred(m.probe_preds + m.preds)
+    agg_names, aggs = _agg_closures(m.aggs)
+    K = int(np.prod(m.sizes)) if m.group_cols else 0
+    gid_fn = (_gid_fn(list(m.group_cols), list(m.sizes))
+              if m.group_cols else None)
+    group_cols, sizes = list(m.group_cols), list(m.sizes)
+    probe_key, build_key = m.probe_key, m.build_key
+    payload = list(m.payload)
+    block, cap = m.tiling.block_rows, m.tiling.resident_rows
+    leaves = [("in0", m.leaf), ("in1", m.build_leaf)]
+    # identical-semantics XLA path for build sides past the VMEM cap
+    join_generic = xops.make_pk_join_probe(probe_key, build_key, payload)
+    agg_generic, _ = xops.make_direct_agg(
+        group_cols, sizes,
+        [(n, fn, expr_from_dict(a) if a else None)
+         for n, fn, a in m.aggs])
+
+    def fn(blocks):
+        pcols, pmask = blocks["in0"]
+        bcols, bmask = blocks["in1"]
+        if build_pred is not None:
+            bmask = bmask & build_pred(bcols)
+        if int(bmask.shape[0]) > cap:
+            pm = pmask if probe_pred is None else pmask & probe_pred(pcols)
+            jcols, jmask = join_generic(pcols, pm, bcols, bmask)
+            if agg_pred is not None:
+                jmask = jmask & agg_pred(jcols)
+            return agg_generic(jcols, jmask)
+        # XLA prepass: sort the build side by key once (masked rows to
+        # the end under the sentinel), mirroring make_pk_join_probe
+        kdt = kops.join_key_dtype()
+        sentinel = jnp.asarray(jnp.iinfo(kdt).max, kdt)
+        bk = jnp.where(bmask, bcols[build_key].astype(kdt), sentinel)
+        order = jnp.argsort(bk)
+        spay = {c: bcols[c][order] for c in payload if c not in pcols}
+        res = kops.fused_join_probe_agg(
+            pcols, pmask, bk[order], spay, probe_key=probe_key,
+            pred=kernel_pred, gid_fn=gid_fn, aggs=aggs, n_groups=K,
+            block=block)
+        if not K:
+            out = {name: res[j].reshape(1).astype(jnp.float64)
+                   for j, name in enumerate(agg_names)}
+            return out, jnp.ones((1,), bool)
+        out = dict(decode_group_ids(group_cols, sizes, K))
+        for j, name in enumerate(agg_names):
+            out[name] = res[:, j].astype(jnp.float64)
+        return out, res[:, -1] > 0
+    return Lowered(fn, leaves, m.kernel, m.tiling)
+
+
+def _lower_topk(m: Match) -> Lowered:
+    pred = _compile_pred(m.preds)
+    sort_keys, limit, cap = list(m.sort_keys), m.limit, m.tiling.resident_rows
+    leaf_id = "in0"
+
+    def fn(blocks):
+        cols, mask = blocks[leaf_id]
+        n = int(mask.shape[0])
+        if not _is_pow2(n) or n > cap:
+            # host sort handles it — pass the filtered batch through
+            return cols, (mask if pred is None else mask & pred(cols))
+        return kops.fused_topk(cols, mask, pred=pred,
+                               sort_keys=sort_keys, limit=limit)
+    return Lowered(fn, [(leaf_id, m.leaf)], m.kernel, m.tiling)

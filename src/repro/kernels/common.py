@@ -23,6 +23,15 @@ def acc_dtype(interpret: bool):
     return jnp.float32
 
 
+def key_dtype(interpret: bool):
+    """Join/sort key lane dtype: int64 on the host-XLA interpret path
+    (bit-parity with the generic operators and their int64 sentinel),
+    int32 on TPU where Mosaic has no 64-bit lanes."""
+    if interpret and jax.config.jax_enable_x64:
+        return jnp.int64
+    return jnp.int32
+
+
 def pad_block(arrs, mask, block):
     """Zero-pad 1-D columns + validity mask to a multiple of ``block``;
     returns (arrs, mask, n_blocks). Pad rows are masked out."""

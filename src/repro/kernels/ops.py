@@ -15,7 +15,11 @@ import jax
 from repro.kernels import filter_agg as _fa
 from repro.kernels import flash_attention as _flash
 from repro.kernels import groupby_onehot as _go
+from repro.kernels import join_probe as _jp
+from repro.kernels import segmented_minmax as _smm
+from repro.kernels import sort_agg as _sa
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topk as _tk
 
 
 def _interpret() -> bool:
@@ -74,3 +78,37 @@ def fused_groupby(columns: dict, mask, *, pred, gid_fn, aggs,
     return _go.fused_groupby(columns, mask, pred=pred, gid_fn=gid_fn,
                              aggs=aggs, n_groups=n_groups, block=block,
                              interpret=_interpret())
+
+
+def fused_groupby_minmax(columns: dict, mask, *, pred, gid_fn, aggs,
+                         n_groups: int, block: int):
+    return _smm.fused_groupby_minmax(
+        columns, mask, pred=pred, gid_fn=gid_fn, aggs=aggs,
+        n_groups=n_groups, block=block, interpret=_interpret())
+
+
+def fused_join_probe_agg(probe_cols: dict, probe_mask, sorted_keys,
+                         sorted_payload: dict, *, probe_key: str, pred,
+                         gid_fn, aggs, n_groups: int, block: int):
+    return _jp.fused_join_probe_agg(
+        probe_cols, probe_mask, sorted_keys, sorted_payload,
+        probe_key=probe_key, pred=pred, gid_fn=gid_fn, aggs=aggs,
+        n_groups=n_groups, block=block, interpret=_interpret())
+
+
+def fused_sort_agg(columns: dict, mask, *, group_cols, pred, aggs):
+    return _sa.fused_sort_agg(columns, mask, group_cols=group_cols,
+                              pred=pred, aggs=aggs,
+                              interpret=_interpret())
+
+
+def fused_topk(columns: dict, mask, *, pred, sort_keys, limit: int):
+    return _tk.fused_topk(columns, mask, pred=pred, sort_keys=sort_keys,
+                          limit=limit, interpret=_interpret())
+
+
+def join_key_dtype():
+    """Key lane dtype the fused join/sort kernels will use on this
+    backend — exposed so the XLA build-side prepass matches."""
+    from repro.kernels.common import key_dtype
+    return key_dtype(_interpret())

@@ -1,0 +1,122 @@
+"""Grouped aggregation with MIN/MAX — Pallas TPU kernel.
+
+Completes the ``groupby_onehot`` coverage: sums and counts still run as
+one one-hot matmul on the MXU, while min/max columns become masked
+broadcast reductions on the VPU — ``min(where(onehot, v, +inf), axis=0)``
+over the same (block, K) one-hot matrix, accumulated into the persistent
+(K, A+1) tile with ``jnp.minimum``/``jnp.maximum``. Absent groups keep
+the ±inf identities, exactly matching ``jax.ops.segment_min/max`` on the
+generic path, so the dispatch layer's bit-parity contract holds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import NEUTRAL, acc_dtype, pad_block
+
+
+def init_group_tile(aggs, n_groups: int, acc) -> jnp.ndarray:
+    """(K, A+1) accumulator seeded with each aggregate's identity."""
+    cols = [jnp.full((n_groups,), NEUTRAL[fn], acc) for fn, _ in aggs]
+    cols.append(jnp.zeros((n_groups,), acc))           # presence count
+    return jnp.stack(cols, axis=1)
+
+
+def grouped_tile_update(tile, m, gid, cols, aggs, acc, *, block: int,
+                        n_groups: int) -> jnp.ndarray:
+    """One block's contribution folded into the (K, A+1) tile.
+
+    ``m`` is the surviving-row mask, ``gid`` the raw group ids; masked
+    rows get gid -1 — an all-false one-hot row — so they reach no group
+    through either the matmul or the broadcast reductions. Shared by the
+    segmented min/max and fused join-probe kernels.
+    """
+    gid = jnp.where(m, gid.astype(jnp.int32), -1)
+    onehot = (gid[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block, n_groups), 1))              # (block, K)
+    mm_vals = []
+    for fn, argf in aggs:
+        if fn == "count":
+            mm_vals.append(jnp.ones((block,), acc))
+        elif fn == "sum":
+            v = jnp.broadcast_to(jnp.asarray(argf(cols), acc), (block,))
+            mm_vals.append(v.astype(acc))
+    mm_vals.append(jnp.ones((block,), acc))            # presence
+    mm = jax.lax.dot_general(
+        onehot.astype(acc), jnp.stack(mm_vals, axis=1),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=acc)                    # (K, n_mm)
+    out_cols, k = [], 0
+    for j, (fn, argf) in enumerate(aggs):
+        if fn in ("sum", "count"):
+            out_cols.append(tile[:, j] + mm[:, k])
+            k += 1
+            continue
+        v = jnp.broadcast_to(jnp.asarray(argf(cols), acc), (block,))
+        v = v.astype(acc)[:, None]                     # (block, 1)
+        if fn == "min":
+            colv = jnp.min(jnp.where(onehot, v, acc(jnp.inf)), axis=0)
+            out_cols.append(jnp.minimum(tile[:, j], colv))
+        else:                                          # max
+            colv = jnp.max(jnp.where(onehot, v, acc(-jnp.inf)), axis=0)
+            out_cols.append(jnp.maximum(tile[:, j], colv))
+    out_cols.append(tile[:, -1] + mm[:, -1])
+    return jnp.stack(out_cols, axis=1)
+
+
+def _minmax_kernel(*refs, names, pred, gid_fn, aggs, acc, n_groups: int,
+                   block: int):
+    *col_refs, mask_ref, o_ref = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = init_group_tile(aggs, n_groups, acc)
+
+    cols = {n: r[...][0] for n, r in zip(names, col_refs)}   # (block,)
+    m = mask_ref[...][0] != 0
+    if pred is not None:
+        m = m & pred(cols)
+    o_ref[...] = grouped_tile_update(o_ref[...], m, gid_fn(cols), cols,
+                                     aggs, acc, block=block,
+                                     n_groups=n_groups)
+
+
+def fused_groupby_minmax(columns: dict, mask, *, pred, gid_fn, aggs,
+                         n_groups: int, block: int,
+                         interpret: bool = False) -> jnp.ndarray:
+    """One-pass filtered grouped aggregation with min/max support.
+
+    Same contract as :func:`repro.kernels.groupby_onehot.fused_groupby`
+    but ``aggs`` fns may be any of {sum, count, min, max}. Returns
+    (n_groups, A+1): aggregate columns (absent groups hold the identity:
+    0 for sum/count, ±inf for min/max) plus the presence count.
+    """
+    acc = acc_dtype(interpret)
+    names = tuple(columns)
+    n = mask.shape[0]
+    block = min(block, max(n, 8))
+    arrs, mask, nb = pad_block([columns[c] for c in names], mask, block)
+    if not interpret:
+        arrs = [a.astype(jnp.float32) if jnp.issubdtype(a.dtype,
+                                                        jnp.floating)
+                else a.astype(jnp.int32) for a in arrs]
+    A = len(aggs)
+
+    return pl.pallas_call(
+        functools.partial(
+            _minmax_kernel, names=names, pred=pred, gid_fn=gid_fn,
+            aggs=aggs, acc=acc, n_groups=n_groups, block=block),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))
+                  for _ in range(len(names) + 1)],
+        out_specs=pl.BlockSpec((n_groups, A + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, A + 1), acc),
+        interpret=interpret,
+    )(*[a.reshape(nb, block) for a in arrs],
+      mask.astype(jnp.int32).reshape(nb, block))

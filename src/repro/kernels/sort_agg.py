@@ -1,0 +1,144 @@
+"""Sort-path grouped aggregation — Pallas TPU kernel.
+
+For group domains too large (or unknown) for the one-hot MXU kernels the
+planner picks the *sort* strategy: lexicographic sort by group keys, then
+segment reduces. This kernel runs the whole thing inside one VMEM-resident
+grid step: a bitonic sorting network orders ``[invalid] + keys`` (carrying
+the aggregate inputs and mask), boundary flags and a log-step segmented
+inclusive scan produce per-segment totals on each segment's last row, and
+a second bitonic pass — a *placement* sort by destination — compacts those
+rows to output positions 0..S-1 with the identity rows parked behind them.
+Every output (segment order, empty-segment identities: int64 sentinel
+keys, 0 sums, ±inf min/max, false mask) matches the generic
+``operators.make_sort_agg`` lane for lane.
+
+Everything is selects, static shifts, and reshapes (``kernels.sortnet``)
+— no gathers — so the network vectorizes on the VPU. The input capacity
+must be a power of two and fit the roofline's resident-rows cap; the
+dispatch wrapper falls back to the identical XLA sort path otherwise
+(capacities from ``bucket_capacity`` always qualify).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import acc_dtype, key_dtype
+from repro.kernels.sortnet import bitonic_sort, segmented_scan
+
+
+def _sort_agg_kernel(*refs, n_keys: int, fns, acc, kdt, n: int):
+    inv_ref = refs[0]
+    key_refs = refs[1:1 + n_keys]
+    val_refs = refs[1 + n_keys:1 + n_keys + len(fns)]
+    mask_ref = refs[1 + n_keys + len(fns)]
+    out_key_refs = refs[2 + n_keys + len(fns):2 + 2 * n_keys + len(fns)]
+    out_val_refs = refs[2 + 2 * n_keys + len(fns):-1]
+    out_mask_ref = refs[-1]
+    sentinel = jnp.asarray(jnp.iinfo(kdt).max, kdt)
+
+    operands = ([inv_ref[...][0]]
+                + [r[...][0] for r in key_refs]
+                + [r[...][0] for r in val_refs]
+                + [mask_ref[...][0]])
+    res = bitonic_sort(operands, num_keys=1 + n_keys)
+    s_keys = res[1:1 + n_keys]
+    s_vals = res[1 + n_keys:-1]
+    s_mask = res[-1] != 0
+
+    diff = jnp.zeros((n - 1,), bool)
+    for k in [res[0]] + list(s_keys):
+        diff = diff | (k[1:] != k[:-1])
+    flags = jnp.concatenate([jnp.ones((1,), bool), diff])
+    is_last = jnp.concatenate([diff, jnp.ones((1,), bool)])
+    seg = jnp.cumsum(flags.astype(jnp.int32)) - 1
+
+    maskf = s_mask.astype(acc)
+    totals = []
+    for fn, v in zip(fns, s_vals):
+        if fn in ("sum", "count"):
+            totals.append(segmented_scan(v * maskf, flags,
+                                         jnp.add, acc(0)))
+        elif fn == "min":
+            totals.append(segmented_scan(
+                jnp.where(s_mask, v, acc(jnp.inf)), flags, jnp.minimum,
+                acc(jnp.inf)))
+        else:                                           # max
+            totals.append(segmented_scan(
+                jnp.where(s_mask, v, acc(-jnp.inf)), flags, jnp.maximum,
+                acc(-jnp.inf)))
+
+    # segment-last rows carry the results to their segment's output slot;
+    # everything else parks behind with the empty-segment identities
+    dest = jnp.where(is_last, seg, jnp.int32(n))
+    carried = [jnp.where(is_last & s_mask, k, sentinel) for k in s_keys]
+    for fn, t in zip(fns, totals):
+        ident = acc({"min": jnp.inf, "max": -jnp.inf}.get(fn, 0.0))
+        carried.append(jnp.where(is_last, t, ident))
+    carried.append((is_last & s_mask).astype(jnp.int32))
+    placed = bitonic_sort([dest] + carried, num_keys=1)[1:]
+
+    for r, k in zip(out_key_refs, placed[:n_keys]):
+        r[...] = k[None, :]
+    for r, v in zip(out_val_refs, placed[n_keys:-1]):
+        r[...] = v[None, :]
+    out_mask_ref[...] = placed[-1][None, :]
+
+
+def fused_sort_agg(columns: dict, mask, *, group_cols, pred, aggs,
+                   interpret: bool = False):
+    """One-pass filtered sort-strategy grouped aggregation.
+
+    Same output contract as ``operators.make_sort_agg`` applied after the
+    filters: ``(out_cols, out_mask)`` at input capacity, group keys int64
+    with sentinel-filled empty segments. ``pred`` folds into the validity
+    mask (filtered rows sort last as invalid). Capacity must be a power
+    of two (callers go through ``bucket_capacity``).
+    """
+    acc = acc_dtype(interpret)
+    kdt = key_dtype(interpret)
+    n = int(mask.shape[0])
+    assert n & (n - 1) == 0, f"sort_agg needs a power-of-two capacity: {n}"
+    m = mask
+    if pred is not None:
+        m = m & pred(columns)
+    inv = (~m).astype(jnp.int32)
+    keys = [columns[c].astype(kdt) for c in group_cols]
+    fns = []
+    vals = []
+    for _, fn, argf in aggs:
+        fns.append(fn)
+        if fn == "count":
+            vals.append(m.astype(acc))
+        else:
+            v = jnp.asarray(argf(columns), acc)
+            vals.append(jnp.broadcast_to(v, m.shape).astype(acc))
+    fns = tuple(fns)
+
+    spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    n_in = 2 + len(keys) + len(vals)
+    out_shape = ([jax.ShapeDtypeStruct((1, n), kdt) for _ in keys]
+                 + [jax.ShapeDtypeStruct((1, n), acc) for _ in vals]
+                 + [jax.ShapeDtypeStruct((1, n), jnp.int32)])
+    res = pl.pallas_call(
+        functools.partial(_sort_agg_kernel, n_keys=len(keys), fns=fns,
+                          acc=acc, kdt=kdt, n=n),
+        grid=(1,),
+        in_specs=[spec] * n_in,
+        out_specs=[spec] * len(out_shape),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(inv.reshape(1, n),
+      *[k.reshape(1, n) for k in keys],
+      *[v.reshape(1, n) for v in vals],
+      m.astype(jnp.int32).reshape(1, n))
+    out_keys = res[:len(keys)]
+    out_vals = res[len(keys):-1]
+    out = {c: k[0] for c, k in zip(group_cols, out_keys)}
+    for (name, _, _), v in zip(aggs, out_vals):
+        out[name] = v[0]
+    return out, res[-1][0] != 0

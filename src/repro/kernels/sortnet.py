@@ -1,0 +1,87 @@
+"""In-kernel sorting-network and segmented-scan primitives.
+
+Shared by the fused sort-aggregation and top-k kernels: a bitonic sort
+over equal-length power-of-two arrays and a log-step segmented inclusive
+scan, both built entirely from reshapes, static slices, and element-wise
+selects — no gathers — so they lower to Mosaic and vectorize on the VPU.
+
+The compare-exchange partner at distance j (a power of two) is index
+``i ^ j``: reshaping to ``(-1, 2, j)`` and flipping the middle axis swaps
+exactly bit j. A trailing original-position key makes the comparison a
+total order, which (a) removes the classic duplicate-key corruption of
+select-based bitonic networks and (b) makes the sort *stable* — the same
+tie order ``np.lexsort`` produces, which the top-k kernel relies on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _partner(a: jnp.ndarray, j: int) -> jnp.ndarray:
+    """Value at index ``i ^ j`` for every i (j a power of two)."""
+    return jnp.flip(a.reshape(-1, 2, j), axis=1).reshape(a.shape)
+
+
+def _lex_less(keys, partner_keys, directions) -> jnp.ndarray:
+    """Strict lexicographic self < partner, honoring per-key direction
+    (+1 ascending, -1 descending). Built backwards so key 0 dominates."""
+    less = jnp.zeros(keys[0].shape, bool)
+    for k, pk, d in zip(keys[::-1], partner_keys[::-1],
+                        directions[::-1]):
+        lt = (k < pk) if d >= 0 else (k > pk)
+        less = lt | ((k == pk) & less)
+    return less
+
+
+def bitonic_sort(arrays: list, num_keys: int,
+                 directions: list | None = None) -> list:
+    """Sort equal-length (n,) arrays, n a power of two, lexicographically
+    by the first ``num_keys`` arrays; the rest are carried along. Returns
+    the sorted arrays (original position breaks ties — stable)."""
+    n = int(arrays[0].shape[0])
+    assert n & (n - 1) == 0, f"bitonic sort needs a power of two, got {n}"
+    dirs = list(directions or []) + [1] * (num_keys - len(directions or []))
+    idx = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    arrays = list(arrays) + [idx]           # position tiebreak key
+    keys = lambda arrs: arrs[:num_keys] + [arrs[-1]]
+    kdirs = dirs[:num_keys] + [1]
+    if n == 1:
+        return arrays[:-1]
+    for stage in range(n.bit_length() - 1):     # block size 2^(stage+1)
+        asc = (idx & (1 << (stage + 1))) == 0
+        for sub in range(stage, -1, -1):
+            j = 1 << sub
+            partners = [_partner(a, j) for a in arrays]
+            less = _lex_less(keys(arrays), keys(partners), kdirs)
+            is_left = (idx & j) == 0
+            keep_small = is_left == asc
+            # the total order (position tiebreak) makes `less` exactly
+            # inverted on the partner lane, so min/max selects agree
+            take_self = keep_small == less
+            arrays = [jnp.where(take_self, a, p)
+                      for a, p in zip(arrays, partners)]
+    return arrays[:-1]
+
+
+def _shift_right(a: jnp.ndarray, d: int, fill) -> jnp.ndarray:
+    pad = jnp.full((d,), fill, a.dtype)
+    return jnp.concatenate([pad, a[:-d]])
+
+
+def segmented_scan(vals: jnp.ndarray, heads: jnp.ndarray,
+                   combine, identity) -> jnp.ndarray:
+    """Segmented *inclusive* scan (Hillis–Steele, log n static steps):
+    ``heads`` marks segment starts; each segment's total lands on its
+    last element. Static shifts only — no gathers."""
+    n = int(vals.shape[0])
+    flag = heads.astype(bool)
+    d = 1
+    while d < n:
+        shifted = _shift_right(vals, d, identity)
+        blocked = _shift_right(flag, d, True)
+        vals = jnp.where(flag, vals, combine(vals, shifted))
+        flag = flag | blocked
+        d *= 2
+    return vals

@@ -1,0 +1,81 @@
+"""Fused top-k selection for ORDER BY … LIMIT — Pallas TPU kernel.
+
+Final pipelines with both sort keys and a LIMIT only ever surface
+``limit`` rows, yet the generic path ships the full filtered batch to the
+host sorter. This kernel sorts the whole VMEM-resident batch with the
+bitonic network (descending keys are per-key direction flips, invalid
+rows sort last) and masks everything past the first ``limit`` survivors,
+so the fragment emits at most ``limit`` valid rows. The coordinator's
+final host sort still runs — the network's position tiebreak gives the
+same stable tie order as ``np.lexsort``, making the pre-selection exactly
+idempotent under it.
+
+Capacity must be a power of two (``bucket_capacity`` guarantees it) and
+fit the roofline resident cap; the dispatch wrapper falls back to the
+generic path otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sortnet import bitonic_sort
+
+
+def _topk_kernel(*refs, n_sort: int, directions, limit: int, n: int):
+    inv_ref = refs[0]
+    in_refs = refs[1:1 + (len(refs) - 1) // 2]
+    out_refs = refs[1 + len(in_refs):]
+    operands = [inv_ref[...][0]] + [r[...][0] for r in in_refs]
+    res = bitonic_sort(operands, num_keys=1 + n_sort,
+                       directions=[1] + list(directions))
+    cols, mask = res[1:-1], res[-1]
+    keep = jax.lax.broadcasted_iota(jnp.int32, (n,), 0) < limit
+    for r, c in zip(out_refs[:-1], cols):
+        r[...] = c[None, :]
+    out_refs[-1][...] = ((mask != 0) & keep).astype(jnp.int32)[None, :]
+
+
+def fused_topk(columns: dict, mask, *, pred, sort_keys, limit: int,
+               interpret: bool = False):
+    """Sort by ``sort_keys`` ([(name, desc), …]) and keep the top
+    ``limit`` valid rows. Returns ``(out_cols, out_mask)`` at input
+    capacity: columns in sorted order, mask true only on the first
+    ``limit`` survivors. ``pred`` folds into the validity mask."""
+    n = int(mask.shape[0])
+    assert n & (n - 1) == 0, f"topk needs a power-of-two capacity: {n}"
+    m = mask
+    if pred is not None:
+        m = m & pred(columns)
+    key_names = [name for name, _ in sort_keys]
+    directions = tuple(-1 if desc else 1 for _, desc in sort_keys)
+    carry = [c for c in columns if c not in key_names]
+    names = tuple(key_names + carry)
+    arrs = [columns[c] for c in names]
+    if not interpret:
+        arrs = [a.astype(jnp.float32) if jnp.issubdtype(a.dtype,
+                                                        jnp.floating)
+                else a.astype(jnp.int32) for a in arrs]
+    inv = (~m).astype(jnp.int32)
+
+    spec = pl.BlockSpec((1, n), lambda i: (0, 0))
+    n_arr = len(arrs) + 1                            # columns + mask
+    out_shape = ([jax.ShapeDtypeStruct((1, n), a.dtype) for a in arrs]
+                 + [jax.ShapeDtypeStruct((1, n), jnp.int32)])
+    res = pl.pallas_call(
+        functools.partial(_topk_kernel, n_sort=len(sort_keys),
+                          directions=directions, limit=limit, n=n),
+        grid=(1,),
+        in_specs=[spec] * (1 + n_arr),
+        out_specs=[spec] * n_arr,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(inv.reshape(1, n),
+      *[a.reshape(1, n) for a in arrs],
+      m.astype(jnp.int32).reshape(1, n))
+    out = {c: r[0] for c, r in zip(names, res[:-1])}
+    return out, res[-1][0] != 0

@@ -42,4 +42,5 @@ TPU_V5E = {
     "hbm_bandwidth": 819e9,         # bytes/s per chip
     "ici_link_bandwidth": 50e9,     # bytes/s per link
     "hbm_bytes": 16 * 2**30,
+    "vmem_bytes": 16 * 2**20,       # per-core VMEM (Pallas tile budget)
 }

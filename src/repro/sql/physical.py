@@ -133,8 +133,12 @@ class Pipeline:
     final: bool = False
     # fused Pallas kernel the fragment hot loop lowers to, or None — the
     # exec.lower pattern match is decided at plan time so EXPLAIN and
-    # per-pipeline reports can show the dispatch without executing
+    # per-pipeline reports can show the dispatch without executing.
+    # Misses carry the matcher's reason; matches the roofline-chosen
+    # tiling estimates (block/resident rows, arithmetic intensity).
     kernel: str | None = None
+    kernel_miss_reason: str | None = None
+    kernel_roofline: dict | None = None
 
     # -- convenience views over the mutable params ------------------------
     @property
@@ -810,13 +814,18 @@ def compile_query(lqp: LNode, catalog: Catalog,
 
 
 def _annotate_kernels(plan: PhysicalPlan) -> None:
-    """Record which pipelines the kernel dispatch layer will lower."""
-    from repro.exec.lower import enabled, match_kernel
+    """Record which pipelines the kernel dispatch layer will lower —
+    kernel name and roofline tiling on a match, the matcher's miss
+    reason otherwise (``final`` ops dispatch on their child when the
+    top-k arm misses; ``kernel_info`` handles that)."""
+    from repro.exec.lower import enabled, kernel_info
     if not enabled():
         return
     for p in plan.pipelines.values():
-        op = p.op["child"] if p.op.get("t") == "final" else p.op
-        p.kernel = match_kernel(op)
+        info = kernel_info(p.op)
+        p.kernel = info["kernel"]
+        p.kernel_miss_reason = info["miss"]
+        p.kernel_roofline = info["tiling"]
 
 
 def _fix_join_segments(plan: PhysicalPlan,

@@ -50,19 +50,54 @@ def test_q1_matches_groupby_onehot(tpch_store):
     assert p.kernel == "groupby_onehot"
 
 
-def test_join_fragments_do_not_match(tpch_store):
+def test_q12_matches_join_probe_agg(tpch_store):
     store, catalog = tpch_store
     plan = _plan(store, catalog, QUERIES["q12"])
-    assert all(p.kernel is None for p in plan.pipelines.values())
+    p = next(p for p in plan.pipelines.values()
+             if p.kernel == "join_probe_agg")
+    assert p.kernel_miss_reason is None
+    assert p.kernel_roofline["resident_rows"] >= 128
 
 
-def test_grouped_min_does_not_match(tpch_store):
+def test_grouped_minmax_matches_segmented_kernel(tpch_store):
     store, catalog = tpch_store
-    sql = ("select l_returnflag, min(l_quantity) as mq from lineitem "
-           "group by l_returnflag")
+    sql = ("select l_returnflag, min(l_quantity) as mq, "
+           "max(l_tax) as mt from lineitem group by l_returnflag")
     p = _scan_pipeline(_plan(store, catalog, sql))
-    assert p.kernel is None          # one-hot matmul cannot min/max
-    assert lower.lower_fragment(p.op) is None
+    assert p.kernel == "segmented_minmax"
+    assert lower.lower_fragment(p.op) is not None
+
+
+def test_groupby_nondict_matches_sort_agg(tpch_store):
+    store, catalog = tpch_store
+    sql = ("select l_orderkey, sum(l_quantity) as s, count(*) as c "
+           "from lineitem group by l_orderkey")
+    p = _scan_pipeline(_plan(store, catalog, sql))
+    assert p.kernel == "sort_agg"    # no dict sizes → sort strategy
+
+
+def test_q3_final_matches_topk(tpch_store):
+    store, catalog = tpch_store
+    plan = _plan(store, catalog, QUERIES["q3"])
+    p = next(p for p in plan.pipelines.values() if p.op["t"] == "final")
+    assert p.kernel == "topk"
+    m, miss = lower.match_fragment_ex(p.op)
+    assert miss is None and m.limit == 10
+    assert m.sort_keys and m.sort_keys[0][1]     # revenue desc
+
+
+def test_miss_reasons_name_the_blocker(tpch_store):
+    store, catalog = tpch_store
+    plan = _plan(store, catalog,
+                 "select l_orderkey, l_quantity from lineitem "
+                 "where l_quantity < 3")
+    reasons = [p.kernel_miss_reason for p in plan.pipelines.values()]
+    assert all(p.kernel is None for p in plan.pipelines.values())
+    assert any("no fusible root" in r for r in reasons if r)
+    assert lower.kernel_miss_reason(
+        {"t": "final", "sort_keys": [], "limit": None,
+         "child": {"t": "scan_exchange"}}) == \
+        "final lacks ORDER BY + LIMIT (no top-k)"
 
 
 def test_disabled_scope_skips_annotation_and_lowering(tpch_store):
@@ -75,14 +110,28 @@ def test_disabled_scope_skips_annotation_and_lowering(tpch_store):
 
 # -- block-level parity across capacity buckets -------------------------------
 
+_SQLS = {
+    "q6": QUERIES["q6"],                           # filter_agg
+    "q1": QUERIES["q1"],                           # groupby_onehot
+    "minmax": ("select l_returnflag, min(l_quantity) as mq, "
+               "max(l_tax) as mt from lineitem "
+               "where l_quantity < 30 group by l_returnflag"),
+    "sortagg": ("select l_orderkey, sum(l_quantity) as s, "
+                "count(*) as c, min(l_extendedprice) as m "
+                "from lineitem group by l_orderkey"),
+}
+
+
 @pytest.mark.parametrize("qname,n_rows", [
     ("q6", 900), ("q6", 3000), ("q6", 12000),     # caps 1024/4096/16384
     ("q1", 900), ("q1", 3000), ("q1", 12000),
+    ("minmax", 900), ("minmax", 3000), ("minmax", 12000),
+    ("sortagg", 900), ("sortagg", 3000), ("sortagg", 12000),
 ])
 def test_lowered_matches_generic_per_capacity(qname, n_rows, tpch_store,
                                               tpch_tables):
     store, catalog = tpch_store
-    p = _scan_pipeline(_plan(store, catalog, QUERIES[qname]))
+    p = _scan_pipeline(_plan(store, catalog, _SQLS[qname]))
     lowered = lower.lower_fragment(p.op)
     assert lowered is not None and lowered.kernel == p.kernel
     leaves: list = []
@@ -106,9 +155,136 @@ def test_lowered_matches_generic_per_capacity(qname, n_rows, tpch_store,
             rtol=1e-12, atol=1e-12, err_msg=f"{qname}.{name}@{n_rows}")
 
 
+@pytest.mark.parametrize("n_probe", [900, 3000, 12000])
+def test_join_probe_block_parity(n_probe, tpch_store, tpch_tables):
+    """Fused join-probe+agg vs the generic jnp join chain, two leaves,
+    swept across probe capacity buckets."""
+    store, catalog = tpch_store
+    plan = _plan(store, catalog, QUERIES["q12"])
+    p = next(p for p in plan.pipelines.values()
+             if p.kernel == "join_probe_agg")
+    lowered = lower.lower_fragment(p.op)
+    g_leaves: list = []
+    generic = _build(p.op, g_leaves)
+
+    jop = p.op
+    while jop["t"] != "join":
+        jop = jop["child"] if "child" in jop else jop["probe"]
+    li, orders = tpch_tables["lineitem"], tpch_tables["orders"]
+    build_names = [jop["build_key"]] + [c for c in jop["payload"]
+                                        if c in orders]
+
+    def leaf_block(leaf_op):
+        if leaf_op["t"] == "scan_table":
+            cols = {c: li[c][:n_probe] for c in leaf_op["columns"]}
+        else:                       # build-side exchange scan
+            cols = {c: orders[c][:1500] for c in build_names}
+        return from_numpy(cols)
+
+    k_blocks, g_blocks = {}, {}
+    for leaf_id, leaf_op in lowered.leaves:
+        blk = leaf_block(leaf_op)
+        k_blocks[leaf_id] = (blk.columns, blk.mask)
+        gid = next(i for i, op in g_leaves if op is leaf_op)
+        g_blocks[gid] = (blk.columns, blk.mask)
+
+    k_cols, k_mask = lowered.fn(k_blocks)
+    g_cols, g_mask = generic(g_blocks)
+    assert set(k_cols) == set(g_cols)
+    np.testing.assert_array_equal(np.asarray(k_mask), np.asarray(g_mask))
+    for name in g_cols:
+        np.testing.assert_allclose(
+            np.asarray(k_cols[name], np.float64),
+            np.asarray(g_cols[name], np.float64),
+            rtol=1e-12, atol=1e-12, err_msg=f"q12.{name}@{n_probe}")
+
+
+@pytest.mark.parametrize("n_rows", [900, 3000, 12000])
+def test_topk_block_parity(n_rows, tpch_store):
+    """Fused top-k vs generic passthrough + host sort/limit: after the
+    coordinator's final-stage host ops both paths must agree exactly."""
+    store, catalog = tpch_store
+    plan = _plan(store, catalog, QUERIES["q3"])
+    p = next(q for q in plan.pipelines.values() if q.op["t"] == "final")
+    assert p.kernel == "topk"
+    m, _ = lower.match_fragment_ex(p.op)
+    lowered = lower.lower_fragment(p.op)
+    g_leaves: list = []
+    generic = _build(p.op["child"], g_leaves)
+
+    rng = np.random.default_rng(7)
+    cols = {name: rng.integers(0, 50, n_rows).astype(np.float64)
+            if desc else rng.integers(0, 50, n_rows)
+            for name, desc in m.sort_keys}
+    cols["carry"] = rng.integers(0, 10_000, n_rows)
+    blk = from_numpy(cols)
+    blocks = {"in0": (blk.columns, blk.mask)}
+
+    def host_final(out_cols, out_mask):
+        keep = np.asarray(out_mask)
+        named = {c: np.asarray(v)[keep] for c, v in out_cols.items()}
+        order = np.lexsort([-named[k] if desc else named[k]
+                            for k, desc in reversed(m.sort_keys)])
+        return {c: v[order][:m.limit] for c, v in named.items()}
+
+    k_out = host_final(*lowered.fn(blocks))
+    g_out = host_final(*generic(blocks))
+    assert set(k_out) == set(g_out)
+    for name in g_out:
+        np.testing.assert_array_equal(k_out[name], g_out[name],
+                                      err_msg=f"topk.{name}@{n_rows}")
+
+
+# -- roofline-driven tiling ---------------------------------------------------
+
+def test_roofline_tilings_are_pow2_and_fit_budget():
+    from repro.analysis import roofline
+    budget = roofline.vmem_budget_bytes()
+    grid = [
+        roofline.filter_agg_tiling(n_cols=6, n_aggs=2),
+        roofline.groupby_tiling("groupby_onehot", n_cols=8, n_aggs=4,
+                                n_groups=12),
+        roofline.groupby_tiling("segmented_minmax", n_cols=4, n_aggs=2,
+                                n_groups=6),
+        roofline.join_probe_tiling(n_cols=7, n_payload=2, n_aggs=3,
+                                   n_groups=14),
+    ]
+    resident = [
+        roofline.resident_sort_tiling("sort_agg", n_arrays=6),
+        roofline.resident_sort_tiling("topk", n_arrays=5),
+    ]
+    for t in grid:
+        assert 128 <= t.block_rows <= 8192, t
+    for t in resident:
+        # fully-resident kernels: capacity cap IS the block
+        assert t.block_rows == t.resident_rows, t
+        assert t.vmem_bytes <= budget, t
+    for t in grid + resident:
+        assert t.block_rows & (t.block_rows - 1) == 0, t
+        assert t.resident_rows & (t.resident_rows - 1) == 0, t
+        assert t.vmem_bytes <= 2 * budget, t
+        assert t.dominant in ("compute", "memory")
+        assert t.key == (t.kernel, t.block_rows, t.resident_rows)
+    # deterministic: same shape → identical tiling (cache keys depend on it)
+    again = roofline.filter_agg_tiling(n_cols=6, n_aggs=2)
+    assert again == grid[0]
+    # the one-hot group cap is the roofline's, not a hand constant
+    assert lower.MAX_KERNEL_GROUPS == roofline.onehot_group_capacity()
+
+
+def test_tiling_joins_compiled_cache_key(tpch_store):
+    store, catalog = tpch_store
+    p = _scan_pipeline(_plan(store, catalog, QUERIES["q6"]))
+    kernel, tkey, _ = lower.dispatch_signature(p.op)
+    lowered = lower.lower_fragment(p.op)
+    assert kernel == "filter_agg" == lowered.kernel
+    assert tkey == lowered.tiling.key
+    assert p.kernel_roofline["block_rows"] == lowered.tiling.block_rows
+
+
 # -- end-to-end engine parity -------------------------------------------------
 
-@pytest.mark.parametrize("qname", ["q1", "q6"])
+@pytest.mark.parametrize("qname", ["q1", "q6", "q3"])
 def test_engine_kernel_path_matches_jnp_and_oracle(qname, tpch_store,
                                                    tpch_tables):
     store, catalog = tpch_store
@@ -132,16 +308,44 @@ def test_engine_kernel_path_matches_jnp_and_oracle(qname, tpch_store,
             err_msg=f"{qname}.{k} (fused vs jnp)")
 
 
-def test_unmatched_plan_falls_back_cleanly(tpch_store, tpch_tables):
+@pytest.mark.parametrize("qname", ["q12", "q14", "q19"])
+def test_join_queries_run_on_fused_kernels(qname, tpch_store, tpch_tables):
+    """TPC-H joins beyond Q1/Q6 now execute fused fragments, and the
+    fused path agrees with the jnp fallback and the oracle."""
     store, catalog = tpch_store
     with connect(store, catalog, config=CFG) as session:
-        res = session.sql(QUERIES["q12"])
+        res = session.sql(QUERIES[qname])
+        assert sum(p.kernel_fragments for p in res.stats.pipelines) > 0
+        got = res.fetch(store)
+        with lower.disabled():
+            got_jnp = session.sql(QUERIES[qname]).fetch(store)
+    want = _oracle(catalog, tpch_tables, QUERIES[qname])
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float64),
+            np.asarray(want[k], np.float64), rtol=1e-9, atol=1e-9,
+            err_msg=f"{qname}.{k} (fused vs oracle)")
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float64),
+            np.asarray(got_jnp[k], np.float64), rtol=1e-9, atol=1e-9,
+            err_msg=f"{qname}.{k} (fused vs jnp)")
+
+
+def test_unmatched_plan_falls_back_cleanly(tpch_store, tpch_tables):
+    sql = ("select l_orderkey, l_quantity from lineitem "
+           "where l_quantity < 3")
+    store, catalog = tpch_store
+    with connect(store, catalog, config=CFG) as session:
+        res = session.sql(sql)
         assert all(p.kernel_fragments == 0 for p in res.stats.pipelines)
         got = res.fetch(store)
-    want = _oracle(catalog, tpch_tables, QUERIES["q12"])
+    want = _oracle(catalog, tpch_tables, sql)
+    order_g = np.lexsort((got["l_quantity"], got["l_orderkey"]))
+    order_w = np.lexsort((want["l_quantity"], want["l_orderkey"]))
     for k in want:
-        np.testing.assert_allclose(np.asarray(got[k], np.float64),
-                                   np.asarray(want[k], np.float64))
+        np.testing.assert_allclose(
+            np.asarray(got[k], np.float64)[order_g],
+            np.asarray(want[k], np.float64)[order_w])
 
 
 def test_compiled_program_cache_shared_across_queries(tpch_store):

@@ -153,6 +153,53 @@ def test_partial_manifest_protocol():
     assert partitions_ready(man, 1.0)
 
 
+def test_admission_fraction_cost_model():
+    from repro.core.cost import CostModel
+    # no observations → the seed's 0.5 constant
+    assert CostModel.pipeline_admission_fraction([]) == 0.5
+    # uniform fleet: the k-statistic is the same instant for every k,
+    # so late admission avoids pure top-up overhead
+    assert CostModel.pipeline_admission_fraction([1.0, 1.0, 1.0, 1.0]) == 1.0
+    # one straggler: admit at 3/4 and overlap its tail
+    assert CostModel.pipeline_admission_fraction([1.0, 1.0, 1.0, 5.0]) == 0.75
+
+
+def test_partitions_ready_auto_fraction_from_wall_s():
+    """fraction=None derives the gate from landed producer wall clocks;
+    without wall_s observations it falls back to the 0.5 constant."""
+    from repro.core.cost import CostModel
+    store = ObjectStore(tier="local", seed=0)
+    reg = ResultRegistry(store)
+    reg.begin_partial("s2", n_producers=4, prefix="results/s2")
+    reg.mark_all_submitted("s2", 4)
+    reg.publish_partial("s2", 0, {"rows": 1, "wall_s": 1.0})
+    reg.publish_partial("s2", 1, {"rows": 1, "wall_s": 1.0})
+    # uniform walls so far → model wants the full fleet
+    assert not partitions_ready(reg.partial_manifest("s2"), None,
+                                cost_model=CostModel)
+    reg.publish_partial("s2", 2, {"rows": 1, "wall_s": 1.0})
+    reg.publish_partial("s2", 3, {"rows": 1, "wall_s": 1.0})
+    assert partitions_ready(reg.partial_manifest("s2"), None,
+                            cost_model=CostModel)
+
+    reg.begin_partial("s3", n_producers=4, prefix="results/s3")
+    reg.mark_all_submitted("s3", 4)
+    reg.publish_partial("s3", 0, {"rows": 1})
+    reg.publish_partial("s3", 1, {"rows": 1})
+    assert partitions_ready(reg.partial_manifest("s3"), None,
+                            cost_model=CostModel)
+
+
+def test_topup_read_cost_from_manifest_info():
+    """Top-up ordering reads per-partition byte costs off the partial
+    manifest; absent or malformed info prices as zero (read last)."""
+    from repro.exec.fragment import _read_cost
+    assert _read_cost({"bytes": 512}) == 512
+    assert _read_cost({"rows": 9}) == 0
+    assert _read_cost(None) == 0
+    assert _read_cost("junk") == 0
+
+
 def test_begin_partial_resets_aborted_stream():
     """A re-claimant of a failed execution must not inherit the dead
     owner's poison flag — begin_partial writes the stream fresh, only

@@ -80,13 +80,18 @@ def queries(draw):
                              min_size=1, max_size=2, unique=True))
         conj.append("f_c in (" + ", ".join(f"'{v}'" for v in vals) + ")")
     join = draw(st.booleans())
-    group = draw(st.sampled_from([None, "f_c", "f_a",
+    # f_c → dict-coded (one-hot / segmented min-max arms), f_key → many
+    # non-dict groups (sort-strategy arm), d_x → grouped join probe
+    group = draw(st.sampled_from([None, "f_c", "f_a", "f_key",
                                   "d_x" if join else "f_c"]))
     fn = draw(agg_fns)
     agg = "count(*)" if fn == "count" else f"{fn}(f_b + 0.5 * f_a)"
     if group:
         select = f"{group}, {agg} as r"
         tail = f" group by {group} order by {group}"
+        limit = draw(st.sampled_from([None, 3]))
+        if limit:                    # final ORDER BY … LIMIT → top-k arm
+            tail += f" limit {limit}"
     else:
         select = f"{agg} as r"
         tail = ""
@@ -100,12 +105,14 @@ def queries(draw):
 
 @settings(max_examples=25, deadline=None)
 @given(sql=queries(), seed=st.integers(0, 3),
-       pipelined=st.booleans(),
+       pipelined=st.booleans(), fused=st.booleans(),
        strategy=st.sampled_from(["direct", "combining", "multilevel"]))
-def test_engine_matches_oracle(sql, seed, pipelined, strategy):
-    """Random queries × {barrier, pipelined} × every shuffle strategy
-    must all agree with the numpy oracle — barrier-free admission and
-    incremental top-up reads are invisible to query results."""
+def test_engine_matches_oracle(sql, seed, pipelined, fused, strategy):
+    """Random queries × {barrier, pipelined} × every shuffle strategy ×
+    {fused kernels, generic jnp} must all agree with the numpy oracle —
+    barrier-free admission, incremental top-up reads, and the kernel
+    dispatch layer are invisible to query results."""
+    from repro.exec import lower
     store, catalog, tables = _make_db(900, 40, seed)
     plan, _ = Binder(catalog).bind(parse(sql))
     want = oracle.run(optimize(plan), tables)
@@ -116,7 +123,11 @@ def test_engine_matches_oracle(sql, seed, pipelined, strategy):
             planner=PlannerConfig(
                 bytes_per_worker=3_000, broadcast_threshold_bytes=2_000,
                 exchange_partitions=2, exchange_strategy=strategy)))
-    got = coord.execute_sql(sql).fetch(store)
+    if fused:
+        got = coord.execute_sql(sql).fetch(store)
+    else:
+        with lower.disabled():
+            got = coord.execute_sql(sql).fetch(store)
     n_want = len(next(iter(want.values()))) if want else 0
     n_got = len(next(iter(got.values()))) if got else 0
     # empty aggregates: a scalar agg over zero rows yields one masked row
