@@ -27,6 +27,10 @@ measurements on this host.
   faults   → chaos          (chaos engine off-path overhead, one-shot
                              kill-point recovery, probabilistic fault
                              storm — parity asserted throughout)
+  filters  → semijoin       (build-side Bloom filter on the probe
+                             exchange: row parity, probe shuffle-byte
+                             reduction, and request reduction — all
+                             asserted)
   kernels  → Pallas kernels (interpret mode on CPU)
 
 ``--json PATH`` additionally writes the rows as a JSON snapshot (the
@@ -56,6 +60,7 @@ SUITES = {
     "shuffle": suites.bench_shuffle,
     "service": suites.bench_service,
     "pipelined": suites.bench_pipelined,
+    "semijoin": suites.bench_semijoin,
     "chaos": suites.bench_chaos,
     "kernels": suites.bench_kernels,
 }

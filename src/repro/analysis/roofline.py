@@ -306,6 +306,41 @@ def resident_sort_tiling(kernel: str, *, n_arrays: int) -> KernelTiling:
                    bpr)
 
 
+def bloom_probe_tiling(*, n_cols: int, n_bits: int) -> KernelTiling:
+    """In-kernel semi-join Bloom probe: the filter words (n_bits/8 bytes,
+    capped well under the VMEM budget by ``kernels.bloom.BLOOM_MAX_BITS``)
+    stay resident across the whole row grid; each row pays two fmix32
+    mixes plus k position/gather/bit-test steps — firmly memory-bound,
+    like the filter_agg scan it fuses with."""
+    words_bytes = max(n_bits, 32) // 8
+
+    def ws(b):
+        return words_bytes + (n_cols + 1) * b * _ELEM_BYTES
+    # 2 finalizer mixes (5 ops each) + k * (mul-add, mask, shift, gather,
+    # shift, and) with k = 6
+    flops = 2 * 5.0 + 6 * 6.0
+    bpr = float((n_cols + 1) * _ELEM_BYTES)
+    block = _grid_block(ws, flops, bpr)
+    return _finish("bloom_filter", block, _MAX_BLOCK * 16, ws(block),
+                   flops, bpr)
+
+
+def interpret_prefers_jnp(tiling: KernelTiling) -> bool:
+    """Whether an interpreted (CPU) backend should skip this kernel for
+    the identical-semantics jnp path.
+
+    The fully-resident bitonic kernels (``block_rows == resident_rows``:
+    sort_agg, topk) pay a log²-stage compare-exchange network per element
+    — worth it on TPU, where VMEM residency removes the HBM round trips
+    the network would otherwise issue, but pure overhead when the kernel
+    body is interpreted on a host whose XLA sort is O(log n) per element.
+    The tiling's flops-per-row already encodes the network depth, so the
+    test is that compute per row dwarfs the byte traffic (a host has no
+    MXU: its balance point is ~1 flop/byte, not the TPU's)."""
+    return (tiling.resident_rows == tiling.block_rows
+            and tiling.flops_per_row > tiling.bytes_per_row)
+
+
 def onehot_group_capacity(n_aggs: int = 4) -> int:
     """Largest group domain K the one-hot kernels accept: at the minimum
     block the (block, K) one-hot plus the (K, A+1) accumulator must fit

@@ -373,7 +373,60 @@ class Reoptimizer:
                                 "from": part.tier, "to": tier,
                                 "shuffle_objects": objects})
             part.tier = tier
+        # multilevel l0 intermediates are short-lived (deleted after the
+        # merge wave) — re-route them to the express tier when cheaper
+        if part.strategy == "multilevel":
+            part.l0_tier = self.cost_model.l0_tier_choice(
+                producers, self._observed_out_bytes(p, sources),
+                base_tier=part.tier)
+        else:
+            part.l0_tier = None
 
     def _tier_for_objects(self, objects: int) -> str:
         return "s3-express" if objects > self.hot_shuffle_object_threshold \
             else "s3-standard"
+
+    # -- (e) semi-join filter adopt/revoke ------------------------------------
+    def semijoin_decision(self, p: Pipeline, *, build_rows: float,
+                          build_distinct: int | None = None
+                          ) -> dict | None:
+        """Re-gate a probe pipeline's semi-join filter from the observed
+        build-side cardinality (a pilot-K extrapolation or the sealed
+        manifest's exact figures).
+
+        Called by the engine outside :meth:`adapt` — the probe is a scan
+        pipeline, which ``adapt`` leaves untouched. Mutates only
+        ``params.semijoin``; the probe's sem hash already folds the build
+        side, so flipping the verdict never splits the result cache.
+        Returns the adaptation record (``semijoin_adopt`` /
+        ``semijoin_revoke``) or None if the plan-time verdict stands.
+        """
+        from repro.core.cost import EXCHANGE_MIN_SAVING_CENTS
+        sj = p.params.semijoin
+        if not sj:
+            return None
+        base = float(sj.get("base_rows") or 0.0)
+        match = min(1.0, build_rows / base) if base > 0 \
+            else float(sj["est_match"])
+        distinct = int(build_distinct) if build_distinct \
+            else max(int(build_rows), 1)
+        part = p.params.partitioning
+        ben = self.cost_model.semijoin_benefit(
+            producers=p.params.n_fragments, n_dest=part.n_dest,
+            probe_bytes=float(max(p.params.est_out_bytes, 0)),
+            match_fraction=match, build_distinct=distinct,
+            strategy=part.strategy, tier=part.tier)
+        # adopting mid-flight must clear the same churn guard as an
+        # exchange re-pick; revoking only needs the benefit to vanish
+        want = ben["benefit_cents"] > 0 if sj["enabled"] \
+            else ben["benefit_cents"] > EXCHANGE_MIN_SAVING_CENTS
+        if want == sj["enabled"]:
+            return None
+        sj["enabled"] = want
+        sj["est_match"] = match
+        sj["est_distinct"] = distinct
+        return {"kind": "semijoin_adopt" if want else "semijoin_revoke",
+                "build_rows": int(build_rows),
+                "build_distinct": distinct,
+                "match_fraction": round(match, 4),
+                "benefit_cents": ben["benefit_cents"]}

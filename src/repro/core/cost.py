@@ -227,6 +227,98 @@ class CostModel:
                 best = direct
         return best, costs
 
+    # -- semi-join filter pushdown (kernels.bloom) -------------------------------
+    def semijoin_benefit(self, *, producers: int, n_dest: int,
+                         probe_bytes: float, match_fraction: float,
+                         build_distinct: int,
+                         strategy: str = "direct",
+                         tier: str = "s3-standard") -> dict:
+        """Projected saving of pushing a build-side Bloom filter below a
+        probe-side exchange, in cents.
+
+        A filter kills the probe rows that cannot find a join partner
+        *before* they are partitioned, so the exchange moves only the
+        kept fraction ``match + fpr·(1 − match)`` of the payload (the
+        false-positive residue is still shuffled and then dropped by the
+        exact join). Against that saving stands the filter overhead: the
+        build fleet's hash+publish work, one KV round-trip of the merged
+        words per probe producer, and the probe fleet's k-hash membership
+        test over its scan output. Monotone by construction: the benefit
+        never decreases when ``match_fraction`` drops or ``probe_bytes``
+        grows, so calibrated selectivities move the gate predictably.
+
+        Returns ``{"benefit_cents", "kept_fraction", "fpr", "bits",
+        "saved_cents", "overhead_cents"}``; the caller gates on
+        ``benefit_cents > 0``.
+        """
+        from repro.kernels.bloom import bloom_bits_for, bloom_fpr
+        match = min(max(float(match_fraction), 0.0), 1.0)
+        nbytes = max(float(probe_bytes), 0.0)
+        bits = bloom_bits_for(max(int(build_distinct), 1))
+        fpr = bloom_fpr(max(int(build_distinct), 1), bits)
+        kept = min(1.0, match + fpr * (1.0 - match))
+        full = self.exchange_cost(producers, n_dest, nbytes,
+                                  strategy=strategy, tier=tier)
+        filtered = self.exchange_cost(producers, n_dest, nbytes * kept,
+                                      strategy=strategy, tier=tier)
+        saved = full.cents - filtered.cents
+
+        kv = TIERS["dynamodb"]
+        words_bytes = bits / 8.0
+        P = max(producers, 1)
+        # publish: the build coordinator lands the merged words once in
+        # the KV manifest; fetch: every probe producer's spec carries the
+        # words (one KV read's worth of request + transfer each)
+        publish_cents = (kv.write_request_cents_per_1m / 1e6
+                         + kv.storage_cost_cents(int(words_bytes), 60.0))
+        fetch_cents = P * (kv.read_request_cents_per_1m / 1e6
+                           + words_bytes / kv.bandwidth_bytes_per_s
+                           * self.worker_memory_gib
+                           * LAMBDA_CENTS_PER_GIB_S)
+        # probe-side membership test: k gathers over the VMEM-resident
+        # words, memory-bound at roughly the scan bandwidth
+        hash_s = nbytes / 1e9
+        hash_cents = (hash_s * self.worker_memory_gib
+                      * LAMBDA_CENTS_PER_GIB_S)
+        overhead = publish_cents + fetch_cents + hash_cents
+        return {"benefit_cents": saved - overhead,
+                "kept_fraction": kept, "fpr": fpr, "bits": bits,
+                "saved_cents": saved, "overhead_cents": overhead}
+
+    # -- express-tier l0 intermediates (exec.exchange multilevel) ----------------
+    def l0_tier_choice(self, producers: int, nbytes: float, *,
+                       ttl_s: float = 60.0,
+                       base_tier: str = "s3-standard") -> str:
+        """Storage tier for a multilevel exchange's l0 intermediates.
+
+        l0 objects live only from the producer write to the merge wave's
+        read — the engine deletes the prefix once the wave lands, so the
+        at-rest charge is prorated over ``ttl_s``, not a month. Each l0
+        object is written once and read once (plus two footer reads), so
+        the express tier's cheaper request halves and doubled bandwidth
+        usually beat its 7× at-rest price for these short-lived objects;
+        the comparison below keeps that honest when the intermediates
+        are large or the wave is slow.
+        """
+        P = max(producers, 1)
+        nbytes = max(float(nbytes), 0.0)
+
+        def leg_cents(tier_name: str) -> float:
+            t = TIERS.get(tier_name, TIERS["s3-standard"])
+            reqs = (P * t.write_request_cents_per_1m
+                    + 3 * P * t.read_request_cents_per_1m) / 1e6
+            transfer = nbytes / 2**30 * (t.read_transfer_cents_per_gib
+                                         + t.write_transfer_cents_per_gib)
+            wait_s = 2 * nbytes / t.bandwidth_bytes_per_s
+            compute = (wait_s * self.worker_memory_gib
+                       * LAMBDA_CENTS_PER_GIB_S)
+            return (reqs + transfer + compute
+                    + t.storage_cost_cents(int(nbytes), ttl_s))
+
+        express = leg_cents("s3-express")
+        base = leg_cents(base_tier)
+        return "s3-express" if express < base else base_tier
+
     # -- cost-optimal fleet sizing (adaptive re-optimization) -------------------
     def fleet_latency_s(self, n_workers: int, nbytes: int, *,
                         bandwidth_bytes_per_s: float = 90e6,

@@ -127,6 +127,14 @@ class PipelineReport:
     first_input_s: float = 0.0
     topups: int = 0
     overlap_saved_s: float = 0.0
+    # semi-join filter pushdown: the decision record of an annotated
+    # probe pipeline (plan annotation + runtime verdict + ``applied``),
+    # the probe rows the filter killed before partitioning, and — build
+    # side — the merged Bloom filter wire dict OR-accumulated from the
+    # fleet's responses and published with the exchange manifest
+    semijoin: dict | None = None
+    semijoin_killed: int = 0
+    semijoin_bloom: dict | None = None
     # the pipeline's window on the query's simulated timeline, and the
     # per-fragment completion offsets downstream admission gates key on
     sim_start_s: float = 0.0
@@ -223,6 +231,16 @@ class CoordinatorConfig:
     # request cents vs GiB-seconds spent waiting). Off by default —
     # identical request counts to the seed behavior.
     hedged_reads: bool = False
+    # Semi-join filter pushdown: build fleets of planner-annotated
+    # repartition joins construct a Bloom filter over the join key and
+    # publish the merged words through the partial-manifest protocol;
+    # eligible probe pipelines wait (bounded) for the *sealed* filter
+    # and kill non-matching rows before partitioning. A partial filter
+    # is never applied — missing producers would mean false negatives.
+    # Off → annotated plans run unfiltered (sem hashes are identical
+    # either way, so both settings share the result cache).
+    semijoin: bool = True
+    semijoin_wait_timeout_s: float = 30.0
 
 
 class QueryEngine:
@@ -350,7 +368,7 @@ class QueryEngine:
                     self.deadline_s, stats.sim_latency_s,
                     len(stages) - si)
             stage_sim = 0.0
-            for pid in stage:
+            for pid in _stage_order(plan, stage):
                 self._check_cancel()
                 report = self._run_pipeline(plan.pipelines[pid], stats)
                 stats.pipelines.append(report)
@@ -442,8 +460,9 @@ class QueryEngine:
         each upstream fleet's simulated completions — and cannot finish
         before the producers whose tail partitions it still reads."""
         end: dict[int, float] = {}
+        sem_pid = {p.sem_hash: pid for pid, p in plan.pipelines.items()}
         for stage in stages:
-            for pid in stage:
+            for pid in _stage_order(plan, stage):
                 r = reports[pid]
                 start = 0.0
                 tail = 0.0
@@ -461,6 +480,15 @@ class QueryEngine:
                     else:
                         start = max(start, end[dep])
                     tail = max(tail, end[dep])
+                # a filtered probe waited for the build's sealed filter
+                # — the build pipeline is not a dep, but it is on the
+                # probe's critical path (stage order processes filter
+                # producers first, so its end is already known)
+                if r.semijoin is not None and r.semijoin.get("applied"):
+                    bpid = sem_pid.get(r.semijoin.get("build"))
+                    if bpid is not None and bpid in end \
+                            and not reports[bpid].cache_hit:
+                        start = max(start, end[bpid])
                 r.sim_start_s = start
                 r.sim_end_s = max(start + r.sim_s, tail) \
                     if not r.cache_hit else start
@@ -576,6 +604,24 @@ class QueryEngine:
         if pipelined:
             self._pilot_scan(p, report, stats)
 
+        # Semi-join filter pushdown. Build side: instruct the fleet to
+        # hash its exchange keys into per-fragment Bloom words (sized
+        # here, after any pilot re-estimate, so every fragment — and
+        # every straggler duplicate — agrees on the word count). Probe
+        # side: resolve the build's sealed filter (bounded wait, runtime
+        # adopt/revoke) and inject it into every fragment spec so rows
+        # are killed before partitioning.
+        bloom_spec = None
+        if cfg.semijoin and p.params.bloom is not None:
+            from repro.kernels import bloom as bloomlib
+            capacity = max(int(p.params.bloom.get("est_distinct") or 1),
+                           int(p.params.est_out_rows), 1)
+            bloom_spec = {"bits": bloomlib.bloom_bits_for(capacity),
+                          "k": bloomlib.BLOOM_K,
+                          "mode": p.params.bloom["mode"]}
+        semijoin_spec = self._semijoin_filter(p, report, stats) \
+            if cfg.semijoin else None
+
         if p.partitioning.kind == "hash":
             report.exchange_strategy = p.partitioning.strategy
             report.est_exchange_requests = \
@@ -589,7 +635,8 @@ class QueryEngine:
         eff_op = apply_broadcast(p.op, p.params.broadcast_sources)
         specs = {
             f: self._fragment_spec(p, f, p.n_fragments, prefix, sources,
-                                   eff_op)
+                                   eff_op, bloom=bloom_spec,
+                                   semijoin=semijoin_spec)
             for f in range(p.n_fragments)
         }
 
@@ -883,7 +930,8 @@ class QueryEngine:
                    "producers": producers, "group": j, "n_groups": G,
                    "keys": list(part.keys), "n_dest": part.n_dest,
                    "combine": combine, "schema": p.output_schema,
-                   "tier": part.tier, **mop_extra},
+                   "tier": part.tier, "l0_tier": part.l0_tier,
+                   **mop_extra},
             "scan_units": [],
             "output": {"prefix": prefix, "partitioning": grid,
                        "schema": p.output_schema},
@@ -941,6 +989,11 @@ class QueryEngine:
         # supersede the producers' l0 intermediates in the manifest
         report.rows_out = mreport.rows_out
         report.partition_stats = mreport.partition_stats
+        if part.l0_tier:
+            # express-tier l0 intermediates are billed at-rest until
+            # deleted: the wave has drained them, so enforce the TTL
+            # now (object DELETEs are unbilled)
+            self.store.delete_prefix(f"{prefix}/l0/")
         return G
 
     def _record_calibration(self, p: Pipeline,
@@ -948,6 +1001,10 @@ class QueryEngine:
         """Persist the observed selectivity of a pure scan→filter chain
         (cross-query calibration; see repro.sql.calibration)."""
         if self.calibration is None or not p.scan_units:
+            return
+        if report.semijoin is not None and report.semijoin.get("applied"):
+            # a pushed semi-join filter killed rows below the scan —
+            # rows_out no longer reflects the predicate's selectivity
             return
         sig = scan_filter_signature(
             p.op["child"] if p.op.get("t") == "final" else p.op)
@@ -986,6 +1043,14 @@ class QueryEngine:
                 "partition_bytes": [d["bytes"] for d in ps],
                 "partition_write_s": [float(d.get("write_s", 0.0))
                                       for d in ps]}
+        if res.payload.get("bloom") is not None:
+            # semi-join filter shard: this producer's Bloom words plus
+            # its distinct-key sketch, streamed through the partial
+            # manifest so a probe can merge the sealed filter (and pilot
+            # the cost gate) without waiting for the complete entry
+            info["bloom"] = res.payload["bloom"]
+            info["distinct_kmv"] = [int(x) for x in kmv_merge(
+                [d["kmv"] for d in ps])] if ps else []
         n = None
         if spec["fragment"] >= spec["n_fragments"]:
             n = spec["fragment"] + 1    # reassignment split grew the fleet
@@ -1056,6 +1121,143 @@ class QueryEngine:
         report.adaptations = list(report.adaptations) + [a]
         self.observer.on_adaptation(self.query_id, p.pid, a)
 
+    # -- semi-join filter pushdown (probe side) -------------------------------
+    def _semijoin_filter(self, p: Pipeline, report: PipelineReport,
+                         stats: QueryStats) -> dict | None:
+        """Resolve an annotated probe pipeline's build-side Bloom filter
+        into the fragment-spec payload, or None to launch unfiltered.
+
+        Three gates run in order: a pilot peek at the build's *partial*
+        manifest re-decides the plan-time verdict from extrapolated
+        observed cardinality (an early revoke skips the wait entirely);
+        a bounded wait for the *sealed* filter — a partial filter is
+        never applied, missing producers would mean false negatives; and
+        a final re-gate on the sealed manifest's exact build figures.
+        Every verdict only mutates ``p.params.semijoin`` — the sem hash
+        folded the build side at plan time, so filtered and unfiltered
+        runs share one cache entry."""
+        sj = p.params.semijoin
+        if not sj:
+            return None
+        cfg = self.config
+        build_sem = sj["build"]
+
+        def record(a: dict | None) -> None:
+            if a:
+                report.adaptations = list(report.adaptations) + [a]
+                self.observer.on_adaptation(self.query_id, p.pid, a)
+
+        if cfg.pipelined and cfg.adaptive:
+            # pilot-K peek: the first landed build producers,
+            # extrapolated ×(n/k) — cheap enough to revoke a filter
+            # before paying the sealed-filter wait
+            for stream in ("l0", "partial"):
+                man = self.registry.partial_manifest(build_sem,
+                                                     stream=stream)
+                infos = list((man or {}).get("done", {}).values())
+                if not infos:
+                    continue
+                n = max(int(man.get("n_producers") or 0), len(infos), 1)
+                scale = n / len(infos)
+                rows = sum(i.get("rows", 0) for i in infos) * scale
+                sketches = [i["distinct_kmv"] for i in infos
+                            if i.get("distinct_kmv")]
+                distinct = int(kmv_estimate(kmv_merge(sketches)) * scale) \
+                    if sketches else None
+                record(self.reoptimizer.semijoin_decision(
+                    p, build_rows=rows, build_distinct=distinct))
+                break
+        if not sj["enabled"]:
+            report.semijoin = dict(sj, applied=False)
+            return None
+
+        words, build_rows, build_distinct = \
+            self._await_build_filter(build_sem)
+        if words is None:
+            report.semijoin = dict(sj, applied=False,
+                                   reason="filter unavailable")
+            return None
+        if cfg.adaptive and build_rows is not None:
+            record(self.reoptimizer.semijoin_decision(
+                p, build_rows=float(build_rows),
+                build_distinct=build_distinct))
+            if not sj["enabled"]:
+                report.semijoin = dict(sj, applied=False)
+                return None
+
+        from repro.kernels import bloom as bloomlib
+        n_words = len(words) // 4
+        wire = {"bits": 32 * n_words, "k": bloomlib.BLOOM_K,
+                "mode": sj["mode"], "words": words}
+        kept = sj["est_match"] + sj["fpr"] * (1.0 - sj["est_match"])
+        report.semijoin = dict(
+            sj, applied=True,
+            est_killed=int(sj["est_rows"] * max(0.0, 1.0 - kept)))
+        if not cfg.pipelined:
+            # barrier mode ran the build first in this same stage (see
+            # _stage_order), but the stage's sim window is max over its
+            # members — waiting for the filter made this probe serial
+            # behind the build, so charge the build's window here
+            b = next((r for r in stats.pipelines
+                      if r.sem_hash == build_sem and not r.cache_hit),
+                     None)
+            if b is not None:
+                report.sim_s += b.sim_s
+        return {"key": list(sj["key"]), "bits": wire["bits"],
+                "k": wire["k"], "mode": wire["mode"], "words": words}
+
+    def _await_build_filter(self, build_sem: str
+                            ) -> tuple[bytes | None, int | None,
+                                       int | None]:
+        """Merged Bloom words of a *sealed* build exchange, with the
+        exact observed build rows/distinct for the final re-gate.
+
+        Resolution order: the complete registry entry's published
+        ``semijoin_bloom`` (barrier mode; cached builds), else a sealed
+        partial stream every one of whose producer records carries a
+        filter shard (pipelined mode — the probe may assemble the
+        filter the moment the stream seals, slightly before the entry
+        publishes). Returns ``(None, None, None)`` on the bounded-wait
+        timeout or an aborted build — the probe then launches
+        unfiltered, which is always correct."""
+        deadline = time.time() + self.config.semijoin_wait_timeout_s
+        while True:
+            entry = self.registry.lookup(build_sem)
+            if entry is not None:
+                st = entry.get("stats") or {}
+                wire = st.get("semijoin_bloom")
+                if wire is None:
+                    return None, None, None
+                pd = st.get("partition_distinct")
+                return (wire["words"], st.get("rows_out"),
+                        int(sum(pd)) if pd else None)
+            for stream in ("l0", "partial"):
+                man = self.registry.partial_manifest(build_sem,
+                                                     stream=stream)
+                if man is None:
+                    continue
+                if man.get("aborted"):
+                    return None, None, None
+                if not man.get("complete"):
+                    continue
+                infos = list((man.get("done") or {}).values())
+                if not infos or not all(i.get("bloom") for i in infos):
+                    break       # sealed but unfiltered build
+                words = None
+                for i in infos:
+                    w = np.frombuffer(i["bloom"], np.uint32)
+                    words = w if words is None else words | w
+                sketches = [i["distinct_kmv"] for i in infos
+                            if i.get("distinct_kmv")]
+                distinct = int(kmv_estimate(kmv_merge(sketches))) \
+                    if sketches else None
+                rows = int(sum(i.get("rows", 0) for i in infos))
+                return words.tobytes(), rows, distinct
+            if time.time() >= deadline:
+                return None, None, None
+            self._check_cancel()
+            time.sleep(0.02)
+
     def _manifest_stats(self, report: PipelineReport) -> dict:
         """The exchange-manifest statistics published with a pipeline's
         registry entry: totals plus the per-partition (rows, bytes,
@@ -1076,6 +1278,10 @@ class QueryEngine:
             # bytes_out is what a consumer reads — the materialized
             # partitions, not (for multi-level) l0 intermediates too
             stats["bytes_out"] = int(sum(s["bytes"] for s in ps))
+        if report.semijoin_bloom is not None:
+            # the sealed merged filter: probes of cached builds (and
+            # barrier-mode probes) pick it up from the complete entry
+            stats["semijoin_bloom"] = report.semijoin_bloom
         return stats
 
     def _sim_schedule(self, runtimes: list[float]) -> list[float]:
@@ -1212,6 +1418,10 @@ class QueryEngine:
                         spec, tier_ops)
                     report.footer_cache_hits += s.get(
                         "footer_cache_hits", 0)
+                    report.semijoin_killed += s.get("semijoin_killed", 0)
+                    bw = res.payload.get("bloom")
+                    if bw is not None and spec.get("bloom"):
+                        self._accumulate_bloom(report, bw, spec["bloom"])
                     if s.get("kernel"):
                         report.kernel_fragments += 1
                     if s.get("pipelined"):
@@ -1232,6 +1442,22 @@ class QueryEngine:
             report.cost_cents += cost.total_cents
             stats.cost.merge(cost)
         return res
+
+    def _accumulate_bloom(self, report: PipelineReport, words: bytes,
+                          bloom_spec: dict) -> None:
+        """OR one build fragment's Bloom words into the pipeline's
+        merged filter (caller holds the metrics lock). Fragments share
+        one spec-time sizing, so a word-count mismatch can only come
+        from a foreign stale response — dropped defensively."""
+        cur = report.semijoin_bloom
+        if cur is None:
+            report.semijoin_bloom = {
+                "bits": 8 * len(words), "k": bloom_spec["k"],
+                "mode": bloom_spec["mode"], "words": words}
+        elif len(cur["words"]) == len(words):
+            merged = (np.frombuffer(cur["words"], np.uint32)
+                      | np.frombuffer(words, np.uint32))
+            cur["words"] = merged.tobytes()
 
     def _merge_partition_stats(self, report: PipelineReport,
                                ps: list | None) -> None:
@@ -1404,7 +1630,9 @@ class QueryEngine:
         }
 
     def _fragment_spec(self, p: Pipeline, f: int, n: int, prefix: str,
-                       sources: dict, op: dict | None = None) -> dict:
+                       sources: dict, op: dict | None = None, *,
+                       bloom: dict | None = None,
+                       semijoin: dict | None = None) -> dict:
         spec = {
             "query_id": p.sem_hash,
             "pipeline": p.pid,
@@ -1417,6 +1645,10 @@ class QueryEngine:
                        "schema": p.output_schema},
             "sources": sources,
         }
+        if bloom is not None:
+            spec["bloom"] = bloom
+        if semijoin is not None:
+            spec["semijoin"] = semijoin
         if p.params.partition_assignment is not None:
             spec["read_partitions"] = p.params.partition_assignment[f]
         if p.params.source_partitions:
@@ -1424,18 +1656,32 @@ class QueryEngine:
         return spec
 
 
+def _stage_order(plan: PhysicalPlan, stage: list[int]) -> list[int]:
+    """Same-stage execution order: pipelines that emit a semi-join
+    filter (build sides) run before their same-stage probes, so a
+    barrier-mode probe finds the sealed filter instead of waiting out
+    its timeout. Same-stage pipelines are mutually independent, so the
+    reorder never violates a dependency."""
+    return sorted(stage, key=lambda pid: (
+        plan.pipelines[pid].params.bloom is None, pid))
+
+
 def _exchange_requests(spec: dict, tier_ops: dict) -> int:
     """Observed producer-side exchange requests of one worker response:
-    PUTs on the exchange tier, plus (merge-wave fragments) the l0 reads
-    — the figure EXPLAIN ANALYZE compares against the strategy's
+    PUTs on the exchange tier (and, multilevel, the l0 tier the combined
+    intermediates were routed to), plus (merge-wave fragments) the l0
+    reads — the figure EXPLAIN ANALYZE compares against the strategy's
     estimate."""
     part = spec["output"]["partitioning"]
     if part.get("kind") != "hash":
         return 0
-    ops_ = tier_ops.get(part.get("tier", "s3-standard")) or {}
-    n = ops_.get("put", 0)
+    tier = part.get("tier", "s3-standard")
+    l0_tier = part.get("l0_tier") or spec["op"].get("l0_tier") or tier
+    n = (tier_ops.get(tier) or {}).get("put", 0)
+    if l0_tier != tier:
+        n += (tier_ops.get(l0_tier) or {}).get("put", 0)
     if spec["op"].get("t") == "merge_exchange":
-        n += ops_.get("get", 0)
+        n += (tier_ops.get(l0_tier) or {}).get("get", 0)
     return n
 
 
@@ -1502,6 +1748,10 @@ def _describe_adaptation(a: dict) -> str:
         return (f"exchange_restrategy {a['from']}→{a['to']} "
                 f"(est {a['est_requests_from']}→{a['est_requests_to']} "
                 f"reqs, {a['cents_from']:.4f}→{a['cents_to']:.4f}¢)")
+    if kind in ("semijoin_adopt", "semijoin_revoke"):
+        return (f"{kind} build_rows={a['build_rows']} "
+                f"match={a['match_fraction']:.4f} "
+                f"benefit={a['benefit_cents']:.4f}¢")
     return str(a)
 
 
@@ -1543,6 +1793,20 @@ def explain_analyze(plan: PhysicalPlan, stats: QueryStats) -> str:
                     f"    exchange: {r.exchange_strategy} · reqs "
                     f"est≈{r.est_exchange_requests} "
                     f"actual={r.exchange_requests}{wave}")
+            if r.semijoin is not None:
+                sj = r.semijoin
+                if sj.get("applied"):
+                    lines.append(
+                        f"    semijoin: pushed "
+                        f"est≈{sj.get('est_killed', 0)} "
+                        f"actual={r.semijoin_killed} rows killed · "
+                        f"build={sj['build'][:10]} · "
+                        f"fpr≈{sj.get('fpr', 0.0):.4f}")
+                else:
+                    lines.append(
+                        f"    semijoin: not pushed "
+                        f"({sj.get('reason', 'cost gate')}) · "
+                        f"build={sj['build'][:10]}")
             if r.pipelined:
                 pilot = f" · pilot-K={r.pilot_k}" if r.pilot_k else ""
                 lines.append(

@@ -324,6 +324,11 @@ class ResultRegistry:
         # may already be topping up from it; the abort/abandon path must
         # poison the stream and let a waiter re-run the pipeline
         self._kill_once("registry.publish_partial")
+        if "bloom" in info:
+            # chaos: owner dies right after landing a semi-join filter
+            # shard — a probe waiting on the sealed filter must see the
+            # abort (or its wait timeout) and fall back to unfiltered
+            self._kill_once("registry.publish_filter")
 
     def mark_all_submitted(self, sem_hash: str, n_producers: int, *,
                            stream: str = "partial") -> None:

@@ -47,6 +47,10 @@ def make_worker_handler(store: ObjectStore,
             # exchange-manifest statistics the adaptive re-optimizer
             # consumes at the next stage barrier
             "partition_stats": result.partition_stats,
+            # build-side semi-join filter shard (Bloom words) — the
+            # coordinator OR-merges these across the fleet and publishes
+            # the merged filter through the partial-manifest protocol
+            "bloom": result.bloom,
             "stats": {
                 "rows_in": stats.rows_in,
                 "rows_out": stats.rows_out,
@@ -63,6 +67,7 @@ def make_worker_handler(store: ObjectStore,
                 "first_input_s": stats.first_input_s,
                 "topups": stats.topups,
                 "overlap_saved_s": stats.overlap_saved_s,
+                "semijoin_killed": stats.semijoin_killed,
             },
         }
         return response, sim_runtime

@@ -144,11 +144,11 @@ class DirectStrategy(ExchangeStrategy):
 
 
 def _write_combined(store, result, schema, part, prefix, me, stats,
-                    subdir: str = ""):
+                    subdir: str = "", tier_override: str | None = None):
     """One combined object per producer: rows stably sorted by
     destination, row groups split at partition boundaries, ``__dest``
     stored so both zone maps and the merge wave can route by it."""
-    tier = part.get("tier", "s3-standard")
+    tier = tier_override or part.get("tier", "s3-standard")
     n_dest = part["n_dest"]
     h = ops.np_key_hash(result, list(part["keys"]))
     dest = (h % np.uint64(n_dest)).astype(np.int32)
@@ -211,8 +211,12 @@ class MultiLevelStrategy(ExchangeStrategy):
         return merge_group_count(producers) * n_dest
 
     def write(self, store, result, schema, part, prefix, me, stats):
+        # l0 intermediates are short-lived (read once by the merge wave,
+        # then deleted) — the cost model may route them to a hotter tier
+        # than the grid the consumers read
         return _write_combined(store, result, schema, part, prefix, me,
-                               stats, subdir="l0/")
+                               stats, subdir="l0/",
+                               tier_override=part.get("l0_tier"))
 
 
 STRATEGIES: dict[str, ExchangeStrategy] = {}
@@ -316,9 +320,11 @@ def execute_merge(store, spec: dict, footer_cache=None, cost_model=None):
     from repro.exec.fragment import FragmentResult, FragmentStats
     op = spec["op"]
     tier = op.get("tier", "s3-standard")
+    l0_tier = op.get("l0_tier") or tier
     stats = FragmentStats()
     view = store.with_tier(tier)
-    handler = InputHandler(view, footer_cache=footer_cache,
+    handler = InputHandler(store.with_tier(l0_tier),
+                           footer_cache=footer_cache,
                            cost_model=cost_model)
     schema = [ColumnSpec(s["name"], s["kind"], s["dtype"])
               for s in op["schema"]]
@@ -336,7 +342,7 @@ def execute_merge(store, spec: dict, footer_cache=None, cost_model=None):
             stats.topups += 1
         else:
             stats.first_input_s = st.sim_time_s
-        stats.account(tier, st, write=False)
+        stats.account(l0_tier, st, write=False)
         parts_by_g.update(zip(gids, parts))
 
     manifest_key = op.get("manifest_key")

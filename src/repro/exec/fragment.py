@@ -20,6 +20,7 @@ import numpy as np
 from repro.exec import exchange
 from repro.exec import lower
 from repro.exec import operators as ops
+from repro.kernels import bloom as bloomlib
 from repro.exec.batch import bucket_capacity, from_numpy, to_numpy
 from repro.exec.expr import expr_from_dict
 from repro.storage import pax
@@ -50,6 +51,9 @@ class FragmentStats:
     first_input_s: float = 0.0
     topups: int = 0
     overlap_saved_s: float = 0.0
+    # probe rows the semi-join Bloom filter killed before partitioning
+    # (exact: counted against the predicate-surviving stream)
+    semijoin_killed: int = 0
     # per-tier request/byte accounting for the cost model
     tier_ops: dict = dataclasses.field(default_factory=dict)
 
@@ -78,6 +82,10 @@ class FragmentResult:
     # sketch) — the worker's contribution to the exchange manifest that
     # the adaptive re-optimizer consumes at the next stage barrier.
     partition_stats: list[dict] = dataclasses.field(default_factory=list)
+    # serialized Bloom filter words over this fragment's join-key column
+    # (build side of an eligible repartition join; OR-merged and
+    # published by the coordinator)
+    bloom: bytes | None = None
 
 
 # -- jit program construction ---------------------------------------------------
@@ -139,6 +147,25 @@ def _build(op: dict, leaves: list[tuple[str, dict]]):
             cols, mask = child(blocks)
             return f(cols, mask)
         return run_agg
+    if t == "semijoin_probe":
+        # jnp fallback of the fused Bloom probe (exec.lower's
+        # ``bloom_filter`` arm): same hash family, same reserved
+        # ``__bloom_pass`` column, bit-for-bit. The filter words arrive
+        # through the runtime ``__bloom`` pseudo-leaf so the jitted
+        # program never closes over a query's filter contents.
+        child = _build(op["child"], leaves)
+        key, bits, k = op["key"], int(op["bits"]), int(op["k"])
+        leaves.append(("__bloom", {"t": "bloom_words"}))
+
+        def run_semijoin(blocks):
+            cols, mask = child(blocks)
+            words = blocks["__bloom"][0]["words"]
+            hit = bloomlib.bloom_probe_jnp(cols[key], words, bits=bits,
+                                           k=k) & mask
+            out = dict(cols)
+            out["__bloom_pass"] = hit.astype("int32")
+            return out, mask
+        return run_semijoin
     if t == "join":
         probe = _build(op["probe"], leaves)
         build = _build(op["build"], leaves)
@@ -390,12 +417,28 @@ def execute_fragment(store: ObjectStore, spec: dict,
                                           cost_model=cost_model)
         return handlers[tier]
 
-    fn, leaves, kernel, fn_key = _compiled(spec["op"])
+    # Semi-join filter pushdown: a probe-side spec may carry the build
+    # side's published Bloom filter. Kernel-eligible filters (single
+    # truncated-integer key) wrap the op tree for dispatch only — the
+    # wrapper joins the compiled-program cache key, never the semantic
+    # hash — so the membership test fuses into the scan program (Pallas
+    # kernel or jnp fallback); other key shapes kill on the host below.
+    op = spec["op"]
+    sj = spec.get("semijoin")
+    if sj is not None and sj.get("mode") == "u32" and len(sj["key"]) == 1 \
+            and op.get("t") in ("scan_table", "filter", "project"):
+        op = {"t": "semijoin_probe", "key": sj["key"][0],
+              "bits": int(sj["bits"]), "k": int(sj["k"]), "child": op}
+    fn, leaves, kernel, fn_key = _compiled(op)
     stats.kernel = kernel
 
     # 1. Load leaf inputs (host side, ranged + pruned + re-triggered reads).
     blocks = {}
     for leaf_id, leaf_op in leaves:
+        if leaf_op["t"] == "bloom_words":
+            words = np.frombuffer(sj["words"], dtype=np.uint32)
+            blocks[leaf_id] = ({"words": words}, np.ones((1,), bool))
+            continue
         if leaf_op["t"] == "scan_table":
             cols = _load_scan_table(handler_for(None), spec, leaf_op,
                                     stats)
@@ -416,6 +459,25 @@ def execute_fragment(store: ObjectStore, spec: dict,
     stats.compute_s += time.perf_counter() - t0
     from repro.exec.batch import Block
     result = to_numpy(Block(dict(out_cols), out_mask))
+
+    # 2b. Semi-join kill before partitioning: the fused program emitted a
+    # per-row Bloom verdict (``__bloom_pass``), or — for multi-column /
+    # non-integer keys — the host probes the filter directly. Either way
+    # the count is exact against the predicate-surviving stream, and the
+    # killed rows never reach the exchange write.
+    if "__bloom_pass" in result:
+        hit = result.pop("__bloom_pass") != 0
+        stats.semijoin_killed = int(hit.size - hit.sum())
+        if stats.semijoin_killed:
+            result = {c: v[hit] for c, v in result.items()}
+    elif sj is not None and all(c in result for c in sj["key"]):
+        filt = bloomlib.bloom_from_wire(sj)
+        ku = bloomlib.keys_u32(result, list(sj["key"]), filt["mode"])
+        hit = bloomlib.bloom_probe_np(ku, filt["words"], filt["bits"],
+                                      filt["k"])
+        stats.semijoin_killed = int(hit.size - hit.sum())
+        if stats.semijoin_killed:
+            result = {c: v[hit] for c, v in result.items()}
 
     # 3. Final-stage host ops (global sort / limit on the compacted result).
     if spec["op"]["t"] == "final":
@@ -460,4 +522,18 @@ def execute_fragment(store: ObjectStore, spec: dict,
         out_keys.append(key)
         part_stats.append({"rows": n_out, "bytes": st.bytes, "kmv": [],
                            "write_s": st.sim_time_s})
-    return FragmentResult(out_keys, stats, part_stats)
+
+    # 5. Build-side Bloom filter: fold this fragment's join-key column
+    # into fleet-uniform filter words (size fixed by the coordinator so
+    # per-fragment filters OR-merge). Emitted whenever the spec asks —
+    # even when the planner's cost gate said no — so the Reoptimizer can
+    # still adopt the filter at pilot-K time from observed cardinality.
+    bloom_payload = None
+    bl = spec.get("bloom")
+    if bl is not None and part["kind"] == "hash" \
+            and all(c in result for c in part["keys"]):
+        ku = bloomlib.keys_u32(result, list(part["keys"]), bl["mode"])
+        words = bloomlib.bloom_build(ku, int(bl["bits"]), int(bl["k"]))
+        bloom_payload = words.tobytes()
+    return FragmentResult(out_keys, stats, part_stats,
+                          bloom=bloom_payload)

@@ -68,6 +68,7 @@ import dataclasses
 import os
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -115,6 +116,28 @@ def disabled():
         set_enabled(prev)
 
 
+_interpret_gate = os.environ.get(
+    "SKYRISE_INTERPRET_COST_GATE", "1") not in ("0", "false")
+
+
+def set_interpret_gate(flag: bool) -> bool:
+    """Toggle the interpret-mode cost gate; returns the previous setting."""
+    global _interpret_gate
+    prev, _interpret_gate = _interpret_gate, bool(flag)
+    return prev
+
+
+@contextlib.contextmanager
+def interpret_gate_disabled():
+    """Match compute-bound resident kernels even on interpreted backends
+    (kernel parity tests exercise them regardless of dispatch policy)."""
+    prev = set_interpret_gate(False)
+    try:
+        yield
+    finally:
+        set_interpret_gate(prev)
+
+
 @dataclasses.dataclass
 class Match:
     kernel: str                  # kernel name (see module docstring)
@@ -134,6 +157,9 @@ class Match:
     # topk only:
     sort_keys: list = dataclasses.field(default_factory=list)
     limit: int | None = None
+    # bloom_filter only (probe_key doubles as the bloom key column):
+    bloom_bits: int | None = None
+    bloom_k: int | None = None
 
 
 @dataclasses.dataclass
@@ -185,7 +211,13 @@ def match_fragment_ex(op: dict) -> tuple[Match | None, str | None]:
         return _match_final(op)
     if t in ("partial_agg", "merge_agg"):
         return _match_agg(op)
+    if t == "semijoin_probe":
+        return _match_semijoin(op)
     return None, f"no fusible root (op={t})"
+
+
+def _interpret_backend() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def _match_final(op: dict):
@@ -206,8 +238,36 @@ def _match_final(op: dict):
         return None, f"columns {missing} absent from scan"
     tiling = roofline.resident_sort_tiling(
         "topk", n_arrays=_leaf_width(child, len(sort_keys) + 4) + 2)
+    if _interpret_gate and _interpret_backend() \
+            and roofline.interpret_prefers_jnp(tiling):
+        return None, "interpret_cost"
     return Match("topk", child, preds, [], [], [], tiling,
                  sort_keys=sort_keys, limit=int(limit)), None
+
+
+def _match_semijoin(op: dict):
+    """``semijoin_probe`` wrapper (attached by the fragment driver when a
+    probe-side spec carries a kernel-eligible Bloom filter): fuse the
+    scan chain's predicate with the in-kernel Bloom membership test. The
+    filter words arrive as the runtime ``__bloom`` pseudo-leaf — never
+    baked into the trace, so the compiled program is shared across
+    queries and across filter contents of the same capacity bucket."""
+    key = op["key"]
+    preds, child = _peel_filters(op["child"])
+    if child.get("t") not in _LEAF_OPS:
+        return None, (f"semijoin probe over non-scan chain "
+                      f"(op={child.get('t')})")
+    needed: set[str] = {key}
+    for p in preds:
+        _expr_cols(p, needed)
+    if child["t"] == "scan_table" and not needed <= set(child["columns"]):
+        missing = sorted(needed - set(child["columns"]))
+        return None, f"columns {missing} absent from scan"
+    tiling = roofline.bloom_probe_tiling(
+        n_cols=_leaf_width(child, len(needed)), n_bits=int(op["bits"]))
+    return Match("bloom_filter", child, preds, [], [], [], tiling,
+                 probe_key=key, bloom_bits=int(op["bits"]),
+                 bloom_k=int(op["k"])), None
 
 
 def _match_agg(op: dict):
@@ -236,6 +296,9 @@ def _match_agg(op: dict):
             return None, f"columns {missing} absent from scan"
         tiling = roofline.resident_sort_tiling(
             "sort_agg", n_arrays=2 + len(group_cols) + len(aggs))
+        if _interpret_gate and _interpret_backend() \
+                and roofline.interpret_prefers_jnp(tiling):
+            return None, "interpret_cost"
         return Match("sort_agg", child, preds, group_cols, sizes, aggs,
                      tiling), None
     if strategy != "direct":
@@ -350,7 +413,12 @@ def kernel_info(op: dict) -> dict:
     """
     m, miss = match_fragment_ex(op)
     if m is None and op.get("t") == "final":
-        return kernel_info(op["child"])
+        info = kernel_info(op["child"])
+        if info["kernel"] is None:
+            # neither arm matched: the final's own reason names the
+            # blocker (the child's is just "no fusible root")
+            info["miss"] = miss
+        return info
     if m is None:
         return {"kernel": None, "miss": miss, "tiling": None}
     return {"kernel": m.kernel, "miss": None,
@@ -391,6 +459,8 @@ def lower_fragment(op: dict) -> Lowered | None:
         return _lower_join_probe(op, m)
     if m.kernel == "sort_agg":
         return _lower_sort_agg(op, m)
+    if m.kernel == "bloom_filter":
+        return _lower_bloom_filter(m)
     return _lower_direct_agg(m)
 
 
@@ -529,6 +599,39 @@ def _lower_join_probe(op: dict, m: Match) -> Lowered:
             out[name] = res[:, j].astype(jnp.float64)
         return out, res[:, -1] > 0
     return Lowered(fn, leaves, m.kernel, m.tiling)
+
+
+def _lower_bloom_filter(m: Match) -> Lowered:
+    """Probe-side scan chain with an in-kernel Bloom membership test.
+
+    The program keeps the generic mask semantics (predicate-surviving
+    rows stay valid) and emits the Bloom verdict as the reserved
+    ``__bloom_pass`` column, so the fragment driver can count killed
+    rows exactly and compact before partitioning. The jnp fallback
+    (``exec.fragment._build``'s ``semijoin_probe`` arm) produces the
+    same column bit-for-bit — both paths share one hash family."""
+    from repro.kernels.bloom import bloom_probe_jnp
+    pred = _compile_pred(m.preds)
+    key, bits, k = m.probe_key, m.bloom_bits, m.bloom_k
+    block = m.tiling.block_rows
+    leaf_id = "in0"
+
+    def fn(blocks):
+        cols, mask = blocks[leaf_id]
+        words = blocks["__bloom"][0]["words"]
+        m2 = mask if pred is None else mask & pred(cols)
+        if int(mask.shape[0]) == 0:
+            hit = bloom_probe_jnp(cols[key], words, bits=bits, k=k) & m2
+        else:
+            hit = kops.fused_bloom_filter(
+                {key: cols[key]}, m2, pred=None, key=key, words=words,
+                bits=bits, k=k, block=block)
+        out = dict(cols)
+        out["__bloom_pass"] = hit.astype(jnp.int32)
+        return out, m2
+    return Lowered(fn, [(leaf_id, m.leaf),
+                        ("__bloom", {"t": "bloom_words"})],
+                   "bloom_filter", m.tiling)
 
 
 def _lower_topk(m: Match) -> Lowered:

@@ -12,6 +12,7 @@ from functools import partial
 
 import jax
 
+from repro.kernels import bloom as _bloom
 from repro.kernels import filter_agg as _fa
 from repro.kernels import flash_attention as _flash
 from repro.kernels import groupby_onehot as _go
@@ -100,6 +101,13 @@ def fused_sort_agg(columns: dict, mask, *, group_cols, pred, aggs):
     return _sa.fused_sort_agg(columns, mask, group_cols=group_cols,
                               pred=pred, aggs=aggs,
                               interpret=_interpret())
+
+
+def fused_bloom_filter(columns: dict, mask, *, pred, key: str, words,
+                       bits: int, k: int, block: int):
+    return _bloom.fused_bloom_filter(
+        columns, mask, pred=pred, key=key, words=words, bits=bits, k=k,
+        block=block, interpret=_interpret())
 
 
 def fused_topk(columns: dict, mask, *, pred, sort_keys, limit: int):

@@ -54,6 +54,11 @@ class PlannerConfig:
     # ("direct" | "combining" | "multilevel"); None → the cost model
     # picks per exchange via ``CostModel.exchange_cost``.
     exchange_strategy: str | None = None
+    # Annotate repartition joins for semi-join filter pushdown (the
+    # build side publishes a Bloom filter over the join key; eligible
+    # probe exchanges apply it before partitioning when
+    # ``CostModel.semijoin_benefit`` projects a saving).
+    semijoin: bool = True
 
 
 @dataclasses.dataclass
@@ -66,16 +71,21 @@ class Partitioning:
     # materialized layout consumers dispatch on is recorded in the
     # registry entry at publish time ("layout": grid | combined).
     strategy: str = "direct"
+    # Multilevel only: storage tier of the short-lived l0 intermediates
+    # (producer spill before the merge wave). None → same as ``tier``;
+    # ``CostModel.l0_tier_choice`` routes them to the express tier when
+    # cheaper, and the engine deletes the l0 prefix once the wave lands.
+    l0_tier: str | None = None
 
     def to_dict(self):
         return {"kind": self.kind, "keys": list(self.keys),
                 "n_dest": self.n_dest, "tier": self.tier,
-                "strategy": self.strategy}
+                "strategy": self.strategy, "l0_tier": self.l0_tier}
 
     @classmethod
     def from_dict(cls, d):
         return cls(d["kind"], tuple(d["keys"]), d["n_dest"], d["tier"],
-                   d.get("strategy", "direct"))
+                   d.get("strategy", "direct"), d.get("l0_tier"))
 
 
 @dataclasses.dataclass
@@ -111,6 +121,17 @@ class ExecutionParams:
     # estimated producer-side storage requests of this pipeline's output
     # exchange under the chosen strategy (EXPLAIN ANALYZE est vs actual)
     est_exchange_requests: int = 0
+    # Semi-join filter pushdown (probe side of an annotated repartition
+    # join): the build pipeline's sem hash, key columns, key mode, the
+    # cost gate's verdict and estimates. The Reoptimizer may flip
+    # ``enabled`` at pilot-K time from the observed build cardinality;
+    # the sem hash already folds the build side, so filtered and
+    # unfiltered runs share one cache entry.
+    semijoin: dict | None = None
+    # Build side of the same join: instructs the fleet to construct a
+    # Bloom filter over its exchange keys and publish the merged words
+    # through the partial-manifest protocol.
+    bloom: dict | None = None
 
 
 @dataclasses.dataclass
@@ -405,6 +426,9 @@ class PhysicalPlanner:
         strat = get_strategy(cost.strategy)
         part = Partitioning("hash", tuple(keys), n_dest, cost.tier,
                             cost.strategy)
+        if cost.strategy == "multilevel":
+            part.l0_tier = self.cost_model.l0_tier_choice(
+                producers, nbytes, base_tier=cost.tier)
         return part, strat.producer_requests(producers, n_dest)
 
     def _new_pid(self) -> int:
@@ -671,13 +695,46 @@ class PhysicalPlanner:
                      max(len(units), 1)) if units else 1
         ppart, pxreq = self._pick_exchange(pfrags, (node.left_key,),
                                            n_dest, prb)
+        # Semi-join filter pushdown: when the build side's key admits a
+        # side-consistent hash (dictionary codes don't — each side owns
+        # its own code space), annotate the probe exchange with the
+        # build's filter and fold the build identity into the probe sem
+        # hash. The fold is unconditional for annotated joins — even if
+        # the cost gate says no — so gate-on, gate-off, and runtime-
+        # adopted runs share one cache entry, and a filtered probe
+        # exchange can never be consumed by a query joining a different
+        # build side. ``enabled`` is only the plan-time verdict; the
+        # Reoptimizer revisits it at pilot-K time.
+        sj = None
+        if self.config.semijoin:
+            sj_mode = _semijoin_mode(node, self.catalog)
+            if sj_mode is not None:
+                base = self._base_rows(node.right)
+                match = min(1.0, brr / base) if base > 0 else 1.0
+                distinct = max(int(brr), 1)
+                ben = self.cost_model.semijoin_benefit(
+                    producers=pfrags, n_dest=n_dest,
+                    probe_bytes=max(prb, 0.0), match_fraction=match,
+                    build_distinct=distinct, strategy=ppart.strategy,
+                    tier=ppart.tier)
+                sj = {"build": build_sem, "key": [node.left_key],
+                      "mode": sj_mode,
+                      "enabled": bool(ben["benefit_cents"] > 0),
+                      "est_match": match, "est_distinct": distinct,
+                      "est_rows": int(prr), "base_rows": base,
+                      "n_dest": n_dest,
+                      "benefit_cents": ben["benefit_cents"],
+                      "kept_fraction": ben["kept_fraction"],
+                      "fpr": ben["fpr"]}
+                probe_sem = _h(("semijoin", probe_sem, build_sem))
         ppid = self._new_pid()
         self.pipelines[ppid] = Pipeline(
             ppid, probe_sem, probe_op, probe_deps,
             ExecutionParams(
                 pfrags, ppart,
                 est_in_bytes=in_bytes, est_out_rows=int(prr),
-                est_out_bytes=int(prb), est_exchange_requests=pxreq),
+                est_out_bytes=int(prb), est_exchange_requests=pxreq,
+                semijoin=sj),
             probe_schema, units)
         bpart, bxreq = self._pick_exchange(bfrags, (node.right_key,),
                                            n_dest, brb)
@@ -687,7 +744,10 @@ class PhysicalPlanner:
             ExecutionParams(
                 bfrags, bpart,
                 est_in_bytes=bbytes, est_out_rows=int(brr),
-                est_out_bytes=int(brb), est_exchange_requests=bxreq),
+                est_out_bytes=int(brb), est_exchange_requests=bxreq,
+                bloom=({"mode": sj["mode"],
+                        "est_distinct": sj["est_distinct"]}
+                       if sj else None)),
             build_schema, bunits)
         join_op = {"t": "join",
                    "probe": {"t": "scan_exchange", "source": probe_sem,
@@ -755,6 +815,29 @@ def _column_type(node: LNode, col: str, catalog: Catalog):
                 return ("num", "<i8" if fn == "count" else "<f8", None)
         return None
     raise TypeError(node)
+
+
+def _semijoin_mode(node: LJoin, catalog: Catalog) -> str | None:
+    """Key-hash mode for a semi-join filter on ``node``'s join key, or
+    None if the key cannot be hashed consistently on both sides.
+
+    Dictionary-encoded keys are ineligible: each side assigns its own
+    code space, so hashing codes risks false *negatives* — the one
+    failure mode a semi-join filter must never have. ``u32`` (truncating
+    cast, kernel-eligible) needs integer keys on both sides; any other
+    numeric pair falls back to the 64-bit column hash.
+    """
+    lt = _column_type(node.left, node.left_key, catalog)
+    rt = _column_type(node.right, node.right_key, catalog)
+    if not lt or not rt or lt[0] != "num" or rt[0] != "num":
+        return None
+
+    def _is_int(dtype: str) -> bool:
+        return "i" in dtype or "u" in dtype
+
+    if _is_int(lt[1]) and _is_int(rt[1]):
+        return "u32"
+    return "hash64"
 
 
 def _output_schema_of(node: LNode, catalog: Catalog) -> list[dict]:

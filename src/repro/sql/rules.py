@@ -8,6 +8,8 @@ is unnecessary for the supported grammar.
 
 from __future__ import annotations
 
+import dataclasses
+
 from repro.sql import ast
 from repro.sql.logical import (LAggregate, LFilter, LJoin, LLimit, LNode,
                                LProject, LScan, LSort)
@@ -52,6 +54,25 @@ def _ordered_columns_of(node: LNode) -> list[str]:
 
 # -- rule: predicate pushdown -------------------------------------------------
 
+def _subst_cols(e: ast.Expr, mapping: dict[str, str]) -> ast.Expr:
+    """Rewrite column references through a rename map (frozen dataclass
+    expressions are rebuilt bottom-up)."""
+    if isinstance(e, ast.Col):
+        return ast.Col(mapping.get(e.name, e.name))
+    if not e.children():
+        return e
+    kw = {}
+    for f in dataclasses.fields(e):
+        v = getattr(e, f.name)
+        if isinstance(v, ast.Expr):
+            kw[f.name] = _subst_cols(v, mapping)
+        elif isinstance(v, tuple) and v and isinstance(v[0], ast.Expr):
+            kw[f.name] = tuple(_subst_cols(x, mapping) for x in v)
+        else:
+            kw[f.name] = v
+    return type(e)(**kw)
+
+
 def push_filters(node: LNode) -> LNode:
     if isinstance(node, LFilter):
         child = push_filters(node.child)
@@ -79,6 +100,27 @@ def push_filters(node: LNode) -> LNode:
             if stay:
                 out = LFilter(out, ast.make_and(stay))
             return out
+        if isinstance(child, LProject):
+            # Push terms below pure column-rename projections: per-row
+            # renames create/delete no rows, so the filter commutes once
+            # its column references are mapped to pre-projection names.
+            # This exposes build-side selectivity to the scan (zone-map
+            # pruning and row estimates feeding the semi-join cost gate).
+            rename = {n: e.name for n, e in child.exprs
+                      if isinstance(e, ast.Col)}
+            down, stay = [], []
+            for t in terms:
+                if set(ast.collect_columns(t)) <= set(rename):
+                    down.append(_subst_cols(t, rename))
+                else:
+                    stay.append(t)
+            if down:
+                inner = push_filters(
+                    LFilter(child.child, ast.make_and(down)))
+                out = LProject(inner, child.exprs)
+                if stay:
+                    return LFilter(out, ast.make_and(stay))
+                return out
         if isinstance(child, LFilter):
             merged = ast.make_and(ast.conjuncts(child.pred) + terms)
             return push_filters(LFilter(child.child, merged))

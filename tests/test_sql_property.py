@@ -106,12 +106,16 @@ def queries(draw):
 @settings(max_examples=25, deadline=None)
 @given(sql=queries(), seed=st.integers(0, 3),
        pipelined=st.booleans(), fused=st.booleans(),
+       semijoin=st.sampled_from(["off", "auto", "forced"]),
        strategy=st.sampled_from(["direct", "combining", "multilevel"]))
-def test_engine_matches_oracle(sql, seed, pipelined, fused, strategy):
+def test_engine_matches_oracle(sql, seed, pipelined, fused, semijoin,
+                               strategy):
     """Random queries × {barrier, pipelined} × every shuffle strategy ×
-    {fused kernels, generic jnp} must all agree with the numpy oracle —
-    barrier-free admission, incremental top-up reads, and the kernel
-    dispatch layer are invisible to query results."""
+    {fused kernels, generic jnp} × {no filters, cost-gated filters,
+    force-pushed filters} must all agree with the numpy oracle —
+    barrier-free admission, incremental top-up reads, the kernel
+    dispatch layer, and semi-join filter pushdown are invisible to
+    query results."""
     from repro.exec import lower
     store, catalog, tables = _make_db(900, 40, seed)
     plan, _ = Binder(catalog).bind(parse(sql))
@@ -120,14 +124,28 @@ def test_engine_matches_oracle(sql, seed, pipelined, fused, strategy):
         store, catalog, platform=FaasPlatform(seed=seed),
         config=CoordinatorConfig(
             pipelined=pipelined,
+            # "forced" overrides the cost gate, which would otherwise
+            # always decline at this scale; adaptive off so the pilot-K
+            # re-gate cannot un-force it before the probe launches
+            adaptive=semijoin != "forced",
             planner=PlannerConfig(
-                bytes_per_worker=3_000, broadcast_threshold_bytes=2_000,
+                semijoin=semijoin != "off",
+                bytes_per_worker=3_000,
+                # a broadcast join has no probe exchange to filter —
+                # forced mode drives the dim through a repartition join
+                broadcast_threshold_bytes=1 if semijoin == "forced"
+                else 2_000,
                 exchange_partitions=2, exchange_strategy=strategy)))
+    pplan = coord.plan_sql(sql)
+    if semijoin == "forced":
+        for p in pplan.pipelines.values():
+            if p.params.semijoin:
+                p.params.semijoin["enabled"] = True
     if fused:
-        got = coord.execute_sql(sql).fetch(store)
+        got = coord.execute_plan(pplan).fetch(store)
     else:
         with lower.disabled():
-            got = coord.execute_sql(sql).fetch(store)
+            got = coord.execute_plan(pplan).fetch(store)
     n_want = len(next(iter(want.values()))) if want else 0
     n_got = len(next(iter(got.values()))) if got else 0
     # empty aggregates: a scalar agg over zero rows yields one masked row
